@@ -1,0 +1,125 @@
+"""Paper Table 4 — FKE ablation under the *base* (512+128) and *long*
+(1024+512) scenarios.
+
+Row mapping (DESIGN.md §2):
+  "ONNX Model Conversion"   -> node-by-node eager dispatch (each op hits the
+                               runtime separately — the ONNX-runtime-style
+                               unspecialized execution), materialized-mask
+                               attention
+  "TensorRT API Impl."      -> one AOT-compiled XLA graph (whole-graph fusion,
+                               the hand-built-network analogue)
+  "+ Kernel Fusion"         -> the Pallas mask-aware flash-attention +
+                               fused-FFN kernels.  On this CPU container the
+                               kernels run in interpret mode (Python), so the
+                               wall-clock row is NOT meaningful; we report the
+                               roofline-modeled gain from mask-aware block
+                               skipping instead (validated for correctness in
+                               tests/test_kernels.py).
+
+Throughput is user-item pairs per second, as in the paper.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_climber, timeit
+from repro.core import sumi
+from repro.core.climber import climber_forward
+
+SCENARIOS = {"base": (512, 128), "long": (1024, 512)}
+BATCH = 1      # SUMI: one user per request
+
+
+def _batch(cfg, n, m, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return {
+        "history": jax.random.randint(ks[0], (BATCH, n), 0, cfg.vocab_size),
+        "candidates": jax.random.randint(ks[1], (BATCH, m), 0, cfg.vocab_size),
+        "side": jax.random.normal(ks[2], (BATCH, 12)),
+    }
+
+
+def _aot(fn, batch):
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          batch)
+    return jax.jit(fn).lower(shapes).compile()
+
+
+def mask_aware_speedup(n, m, n_blocks=2):
+    """Attention-FLOP ratio dense/SUMI-skipped (the paper's mask-aware gain).
+
+    Dense scores: S^2 per block (S = n/N_b + M).  Mask-aware kernel: history
+    causal (~h^2/2) + candidates x (history + self)."""
+    h = n // n_blocks
+    s = h + m
+    dense = s * s
+    skipped = h * h / 2 + m * (h + 1)
+    return dense / skipped
+
+
+def run_scenario(name, n, m):
+    cfg, bundle, params = make_climber(d_model=128, layers=2, blocks=2)
+    batch = _batch(cfg, n, m)
+    pairs = m  # user-item pairs per request
+
+    # --- row 1: "ONNX conversion": node-by-node eager dispatch with
+    # materialized-mask attention (runtime interprets the graph op by op)
+    def onnx_like(b):
+        return climber_forward(params, b, cfg, impl="reference")
+
+    t_onnx = timeit(onnx_like, batch, warmup=1, iters=3)
+
+    # --- row 2: "TensorRT API": ONE AOT-compiled fused graph
+    compiled = _aot(onnx_like, batch)
+    t_trt = timeit(compiled, batch, warmup=2, iters=6)
+
+    # --- row 3: "+ kernel fusion": roofline-modeled from the mask-aware
+    # skipping factor applied to the attention share of row 2
+    # attention share of total flops:
+    total_fl = sumi.flops_per_request(n, m, 2, 2, cfg.d_model, cfg.d_ff)
+    hsub = n // 2
+    s_blk = hsub + m
+    attn_fl = 2 * 2 * 2 * 2 * s_blk * s_blk * cfg.d_model  # blocks*layers*qk,pv
+    attn_share = min(0.9, attn_fl / total_fl)
+    speed = mask_aware_speedup(n, m)
+    t_fused_model = t_trt * ((1 - attn_share) + attn_share / speed)
+
+    return {
+        "scenario": f"{name} ({n}+{m})",
+        "rows": [
+            ("ONNX Model Conversion", t_onnx, pairs / t_onnx),
+            ("TensorRT API Impl.", t_trt, pairs / t_trt),
+            ("+ Kernel Fusion (modeled)", t_fused_model, pairs / t_fused_model),
+        ],
+        "mask_aware_speedup": speed,
+        "attn_share": attn_share,
+    }
+
+
+def main(csv=True):
+    print("\n=== Table 4 analogue: FKE ablation ===")
+    for name, (n, m) in SCENARIOS.items():
+        res = run_scenario(name, n, m)
+        print(f"\n--- scenario {res['scenario']} "
+              f"(mask-aware attention skip x{res['mask_aware_speedup']:.2f}, "
+              f"attn share {res['attn_share']:.2f}) ---")
+        print(f"{'engine build':<30}{'latency ms':>12}{'pairs/s':>12}")
+        base = res["rows"][0][1]
+        for rname, t, tput in res["rows"]:
+            print(f"{rname:<30}{t*1e3:>12.2f}{tput:>12.0f}  "
+                  f"(x{base/t:.2f} vs ONNX)")
+        if csv:
+            for rname, t, tput in res["rows"]:
+                print(f"fke/{name}/{rname},{t*1e6:.1f},tput={tput:.0f}")
+    print("\nNOTE: '+ Kernel Fusion' wall-clock is roofline-modeled — Pallas "
+          "kernels execute in interpret mode on CPU; correctness is asserted "
+          "against ref.py oracles in tests/test_kernels.py, and the TPU-side "
+          "gain comes from mask-aware KV-block skipping (see DESIGN.md).")
+
+
+if __name__ == "__main__":
+    main()

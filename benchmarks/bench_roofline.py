@@ -1,0 +1,60 @@
+"""Roofline table from dry-run artifacts (results/dryrun/*.json).
+
+One row per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_all(baselines_only=True):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if baselines_only and \
+                r.get("tag") != f"{r.get('mesh')}_{r.get('arch')}_{r.get('shape')}":
+            continue
+        recs.append(r)
+    return recs
+
+
+def main(csv=True, mesh_filter="pod16x16"):
+    recs = load_all()
+    if not recs:
+        print("no dry-run results found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    print(f"\n=== Roofline table ({mesh_filter}, seconds per step) ===")
+    print(f"{'arch':<27}{'shape':<13}{'compute':>9}{'mem_est':>9}"
+          f"{'collective':>11}{'dominant':>11}{'useful':>7}")
+    for r in recs:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:<27}{r['shape']:<13}{'skip: ' + r['reason'][:45]}")
+            continue
+        rl = r["roofline"]
+        print(f"{r['arch']:<27}{r['shape']:<13}"
+              f"{float(rl['compute_s']):>9.4f}{float(rl['memory_s_est']):>9.4f}"
+              f"{float(rl['collective_s']):>11.4f}{rl['dominant']:>11}"
+              f"{float(rl['useful_ratio']):>7.2f}")
+        if csv:
+            print(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']},"
+                  f"{float(rl['compute_s'])*1e6:.1f},"
+                  f"dom={rl['dominant']};useful={float(rl['useful_ratio']):.2f};"
+                  f"coll_s={float(rl['collective_s']):.4f}")
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skipped")
+    print(f"\n{ok} compiled, {sk} skipped (sub-quadratic rule), "
+          f"{len(recs)} total records")
+
+
+if __name__ == "__main__":
+    main()

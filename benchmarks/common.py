@@ -1,0 +1,42 @@
+"""Shared benchmark utilities."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.types import ClimberConfig
+
+
+def bench_climber_cfg(d_model=128, layers=2, blocks=2):
+    """CPU-feasible Climber with the paper's structure (blocks/SUMI/head)."""
+    return dataclasses.replace(
+        get_config("climber"), vocab_size=50_000, d_model=d_model,
+        d_ff=4 * d_model, n_heads=4, n_kv_heads=4, head_dim=d_model // 4,
+        climber=ClimberConfig(num_blocks=blocks, layers_per_block=layers))
+
+
+def make_climber(d_model=128, layers=2, blocks=2, seed=0):
+    cfg = bench_climber_cfg(d_model, layers, blocks)
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(seed))
+    return cfg, bundle, params
+
+
+def timeit(fn, *args, warmup=2, iters=8):
+    """Median wall time (s) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

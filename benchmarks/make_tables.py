@@ -1,0 +1,108 @@
+"""Emit the EXPERIMENTS.md markdown tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+ARCH_ORDER = ["h2o-danube-3-4b", "llava-next-mistral-7b", "rwkv6-7b",
+              "seamless-m4t-large-v2", "qwen2-72b", "qwen1.5-32b",
+              "kimi-k2-1t-a32b", "gemma3-12b", "jamba-v0.1-52b",
+              "llama4-maverick-400b-a17b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh):
+    recs = {}
+    for path in glob.glob(os.path.join(RESULTS_DIR, f"{mesh}_*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag") != f"{mesh}_{r['arch']}_{r['shape']}":
+            continue   # skip §Perf-tagged variants; baselines only
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x):
+    x = float(x)
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    x = float(x)
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(mesh):
+    recs = load(mesh)
+    print(f"\n### Dry-run ({mesh})\n")
+    print("| arch | shape | status | compile | args/device | temp/device | HLO flops | collective bytes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | MISSING | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | skip (full-attention, sub-quadratic "
+                      f"rule) | | | | | |")
+                continue
+            m = r["memory_analysis"]
+            rl = r["roofline"]
+            chips = r["chips"]
+            print(f"| {a} | {s} | ok | {r['compile_s']}s | "
+                  f"{fmt_b(m.get('argument_size_in_bytes', 0)/1)} | "
+                  f"{fmt_b(m.get('temp_size_in_bytes', 0))} | "
+                  f"{float(rl['hlo_flops']):.2e} | "
+                  f"{fmt_b(float(rl['collective_bytes']))} |")
+
+
+def roofline_table(mesh):
+    recs = load(mesh)
+    print(f"\n### Roofline ({mesh})\n")
+    print("| arch | shape | compute | memory(est) | memory(xla-UB) | "
+          "collective | dominant | MODEL/HLO flops | bottleneck note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None or r["status"] == "skipped":
+                continue
+            rl = r["roofline"]
+            print(f"| {a} | {s} | {fmt_s(rl['compute_s'])} | "
+                  f"{fmt_s(rl['memory_s_est'])} | {fmt_s(rl['memory_s'])} | "
+                  f"{fmt_s(rl['collective_s'])} | {rl['dominant']} | "
+                  f"{float(rl['useful_ratio']):.2f} | |")
+
+
+def collective_breakdown(mesh, arch, shape):
+    recs = load(mesh)
+    r = recs.get((arch, shape))
+    if not r or r["status"] != "ok":
+        return
+    det = r["roofline"].get("collective_detail") or {}
+    print(f"\n{arch} x {shape} ({mesh}) collective breakdown: " + ", ".join(
+        f"{k}={fmt_b(float(v)*r['chips'])}" for k, v in det.items()
+        if k != 'total' and float(v) > 0))
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        dryrun_table("pod16x16")
+        dryrun_table("pod2x16x16")
+    if which in ("all", "roofline"):
+        roofline_table("pod16x16")
+    if which == "coll":
+        collective_breakdown("pod16x16", sys.argv[2], sys.argv[3])

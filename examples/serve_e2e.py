@@ -1,0 +1,80 @@
+"""End-to-end driver (the paper's kind: SERVING).
+
+Train a small Climber on synthetic interaction data with planted
+preferences, then stand up the full FLAME pipeline — PDA feature cache ->
+DSO bucket routing over AOT executors -> SUMI-masked model — and serve a
+mixed-traffic workload with batched concurrent requests.  Reports the
+paper's metric set (throughput in user-item pairs/s, mean/p99 latency,
+cache stats) and verifies the served scores track the planted preferences.
+
+    PYTHONPATH=src python examples/serve_e2e.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import GRInteractionDataset, make_batch_iterator
+from repro.models import build_model
+from repro.serving import FlameEngine
+from repro.serving.scheduler import TrafficConfig, generate_traffic, run_workload
+from repro.training.loop import train
+from repro.training.optimizer import AdamWConfig
+from repro.types import ClimberConfig
+
+N_ITEMS = 20_000
+HISTORY = 64
+
+
+def main():
+    # ---- 1. train ----
+    cfg = dataclasses.replace(
+        get_config("climber"), vocab_size=N_ITEMS, d_model=96, d_ff=384,
+        n_heads=4, n_kv_heads=4, head_dim=24,
+        climber=ClimberConfig(num_blocks=2, layers_per_block=2))
+    bundle = build_model(cfg)
+    ds = GRInteractionDataset(n_items=N_ITEMS, n_users=2_000, seed=0)
+    it = make_batch_iterator(ds, 16, n_history=HISTORY, n_candidates=8)
+    print("[1/3] training climber on synthetic interactions...")
+    params, _, hist = train(bundle, it, 60,
+                            AdamWConfig(lr=3e-3, warmup_steps=5),
+                            log_every=20, impl="reference",
+                            callback=lambda m: print(
+                                f"    step {m['step']:>3} loss {m['loss']:.4f}"))
+
+    # ---- 2. serve through the full FLAME pipeline ----
+    print("[2/3] building FLAME engine (PDA + DSO + AOT executors)...")
+    eng = FlameEngine(bundle, params, n_history=HISTORY,
+                      buckets=(64, 32, 16), n_streams=2, feature_mode="sync")
+    print(f"    executor pool AOT-built in {eng.pool.build_time_s:.1f}s")
+    tc = TrafficConfig(candidate_counts=(16, 32, 64), distribution="jittered",
+                       n_requests=24, n_history=HISTORY, seed=1)
+    reqs = generate_traffic(tc, n_items=N_ITEMS)
+    res = run_workload(lambda h, c: eng.serve(h, c), reqs, concurrency=4)
+    print(f"    {res['requests']} concurrent requests | "
+          f"{res['throughput_items_per_s']:.0f} user-item pairs/s | "
+          f"mean {res['mean_latency_ms']:.1f} ms | "
+          f"p99 {res['p99_latency_ms']:.1f} ms")
+    print(f"    PDA cache: {eng.features.stats}")
+    print(f"    DSO chunks issued: {eng.dso.chunk_count}")
+
+    # ---- 3. quality check: served scores track planted preferences ----
+    print("[3/3] verifying served scores track planted preferences...")
+    rng = np.random.default_rng(7)
+    pos, neg = [], []
+    for _ in range(30):
+        r = ds.sample_request(rng, HISTORY, 16)
+        scores = eng.serve(r["history"], r["candidates"])
+        lab = r["labels"][:, 0] > 0.5
+        pos.extend(scores[lab, 0].tolist())
+        neg.extend(scores[~lab, 0].tolist())
+    print(f"    mean score on positives {np.mean(pos):.4f} vs "
+          f"negatives {np.mean(neg):.4f} "
+          f"({'OK' if np.mean(pos) > np.mean(neg) else 'FAIL'})")
+    eng.shutdown()
+
+
+if __name__ == "__main__":
+    main()

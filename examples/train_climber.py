@@ -1,0 +1,69 @@
+"""Training example: Climber (~100M params) on the synthetic GR interaction
+pipeline for a few hundred steps, with checkpointing.
+
+The ~100M configuration keeps the paper's structure (2 blocks x 12 layers)
+with the embedding table carrying most parameters, as in production recsys.
+Use --small for a quick CPU run.
+
+    PYTHONPATH=src python examples/train_climber.py --small
+    PYTHONPATH=src python examples/train_climber.py --steps 300   # ~100M
+"""
+import argparse
+import dataclasses
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.data import GRInteractionDataset, make_batch_iterator
+from repro.models import build_model
+from repro.training import checkpoint
+from repro.training.loop import train
+from repro.training.optimizer import AdamWConfig
+from repro.types import ClimberConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/climber_ckpt.msgpack")
+    args = ap.parse_args()
+
+    if args.small:
+        cfg = dataclasses.replace(
+            get_config("climber"), vocab_size=20_000, d_model=64, d_ff=256,
+            n_heads=2, n_kv_heads=2, head_dim=32,
+            climber=ClimberConfig(num_blocks=2, layers_per_block=2))
+        steps, batch, n_hist, n_cand = min(args.steps, 60), 16, 32, 8
+    else:
+        # ~100M params: 512k-item catalog x 192d embedding (~98M) + 2x12
+        # transformer layers
+        cfg = dataclasses.replace(
+            get_config("climber"), vocab_size=512_000, d_model=192,
+            d_ff=768, n_heads=4, n_kv_heads=4, head_dim=48,
+            climber=ClimberConfig(num_blocks=2, layers_per_block=12))
+        steps, batch, n_hist, n_cand = args.steps, 8, 64, 16
+
+    bundle = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"[train_climber] params ~{n_params/1e6:.0f}M "
+          f"({cfg.climber.num_blocks} blocks x "
+          f"{cfg.climber.layers_per_block} layers, d={cfg.d_model})")
+
+    ds = GRInteractionDataset(n_items=cfg.vocab_size, n_users=10_000, seed=0)
+    it = make_batch_iterator(ds, batch, n_history=n_hist,
+                             n_candidates=n_cand)
+    params, _, hist = train(
+        bundle, it, steps, AdamWConfig(lr=2e-3, warmup_steps=20),
+        log_every=max(1, steps // 15), impl="reference",
+        callback=lambda m: print(
+            f"  step {m['step']:>4} loss {m['loss']:.4f} "
+            f"({m['wall_s']:.0f}s)"))
+    checkpoint.save(args.ckpt, params, step=steps)
+    print(f"[train_climber] loss {hist[0]['loss']:.4f} -> "
+          f"{hist[-1]['loss']:.4f}; checkpoint at {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""gemma3-12b [dense] — 5:1 local:global attention interleave, 128k context.
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144  [hf:google/gemma-3-1b-pt]
+head_dim = 3840/16 = 240.  Layer pattern period 6: 5 sliding-window (1024) + 1
+global.  Sliding-window-dominant -> long_500k runs (global layers keep a
+sequence-sharded full cache; batch=1 shards seq over the data axis).
+"""
+from repro.types import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    activation="gelu",
+    norm="rmsnorm",
+    sliding_window=1024,
+    layer_pattern=("swa", "swa", "swa", "swa", "swa", "attn"),
+    sub_quadratic=True,
+    source="hf:google/gemma-3-1b-pt",
+)

@@ -1,0 +1,7 @@
+"""FLAME's core contribution, reimplemented for JAX/TPU.
+
+  sumi.py     single-user-multi-item sequence assembly + candidate scoring
+  climber.py  the Climber GR model (the paper's serving workload)
+  pda.py      Proximal Data Accelerator — feature cache + packed transfer
+  dso.py      Dynamic Stream Orchestrator — bucket routing over AOT executors
+"""

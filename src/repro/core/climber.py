@@ -1,0 +1,197 @@
+"""Climber — the GR model FLAME serves (paper §2.1, Fig 2).
+
+Architecture (faithful to the paper's description):
+  * the user behavior sequence is reorganized into ``N_b`` sub-sequences,
+    each processed by an independent transformer block (``layers_per_block``
+    layers) — attention complexity drops from O(n^2 d) to O(n^2 d / N_b);
+  * an adaptive temperature coefficient is applied before softmax in every
+    attention (learned per block+layer, softplus-positive);
+  * the M candidate items are concatenated after each block's sub-sequence
+    and scored in parallel under the SUMI mask;
+  * per-candidate block outputs are fused with bit-wise (per-dimension)
+    gating across blocks;
+  * a multi-task expert head (MMoE-style) produces ``num_tasks`` scores.
+
+Training objective: multi-task binary cross-entropy against per-candidate
+labels (click/like/finish-style engagement tasks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sumi
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.ffn import ffn_init, ffn_apply
+from repro.models.model import ModelBundle
+from repro.types import ModelConfig, ShapeConfig
+
+N_SIDE_FEATURES = 12   # "a dozen pieces of side information" (paper §4.1)
+
+
+def _block_init(key, cfg, n_layers: int):
+    """One transformer block's stacked params (+ adaptive temperature)."""
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L.norm_init(cfg, cfg.d_model, stacked=n_layers),
+        "attn": A.qkv_init(ks[0], cfg, stacked=n_layers),
+        "norm2": L.norm_init(cfg, cfg.d_model, stacked=n_layers),
+        "ffn": ffn_init(ks[1], cfg, stacked=n_layers),
+        # adaptive temperature, one per layer: tau = softplus(t) + 0.5
+        "temp": L.zeros_init((1,), (None,), stacked=n_layers, fill=0.55,
+                             dtype=jnp.float32),
+    }
+
+
+def climber_init(key, cfg: ModelConfig):
+    c = cfg.climber
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    blocks = {f"b{i}": _block_init(jax.random.fold_in(ks[0], i), cfg,
+                                   c.layers_per_block)
+              for i in range(c.num_blocks)}
+    dh = d  # expert hidden dim
+    params = {
+        "embed": {"embedding": L.dense_init(
+            ks[1], (cfg.vocab_size, d), ("vocab", "embed"), scale=0.02)},
+        "pos_embed": L.dense_init(ks[2], (8192, d), (None, "embed"), scale=0.02),
+        "side_proj": L.dense_init(ks[3], (N_SIDE_FEATURES, d), (None, "embed")),
+        "blocks": blocks,
+        # bit-wise gating fusion across blocks
+        "gate_w": L.dense_init(ks[4], (c.num_blocks, d), (None, "embed"),
+                               scale=0.02),
+        "gate_b": L.zeros_init((c.num_blocks, d), (None, "embed")),
+        "out_norm": L.norm_init(cfg, d),
+        # MMoE head: experts, per-task gates, per-task towers
+        "experts_w1": L.dense_init(ks[5], (c.num_experts_head, d, dh),
+                                   (None, "embed", "mlp"), fan_in_axes=(1,)),
+        "experts_w2": L.dense_init(ks[6], (c.num_experts_head, dh, dh),
+                                   (None, "mlp", "embed"), fan_in_axes=(1,)),
+        "task_gates": L.dense_init(ks[7], (c.num_tasks, d, c.num_experts_head),
+                                   (None, "embed", None), fan_in_axes=(1,)),
+        "task_towers": L.dense_init(jax.random.fold_in(key, 9),
+                                    (c.num_tasks, dh), (None, "embed"),
+                                    fan_in_axes=(1,)),
+    }
+    return L.split_params(params)
+
+
+def _block_forward(bp, x, n_history: int, cfg, impl: str):
+    """x [B,S,d] through one stacked transformer block under the SUMI mask.
+
+    All candidates share position ``n_history`` (each is a hypothetical
+    "next item"), which makes scoring permutation-invariant across the
+    candidate set — required for DSO chunk-splitting to be exact."""
+    b, s, d = x.shape
+    pos = jnp.concatenate([jnp.arange(n_history),
+                           jnp.full((s - n_history,), n_history)])
+    positions = jnp.broadcast_to(pos, (b, s))
+
+    def layer(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        tau = jax.nn.softplus(p["temp"][0]) + 0.5
+        o = sumi.sumi_attention(q, k, v, n_history, impl=impl, temperature=tau)
+        x = x + A.project_out(p["attn"], o)
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
+
+    from repro.models.transformer import scan_or_unroll
+    x, _ = scan_or_unroll(layer, x, bp)
+    return x
+
+
+def climber_forward(params, batch: Dict, cfg: ModelConfig, *,
+                    impl: str = "reference"):
+    """batch: history [B,n] ids, candidates [B,M] ids, side [B,F].
+    Returns task logits [B, M, num_tasks]."""
+    c = cfg.climber
+    hist = jnp.take(params["embed"]["embedding"], batch["history"], axis=0)
+    cand = jnp.take(params["embed"]["embedding"], batch["candidates"], axis=0)
+    b, n, d = hist.shape
+    m = cand.shape[1]
+    side = jnp.einsum("bf,fd->bd", batch["side"].astype(hist.dtype),
+                      params["side_proj"])[:, None]
+
+    nb = c.num_blocks
+    sub = hist.reshape(b, nb, n // nb, d)
+    block_outs = []
+    for i in range(nb):
+        xb = sub[:, i] + params["pos_embed"][None, :n // nb]
+        xb = jnp.concatenate([side, xb], axis=1)        # context token prefix
+        seq, n_hist = sumi.assemble(xb, cand)
+        out = _block_forward(params["blocks"][f"b{i}"], seq, n_hist, cfg, impl)
+        block_outs.append(sumi.split_candidates(out, n_hist))
+    h = jnp.stack(block_outs, axis=2)                   # [B,M,Nb,d]
+
+    # bit-wise gating fusion: per-dimension softmax over blocks
+    gate_logits = h.astype(jnp.float32) * params["gate_w"].astype(jnp.float32) \
+        + params["gate_b"].astype(jnp.float32)
+    gates = jax.nn.softmax(gate_logits, axis=2)
+    fused = (gates * h.astype(jnp.float32)).sum(axis=2)  # [B,M,d]
+    fused = L.apply_norm(cfg, params["out_norm"], fused)
+
+    # MMoE expert head
+    e1 = jnp.einsum("bmd,edh->bmeh", fused, params["experts_w1"].astype(jnp.float32))
+    e1 = jax.nn.gelu(e1)
+    e2 = jnp.einsum("bmeh,ehg->bmeg", e1, params["experts_w2"].astype(jnp.float32))
+    tg = jax.nn.softmax(jnp.einsum("bmd,tde->bmte", fused,
+                                   params["task_gates"].astype(jnp.float32)),
+                        axis=-1)
+    mix = jnp.einsum("bmte,bmeg->bmtg", tg, e2)
+    logits = jnp.einsum("bmtg,tg->bmt", mix, params["task_towers"].astype(jnp.float32))
+    return logits
+
+
+def build_climber(cfg: ModelConfig) -> ModelBundle:
+    c = cfg.climber
+
+    def init(key):
+        return climber_init(key, cfg)
+
+    def loss_fn(params, batch, impl: str = "reference"):
+        logits = climber_forward(params, batch, cfg, impl=impl)
+        labels = batch["labels"].astype(jnp.float32)
+        ls = jnp.mean(
+            jnp.maximum(logits, 0) - logits * labels
+            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return ls, {"bce_loss": ls}
+
+    def prefill(params, batch, impl: str = "reference", caches=None):
+        """Serving entry: per-candidate multi-task probabilities [B,M,T]."""
+        return jax.nn.sigmoid(climber_forward(params, batch, cfg, impl=impl))
+
+    def decode_step(params, caches, batch, impl: str = "reference"):
+        raise NotImplementedError(
+            "Climber scores all candidates in one SUMI pass; no decode step.")
+
+    def cache_init(batch, max_len, dtype=jnp.bfloat16):
+        raise NotImplementedError("Climber serving is single-pass (no KV cache).")
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        n, m = shape.seq_len, shape.n_candidates
+        specs = {
+            "history": jax.ShapeDtypeStruct((b, n), jnp.int32),
+            "candidates": jax.ShapeDtypeStruct((b, m), jnp.int32),
+            "side": jax.ShapeDtypeStruct((b, N_SIDE_FEATURES), jnp.float32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, m, c.num_tasks),
+                                                   jnp.float32)
+        return specs
+
+    def input_logical(shape: ShapeConfig):
+        lg = {"history": ("batch", None), "candidates": ("batch", None),
+              "side": ("batch", None)}
+        if shape.kind == "train":
+            lg["labels"] = ("batch", None, None)
+        return lg
+
+    return ModelBundle(cfg, init, loss_fn, prefill, decode_step,
+                       input_specs, input_logical, cache_init)

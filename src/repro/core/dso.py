@@ -1,0 +1,197 @@
+"""Dynamic Stream Orchestrator (DSO) — explicit-shape executors + routing.
+
+TPU/JAX mapping of the paper's §3.3 (see DESIGN.md):
+
+  TensorRT profile w/ fixed batch shape  ->  AOT-compiled XLA executable
+                                             (jit(f).lower(shapes).compile())
+  preallocated I/O buffers               ->  persistent padded input buffers
+  CUDA-graph capture                     ->  the AOT executable itself (one
+                                             dispatch, no retrace)
+  CUDA streams / executor index queue    ->  executor checkout queue +
+                                             JAX async dispatch; worker
+                                             threads interleave host work
+  implicit-shape baseline                ->  plain jit re-traced/re-compiled
+                                             for every novel candidate count
+
+Routing: an upstream request with M candidates is split greedily into bucket
+chunks in descending bucket order; the final partial chunk is padded up to
+the smallest covering bucket (the paper's "split by batch size in descending
+order").
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# bucket routing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    bucket: int       # executor shape this chunk runs on
+    start: int        # offset into the request's candidate list
+    valid: int        # number of real candidates (<= bucket; rest is padding)
+
+
+def split_request(m: int, buckets: Sequence[int]) -> List[Chunk]:
+    """Greedy descending-bucket split of M candidates."""
+    bs = sorted(set(buckets), reverse=True)
+    assert m >= 1 and bs, (m, buckets)
+    plan: List[Chunk] = []
+    off, rem = 0, m
+    for b in bs:
+        while rem >= b:
+            plan.append(Chunk(b, off, b))
+            off += b
+            rem -= b
+    if rem > 0:
+        cover = min(x for x in bs if x >= rem)  # smallest covering bucket
+        plan.append(Chunk(cover, off, rem))
+    return plan
+
+
+def padded_fraction(m: int, buckets: Sequence[int]) -> float:
+    plan = split_request(m, buckets)
+    padded = sum(c.bucket for c in plan)
+    return 1.0 - m / padded
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+class Executor:
+    """One AOT-compiled executable for a fixed candidate bucket."""
+
+    def __init__(self, bucket: int, compiled, eid: int):
+        self.bucket = bucket
+        self.compiled = compiled
+        self.eid = eid
+        self.calls = 0
+
+    def __call__(self, *args):
+        self.calls += 1
+        return self.compiled(*args)
+
+
+class ExecutorPool:
+    """Per-bucket executor index queues (paper Fig 10).
+
+    ``build_fn(bucket)`` must return an AOT-compiled callable for that
+    bucket's shapes.  ``n_streams`` executors are built per bucket — the
+    CUDA-stream analogue: that many chunks of the same bucket can be in
+    flight concurrently (JAX async dispatch overlaps their host work).
+    """
+
+    def __init__(self, build_fn: Callable[[int], Callable],
+                 buckets: Sequence[int], n_streams: int = 2):
+        self.buckets = sorted(set(buckets), reverse=True)
+        self.queues: Dict[int, "queue.Queue[Executor]"] = {}
+        self.build_time_s = 0.0
+        eid = 0
+        t0 = time.perf_counter()
+        for b in self.buckets:
+            q: "queue.Queue[Executor]" = queue.Queue()
+            compiled = build_fn(b)
+            for _ in range(n_streams):
+                q.put(Executor(b, compiled, eid))
+                eid += 1
+            self.queues[b] = q
+        self.build_time_s = time.perf_counter() - t0
+
+    def acquire(self, bucket: int) -> Executor:
+        return self.queues[bucket].get()
+
+    def release(self, ex: Executor):
+        self.queues[ex.bucket].put(ex)
+
+
+# ---------------------------------------------------------------------------
+# the orchestrator
+# ---------------------------------------------------------------------------
+
+class DynamicStreamOrchestrator:
+    """Routes requests with arbitrary candidate counts onto the executor pool.
+
+    ``pad_slice_fn(request, chunk)`` -> executor args for one chunk (padded
+    to ``chunk.bucket``); ``gather_fn(results, chunks, m)`` -> final output.
+    """
+
+    def __init__(self, pool: ExecutorPool,
+                 pad_slice_fn: Callable, gather_fn: Callable,
+                 max_workers: int = 8):
+        self.pool = pool
+        self.pad_slice = pad_slice_fn
+        self.gather = gather_fn
+        self._tp = ThreadPoolExecutor(max_workers=max_workers)
+        self.chunk_count = 0
+        self._lock = threading.Lock()
+
+    def _run_chunk(self, request, chunk: Chunk):
+        ex = self.pool.acquire(chunk.bucket)
+        try:
+            args = self.pad_slice(request, chunk)
+            out = ex(*args)
+            jax.block_until_ready(out)
+            return out
+        finally:
+            self.pool.release(ex)
+
+    def submit(self, request, m: int):
+        """Non-blocking: returns a future resolving to the gathered output."""
+        plan = split_request(m, self.pool.buckets)
+        with self._lock:
+            self.chunk_count += len(plan)
+        futs = [self._tp.submit(self._run_chunk, request, c) for c in plan]
+
+        def resolve():
+            results = [f.result() for f in futs]
+            return self.gather(results, plan, m)
+
+        return _Lazy(resolve)
+
+    def score(self, request, m: int):
+        """Blocking convenience wrapper."""
+        return self.submit(request, m).result()
+
+    def shutdown(self):
+        self._tp.shutdown(wait=True)
+
+
+class _Lazy:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def result(self):
+        return self._fn()
+
+
+# ---------------------------------------------------------------------------
+# implicit-shape baseline (the paper's "Default" row in Table 5)
+# ---------------------------------------------------------------------------
+
+class ImplicitShapeEngine:
+    """Plain jit: every novel candidate count triggers a fresh trace+compile,
+    the XLA analogue of TensorRT implicit-shape dynamic (re)allocation."""
+
+    def __init__(self, fn: Callable):
+        self._fn = jax.jit(fn)
+        self.compiles = 0
+        self._seen: set = set()
+
+    def score(self, request, m: int):
+        if m not in self._seen:
+            self._seen.add(m)
+            self.compiles += 1
+        out = self._fn(*request)
+        jax.block_until_ready(out)
+        return out

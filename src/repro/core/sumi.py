@@ -1,0 +1,53 @@
+"""SUMI — single user, multiple items: FLAME's request paradigm.
+
+A GR ranking request carries one user history (length n) and M candidate
+items.  All M candidates are scored in ONE forward pass by concatenating them
+after the history and applying the SUMI mask (candidates attend to history
+and themselves, never to each other) — the HSTU-style parallel-prediction
+trick the paper bakes into its mask-aware flash-attention plug-in.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+
+
+def assemble(history_emb: jnp.ndarray, cand_emb: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, int]:
+    """[B,n,d] + [B,M,d] -> ([B,n+M,d], n_history)."""
+    return jnp.concatenate([history_emb, cand_emb], axis=1), history_emb.shape[1]
+
+
+def split_candidates(x: jnp.ndarray, n_history: int) -> jnp.ndarray:
+    """[B,n+M,d] -> candidate outputs [B,M,d]."""
+    return x[:, n_history:]
+
+
+def sumi_attention(q, k, v, n_history: int, *, impl: str = "reference",
+                   temperature=None):
+    """Mask-aware attention under the SUMI mask.  q/k/v [B,S,H,D]."""
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    return A.attention(q, k, v, "sumi", impl=impl, n_history=n_history)
+
+
+def sumi_mask(n_history: int, n_candidates: int) -> jnp.ndarray:
+    """Dense boolean mask (for tests / the unfused baseline)."""
+    s = n_history + n_candidates
+    return A.make_mask(s, s, "sumi", n_history=n_history)
+
+
+def flops_per_request(n_history: int, n_candidates: int, n_blocks: int,
+                      layers_per_block: int, d_model: int, d_ff: int) -> float:
+    """Analytic FLOPs of one SUMI forward (paper Table 2 reproduction)."""
+    s_block = n_history // n_blocks + n_candidates
+    per_tok_proj = 2 * (4 * d_model * d_model + 2 * d_model * d_ff)
+    # attention scores+values; SUMI mask: candidates only see history+self
+    n_hist_b = n_history // n_blocks
+    attn_pairs = n_hist_b * (n_hist_b + 1) / 2 + n_candidates * (n_hist_b + 1)
+    per_layer = s_block * per_tok_proj + 2 * 2 * attn_pairs * d_model
+    return n_blocks * layers_per_block * per_layer

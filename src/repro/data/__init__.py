@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    GRInteractionDataset, TokenDataset, make_batch_iterator)

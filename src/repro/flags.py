@@ -1,0 +1,41 @@
+"""Tracing-time flags.
+
+COST_TRANSPARENT: when set (by the dry-run's roofline variants), sequence
+scans (chunked attention KV loop, RWKV chunk loop, layer stacks) lower fully
+unrolled so XLA cost analysis sees every iteration — a while-loop body is
+otherwise counted once regardless of trip count.
+"""
+import contextlib
+import contextvars
+
+COST_TRANSPARENT = contextvars.ContextVar("repro_cost_transparent",
+                                          default=False)
+
+
+@contextlib.contextmanager
+def cost_transparent():
+    tok = COST_TRANSPARENT.set(True)
+    try:
+        yield
+    finally:
+        COST_TRANSPARENT.reset(tok)
+
+
+def unroll_scans() -> bool:
+    return COST_TRANSPARENT.get()
+
+
+# MoE dispatch implementation: "gspmd" (scatter/gather, partitioner-chosen
+# collectives) or "a2a" (explicit shard_map all_to_all expert parallelism —
+# the §Perf optimized path).
+MOE_DISPATCH = contextvars.ContextVar("repro_moe_dispatch", default="gspmd")
+
+
+@contextlib.contextmanager
+def moe_dispatch(kind: str):
+    assert kind in ("gspmd", "a2a")
+    tok = MOE_DISPATCH.set(kind)
+    try:
+        yield
+    finally:
+        MOE_DISPATCH.reset(tok)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the mask-aware flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mask_array(s_q: int, s_k: int, mode: str, *, window: int = 0,
+               n_history: int = 0) -> jnp.ndarray:
+    q = jnp.arange(s_q)[:, None]
+    k = jnp.arange(s_k)[None, :]
+    if mode == "full":
+        return jnp.ones((s_q, s_k), bool)
+    if mode == "causal":
+        return k <= q
+    if mode == "sliding":
+        return (k <= q) & (q - k < window)
+    if mode == "sumi":
+        q_is_hist = q < n_history
+        hist = k <= q
+        cand = (k < n_history) | (k == q)
+        return jnp.where(q_is_hist, hist, cand)
+    raise ValueError(mode)
+
+
+def reference(q, k, v, mode: str, *, window: int = 0, n_history: int = 0):
+    """q [B,H,Sq,D]; k,v [B,Hkv,Sk,D] -> [B,H,Sq,D] (f32 math, input dtype out)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) / np.sqrt(d)
+    m = mask_array(sq, k.shape[2], mode, window=window, n_history=n_history)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can happen with window=0 edge cases) -> zeros
+    w = jnp.where(m.any(-1)[None, None, None, :, None], w, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def reference(q, k_cache, v_cache, lengths, *, window: int = 0):
+    """q [B,H,D]; caches [B,S,Hkv,D]; lengths [B] (valid prefix per seq).
+
+    Returns [B,H,D].  ``window``>0 additionally masks positions older than
+    ``lengths-window`` (sliding-window decode on a non-ring cache)."""
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qf,
+                        k_cache.astype(jnp.float32)) / np.sqrt(d)
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if window:
+        valid = valid & (pos >= lengths[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused norm+FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+
+
+def reference(x, w_up, w_down, *, w_gate=None, norm_scale=None,
+              activation: str = "swiglu"):
+    """x [T,d] -> [T,d].  Norm (optional RMSNorm) + W1(+gate) + act + W2,
+    all in f32; returns x.dtype."""
+    h = rmsnorm(x, norm_scale) if norm_scale is not None else x.astype(jnp.float32)
+    up = h @ w_up.astype(jnp.float32)
+    if activation == "swiglu":
+        gate = h @ w_gate.astype(jnp.float32)
+        a = jax.nn.silu(gate) * up
+    elif activation == "gelu":
+        a = jax.nn.gelu(up)
+    else:
+        a = jax.nn.relu(up)
+    return (a @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the RWKV-6 wkv scan: token-by-token recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(r, k, v, w_log, u, state=None):
+    """r,k,v,w_log [BH,S,D]; u [BH,D]; state [BH,D,D] -> (o [BH,S,D], state)."""
+    bh, s, d = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(w_log.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((bh, d, d), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp          # [BH,D] each
+        o = jnp.einsum("bd,bde->be", rt, S) + \
+            jnp.einsum("bd,bd->b", rt * uf, kt)[:, None] * vt
+        S = wt[..., None] * S + jnp.einsum("bd,be->bde", kt, vt)
+        return S, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w))
+    state, o = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), state

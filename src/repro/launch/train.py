@@ -1,0 +1,78 @@
+"""Training launcher.
+
+Host-scale (this container):
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-3-4b \
+        --reduced --steps 100 --batch 8 --seq 128
+
+Pod-scale: the same entry point with --mesh pod16x16 builds the production
+mesh sharding (on real TPU hardware); on CPU use launch/dryrun.py to verify
+the pod configuration compiles.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import sharding as shd
+from repro.configs import get_config, reduced_config
+from repro.data import GRInteractionDataset, TokenDataset, make_batch_iterator
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.training import checkpoint
+from repro.training.loop import train
+from repro.training.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None, help="checkpoint path to write")
+    ap.add_argument("--mesh", default="host", choices=["host", "pod16x16",
+                                                       "pod2x16x16"])
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    bundle = build_model(cfg)
+    print(f"[train] arch={cfg.name} reduced={args.reduced} "
+          f"params~{cfg.param_count()/1e6:.1f}M")
+
+    if cfg.family == "climber":
+        ds = GRInteractionDataset(n_items=cfg.vocab_size)
+        it = make_batch_iterator(ds, args.batch, n_history=args.seq,
+                                 n_candidates=max(4, args.seq // 8))
+        impl = "reference"
+    else:
+        ds = TokenDataset(vocab_size=cfg.vocab_size, branching=8)
+        it = make_batch_iterator(ds, args.batch, seq_len=args.seq)
+        impl = "chunked"
+
+    def log(m):
+        print(f"[train] step={m['step']:<5d} loss={m['loss']:.4f} "
+              f"grad_norm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
+              f"wall={m['wall_s']:.1f}s")
+
+    params, opt_state, hist = train(
+        bundle, it, args.steps,
+        AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 10)),
+        log_every=max(1, args.steps // 20), impl=impl, callback=log)
+
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, step=args.steps)
+        print(f"[train] checkpoint written to {args.ckpt}")
+    print(f"[train] done: first loss {hist[0]['loss']:.4f} -> "
+          f"final {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Encoder-decoder transformer (seamless-m4t style) for the [audio] arch.
+
+The audio frontend (mel-spectrogram + conformer conv feature extractor) is a
+stub per the assignment: the model consumes precomputed frame embeddings
+[B, n_frames, d].  Encoder = bidirectional self-attention; decoder = causal
+self-attention + cross-attention to the encoder output.  Decode carries a
+self-attention KV cache plus the precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.ffn import ffn_init, ffn_apply
+
+
+def encdec_init(key, cfg):
+    ks = jax.random.split(key, 6)
+    ng_e, ng_d = cfg.n_enc_layers, cfg.n_layers
+    enc_layers = {
+        "norm1": L.norm_init(cfg, cfg.d_model, stacked=ng_e),
+        "attn": A.qkv_init(ks[0], cfg, stacked=ng_e),
+        "norm2": L.norm_init(cfg, cfg.d_model, stacked=ng_e),
+        "ffn": ffn_init(ks[1], cfg, stacked=ng_e),
+    }
+    dec_layers = {
+        "norm1": L.norm_init(cfg, cfg.d_model, stacked=ng_d),
+        "self_attn": A.qkv_init(ks[2], cfg, stacked=ng_d),
+        "norm_x": L.norm_init(cfg, cfg.d_model, stacked=ng_d),
+        "cross_attn": A.qkv_init(ks[3], cfg, stacked=ng_d),
+        "norm2": L.norm_init(cfg, cfg.d_model, stacked=ng_d),
+        "ffn": ffn_init(ks[4], cfg, stacked=ng_d),
+    }
+    return {
+        "frame_proj": L.dense_init(ks[5], (cfg.d_model, cfg.d_model),
+                                   ("embed", "embed_fsdp")),
+        "enc": enc_layers,
+        "enc_norm": L.norm_init(cfg, cfg.d_model),
+        "dec": dec_layers,
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg, *, impl="chunked"):
+    """frames [B,F,d] (stub frontend embeddings) -> encoder states [B,F,d]."""
+    x = jnp.einsum("bfd,de->bfe", frames, params["frame_proj"])
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        x = x + A.project_out(p["attn"], A.attention(q, k, v, "full", impl=impl))
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
+
+    from repro.models.transformer import scan_or_unroll
+    x, _ = scan_or_unroll(body, x, params["enc"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def cross_kv(params, enc_out, cfg):
+    """Precompute per-decoder-layer cross K/V (stacked): [L,B,F,Hkv,D] x2."""
+    def per_layer(p):
+        pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]), enc_out.shape[:2])
+        _, k, v = A.project_qkv(p["cross_attn"], enc_out, cfg, pos)
+        return k, v
+    return jax.vmap(per_layer)(params["dec"])
+
+
+def decode_stack(params, x, enc_out, cfg, *, mode, positions, caches=None,
+                 cur_len=None, impl="chunked", remat=False):
+    """Decoder over targets x [B,S,d].  caches: {"k","v"} stacked self caches
+    + {"xk","xv"} cross K/V (precomputed for decode)."""
+
+    def body_fn(x, p, cache):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["self_attn"], h, cfg, positions)
+        new_cache = None
+        if mode == "decode":
+            clen = cache["k"].shape[1]
+            slot = positions[:, 0]
+            k_c = jax.vmap(lambda c, kk, s: jax.lax.dynamic_update_slice_in_dim(
+                c, kk, s, axis=0))(cache["k"], k, slot)
+            v_c = jax.vmap(lambda c, vv, s: jax.lax.dynamic_update_slice_in_dim(
+                c, vv, s, axis=0))(cache["v"], v, slot)
+            o = A.decode_attention(q, k_c, v_c, cur_len)
+            new_cache = {"k": k_c, "v": v_c, "xk": cache["xk"], "xv": cache["xv"]}
+        else:
+            o = A.attention(q, k, v, "causal", impl=impl)
+            if cache is not None:
+                pad = cache["k"].shape[1] - k.shape[1]
+                new_cache = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "xk": cache["xk"], "xv": cache["xv"]}
+        x = x + A.project_out(p["self_attn"], o)
+
+        # cross attention (full mask over encoder frames)
+        hx = L.apply_norm(cfg, p["norm_x"], x)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, p["cross_attn"]["wq"])
+        if "bq" in p["cross_attn"]:
+            qx = qx + p["cross_attn"]["bq"]
+        qx = L.rope(qx, positions, cfg.rope_theta)
+        if mode == "decode":
+            xk, xv = cache["xk"], cache["xv"]
+            ox = A.decode_attention(qx, xk, xv, xk.shape[1])
+        else:
+            pos_e = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                     enc_out.shape[:2])
+            _, xk, xv = A.project_qkv(p["cross_attn"], enc_out, cfg, pos_e)
+            ox = A.attention(qx, xk, xv, "full", impl=impl)
+        x = x + A.project_out(p["cross_attn"], ox)
+
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), new_cache
+
+    if remat:
+        body_fn = jax.checkpoint(body_fn)
+
+    def scan_body(x, xs):
+        p, cache = xs
+        return body_fn(x, p, cache)
+
+    from repro.models.transformer import scan_or_unroll
+    x, new_caches = scan_or_unroll(scan_body, x, (params["dec"], caches))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, (new_caches if caches is not None else None)
+
+
+def init_dec_caches(cfg, batch: int, max_len: int, n_frames: int,
+                    dtype=jnp.bfloat16):
+    """Decoder self caches + cross K/V placeholders, stacked over layers."""
+    hd = cfg.head_dim
+    ng = cfg.n_layers
+    shape_self = (ng, batch, max_len, cfg.n_kv_heads, hd)
+    shape_cross = (ng, batch, n_frames, cfg.n_kv_heads, hd)
+    logical = ("stack", "cache_batch", "cache_seq", "cache_heads", None)
+    caches = {
+        "k": L.Param(jnp.zeros(shape_self, dtype), logical),
+        "v": L.Param(jnp.zeros(shape_self, dtype), logical),
+        "xk": L.Param(jnp.zeros(shape_cross, dtype), logical),
+        "xv": L.Param(jnp.zeros(shape_cross, dtype), logical),
+    }
+    return L.split_params(caches)

@@ -1,0 +1,35 @@
+"""Dense feed-forward blocks (MLP / SwiGLU) with an optional fused-kernel path.
+
+``impl="pallas"`` routes through kernels/fused_ffn — the FKE fusion of
+norm + W1(+gate) + activation + W2 in one VMEM-resident kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def ffn_init(key, cfg, d_ff=None, stacked: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": L.dense_init(ks[0], (d, f), ("embed", "mlp"), stacked=stacked),
+         "w_down": L.dense_init(ks[1], (f, d), ("mlp", "embed"), stacked=stacked)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = L.dense_init(ks[2], (d, f), ("embed", "mlp"), stacked=stacked)
+    return p
+
+
+def ffn_apply(params, x, cfg, impl: str = "xla"):
+    if impl == "pallas":
+        from repro.kernels.fused_ffn import ops as ffn_ops
+        return ffn_ops.fused_ffn(x, params, activation=cfg.activation)
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if cfg.activation == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+    else:
+        h = L.activation_fn(cfg.activation)(up.astype(jnp.float32))
+    h = h.astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

@@ -1,0 +1,160 @@
+"""Shared building blocks: params-with-logical-specs, norms, RoPE, embeddings.
+
+Every init function returns a pytree whose leaves are :class:`Param`
+(value + logical axis names).  ``split_params`` separates values from specs so
+the dry-run can map specs to NamedShardings while the training/serving code
+works with plain arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Param:
+    value: jnp.ndarray
+    logical: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        assert len(self.logical) == self.value.ndim, (
+            f"logical {self.logical} vs shape {self.value.shape}")
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """(values_tree, specs_tree) from a tree of Params."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.logical, tree, is_leaf=is_param)
+    return values, specs
+
+
+def param_count(values_tree) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(values_tree))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, logical, dtype=jnp.bfloat16, scale=None,
+               stacked: int = 0, fan_in_axes=None) -> Param:
+    """Truncated-normal dense init; fan-in scaled.  ``stacked>0`` prepends a
+    layer-stack axis (for lax.scan over layers).  ``fan_in_axes`` names the
+    contraction axes (default: all but the last)."""
+    if fan_in_axes is None:
+        fan_in_axes = tuple(range(len(shape) - 1)) if len(shape) >= 2 else (0,)
+    fan_in = int(np.prod([shape[a] for a in fan_in_axes]))
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    if stacked:
+        shape = (stacked,) + tuple(shape)
+        logical = ("stack",) + tuple(logical)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    return Param(w.astype(dtype), tuple(logical))
+
+
+def zeros_init(shape, logical, dtype=jnp.bfloat16, stacked: int = 0,
+               fill: float = 0.0) -> Param:
+    if stacked:
+        shape = (stacked,) + tuple(shape)
+        logical = ("stack",) + tuple(logical)
+    return Param(jnp.full(shape, fill, dtype), tuple(logical))
+
+
+def ones_init(shape, logical, dtype=jnp.bfloat16, stacked: int = 0) -> Param:
+    return zeros_init(shape, logical, dtype, stacked, fill=1.0)
+
+
+# ---------------------------------------------------------------------------
+# norms (always computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(cfg, d, stacked: int = 0):
+    if cfg.norm == "rmsnorm":
+        return {"scale": zeros_init((d,), ("embed",), stacked=stacked)}
+    return {"scale": ones_init((d,), ("embed",), stacked=stacked),
+            "bias": zeros_init((d,), ("embed",), stacked=stacked)}
+
+
+def apply_norm(cfg, params, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S].  theta==0 disables RoPE."""
+    if theta == 0.0:
+        return x
+    d = x.shape[-1]
+    d2 = d // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(d2, dtype=jnp.float32) / d2)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, d2]
+    cos = jnp.cos(ang)[..., :, None, :]                        # [..., S, 1, d2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :d2], x[..., d2:2 * d2]
+    rest = x[..., 2 * d2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+    if rest.shape[-1]:
+        out = jnp.concatenate([out, rest], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg):
+    p = {"embedding": dense_init(key, (cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"))
+    return p
+
+
+def embed(params, tokens, cfg):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        w = params["embedding"].T
+    else:
+        w = params["unembed"]
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def activation_fn(name: str):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "silu": jax.nn.silu}.get(name, jax.nn.gelu)

@@ -1,0 +1,203 @@
+"""RWKV-6 (Finch) — attention-free, data-dependent-decay linear attention.
+
+Per head h with key/value dim D (head_size):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T           (state [D, D])
+    o_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t     (bonus u for current token)
+
+w_t in (0,1) is data-dependent: w_t = exp(-exp(w0 + lora_w(x_t))).
+The prefill path uses the chunked formulation (intra-chunk pairwise decays in
+log space — always <= 1, numerically stable; inter-chunk state carry), which
+is also what the Pallas kernel (kernels/rwkv6_scan) implements.  Decode is a
+single recurrence step on the [B,H,D,D] state — O(1) in context length, which
+is why rwkv6-7b runs the long_500k shape.
+
+Token-shift "ddlerp" mixing and the squared-relu channel-mix follow the RWKV-6
+structure [arXiv:2404.05892] (low-rank data-dependent mixing, single shared
+lora rank for compactness).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+LORA_RANK = 32
+CHUNK = 64
+
+
+def rwkv_init(key, cfg, stacked: int = 0):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    ks = jax.random.split(key, 16)
+    p = {
+        # time-mix projections
+        "wr": L.dense_init(ks[0], (d, d), ("embed", "heads"), stacked=stacked),
+        "wk": L.dense_init(ks[1], (d, d), ("embed", "heads"), stacked=stacked),
+        "wv": L.dense_init(ks[2], (d, d), ("embed", "heads"), stacked=stacked),
+        "wg": L.dense_init(ks[3], (d, d), ("embed", "heads"), stacked=stacked),
+        "wo": L.dense_init(ks[4], (d, d), ("heads", "embed"), stacked=stacked),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": L.zeros_init((d,), ("heads",), stacked=stacked, fill=-1.0),
+        "wA": L.dense_init(ks[5], (d, LORA_RANK), ("embed", None), stacked=stacked),
+        "wB": L.dense_init(ks[6], (LORA_RANK, d), (None, "heads"), stacked=stacked),
+        # per-channel bonus
+        "u": L.zeros_init((d,), ("heads",), stacked=stacked, fill=0.5),
+        # token-shift mix coefficients (one per r/k/v/w/g)
+        "mu": L.zeros_init((5, d), (None, "embed"), stacked=stacked, fill=0.5),
+        # ddlerp low-rank adapter (shared)
+        "muA": L.dense_init(ks[7], (d, LORA_RANK), ("embed", None), stacked=stacked),
+        "muB": L.dense_init(ks[8], (LORA_RANK, 5, d), (None, None, "embed"),
+                            stacked=stacked, fan_in_axes=(0,)),
+        # group-norm over heads
+        "ln_x_scale": L.ones_init((d,), ("heads",), stacked=stacked),
+        "ln_x_bias": L.zeros_init((d,), ("heads",), stacked=stacked),
+        # channel-mix
+        "ck": L.dense_init(ks[9], (d, cfg.d_ff), ("embed", "mlp"), stacked=stacked),
+        "cv": L.dense_init(ks[10], (cfg.d_ff, d), ("mlp", "embed"), stacked=stacked),
+        "c_mu": L.zeros_init((d,), ("embed",), stacked=stacked, fill=0.5),
+    }
+    return p
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent token-shift: returns 5 mixed streams [B,S,d] each."""
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # shifted
+    diff = (xs - x).astype(jnp.float32)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", diff,
+                               params["muA"].astype(jnp.float32)))
+    dyn = jnp.einsum("bsr,rfd->fbsd", lora, params["muB"].astype(jnp.float32))
+    mixed = x.astype(jnp.float32)[None] + diff[None] * (
+        params["mu"].astype(jnp.float32)[:, None, None] + dyn)
+    return mixed.astype(x.dtype), x[:, -1]
+
+
+def wkv_chunked(r, k, v, w_log, u, state: Optional[jnp.ndarray] = None,
+                chunk: int = CHUNK):
+    """Chunked linear-attention scan.
+
+    r,k,v: [B,S,H,D]; w_log: [B,S,H,D] = log(w_t) (<=0); u: [H,D].
+    Returns (o [B,S,H,D], final state [B,H,D,D]).
+    """
+    b, s, h, d = r.shape
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, zp) for a in (r, k, v))
+        w_log = jnp.pad(w_log, zp)  # log w = 0 -> w = 1 (no decay) for padding
+    rf = r.astype(jnp.float32).reshape(b, n, chunk, h, d)
+    kf = k.astype(jnp.float32).reshape(b, n, chunk, h, d)
+    vf = v.astype(jnp.float32).reshape(b, n, chunk, h, d)
+    wl = w_log.astype(jnp.float32).reshape(b, n, chunk, h, d)
+    uf = u.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(S, inp):
+        rc, kc, vc, wc = inp            # [b,chunk,h,d]
+        la = jnp.cumsum(wc, axis=1)     # inclusive cumulative log-decay
+        la_prev = la - wc               # exclusive (through t-1)
+        # inter-chunk: o_inter[t] = (r_t * exp(la_prev_t)) @ S
+        r_dec = rc * jnp.exp(la_prev)
+        o_inter = jnp.einsum("bthd,bhde->bthe", r_dec, S)
+        # intra-chunk pairwise: D[t,s,d] = exp(la_prev[t] - la[s]) for s < t
+        diff = la_prev[:, :, None] - la[:, None, :, :, :]     # [b,t,s,h,d]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        dec = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthd,bshd,btshd->bths", rc, kc, dec)
+        o_intra = jnp.einsum("bths,bshd->bthd", scores, vc)
+        # current-token bonus
+        o_bonus = jnp.einsum("bthd,bthd->bth", rc * uf[None, None], kc)[..., None] * vc
+        # state update: S' = diag(exp(la_c)) S + sum_s (k_s exp(la_c - la_s)) v_s^T
+        la_c = la[:, -1:]
+        k_dec = kc * jnp.exp(la_c - la)
+        S_new = jnp.exp(la_c[:, 0])[..., None] * S + jnp.einsum(
+            "bshd,bshe->bhde", k_dec, vc)
+        return S_new, o_inter + o_intra + o_bonus
+
+    from repro import flags
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wl))
+    state, o = jax.lax.scan(step, state, xs, unroll=flags.unroll_scans())
+    o = jnp.moveaxis(o, 0, 1).reshape(b, n * chunk, h, d)[:, :s]
+    return o.astype(r.dtype), state
+
+
+def wkv_decode_step(r, k, v, w, u, state):
+    """One-token recurrence.  r,k,v,w: [B,H,D]; state [B,H,D,D] (f32)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w.astype(jnp.float32)
+    o = jnp.einsum("bhd,bhde->bhe", rf, state) + \
+        jnp.einsum("bhd,bhd->bh", rf * u.astype(jnp.float32)[None], kf)[..., None] * vf
+    state = wf[..., None] * state + jnp.einsum("bhd,bhe->bhde", kf, vf)
+    return o.astype(r.dtype), state
+
+
+def _group_norm(x, scale, bias, nh, eps=64e-5):
+    """Per-head group norm on [B,S,d] flattened heads."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32).reshape(b, s, nh, d // nh)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(b, s, d) * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(params, x, cfg, *, x_prev=None, state=None, decode=False):
+    """RWKV-6 time-mix.  Prefill: x [B,S,d]. Decode: x [B,1,d] with carried
+    (x_prev [B,d], state [B,H,D,D])."""
+    b = x.shape[0]
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    mixed, last_x = _ddlerp(params, x, x_prev)
+    xr, xk, xv, xw, xg = mixed
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"])
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"])
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"])
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"])
+    w_log = -jnp.exp(
+        params["w0"].astype(jnp.float32)
+        + jnp.einsum("bsr,rd->bsd",
+                     jnp.tanh(jnp.einsum("bsd,dr->bsr",
+                                         xw.astype(jnp.float32),
+                                         params["wA"].astype(jnp.float32))),
+                     params["wB"].astype(jnp.float32)))
+    w_log = jnp.clip(w_log, -20.0, -1e-4)
+    shp = (b, -1, nh, hs)
+    r4, k4, v4 = (a.reshape(shp) for a in (r, k, v))
+    u = params["u"].reshape(nh, hs)
+    if decode:
+        o, state = wkv_decode_step(r4[:, 0], k4[:, 0], v4[:, 0],
+                                   jnp.exp(w_log.reshape(shp)[:, 0]), u, state)
+        o = o[:, None].reshape(b, 1, d)
+    else:
+        o, state = wkv_chunked(r4, k4, v4, w_log.reshape(shp), u, state)
+        o = o.reshape(b, -1, d)
+    o = _group_norm(o, params["ln_x_scale"], params["ln_x_bias"], nh)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    out = jnp.einsum("bsd,de->bse", o, params["wo"])
+    return out, (last_x, state)
+
+
+def channel_mix(params, x, cfg, x_prev=None):
+    """Squared-relu channel mix with token shift."""
+    b = x.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((b, cfg.d_model), x.dtype)
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mu = params["c_mu"].astype(jnp.float32)
+    xk = (x.astype(jnp.float32) * (1 - mu) + xs.astype(jnp.float32) * mu).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, params["ck"])
+    h = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["cv"]), x[:, -1]

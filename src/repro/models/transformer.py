@@ -1,0 +1,301 @@
+"""Decoder-only transformer stack with periodic layer patterns.
+
+The layer stack lowers as a ``lax.scan`` over *pattern groups* (one group =
+one period of ``cfg.layer_pattern``), with per-layer parameters stacked on a
+leading "stack" axis.  HLO size is therefore O(pattern period), not O(depth):
+qwen2-72b's 80 layers compile as a scan of 80 steps over one layer body.
+
+Layer kinds: "attn" (global), "swa" (sliding window), "mamba", "rwkv".
+MoE layers are determined by ``cfg.moe.every_n_layers`` (static within the
+period — enforced by ModelConfig).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rwkv6 as R
+from repro.models.ffn import ffn_init, ffn_apply
+from repro.models.moe import moe_init, moe_dispatch
+
+
+def scan_or_unroll(body, carry, xs, threshold: int = 2):
+    """lax.scan, or a python unroll when the trip count is tiny.
+
+    The unrolled form is what the dry-run's 1/2-group cost extrapolation
+    lowers (XLA cost analysis counts a while-loop body once, so scanned
+    stacks under-count by the trip count)."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if n > threshold:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = ys[0]
+    return carry, stacked
+
+
+def _is_moe_layer(cfg, j: int) -> bool:
+    return cfg.moe is not None and (j % cfg.moe.every_n_layers
+                                    == cfg.moe.every_n_layers - 1)
+
+
+def stack_init(key, cfg, *, n_layers: Optional[int] = None,
+               pattern: Optional[Tuple[str, ...]] = None):
+    """Stacked-by-group parameters for the layer stack."""
+    pattern = pattern or cfg.layer_pattern
+    n_layers = n_layers or cfg.n_layers
+    n_groups = n_layers // len(pattern)
+    layers = {}
+    for j, kind in enumerate(pattern):
+        kj = jax.random.fold_in(key, j)
+        ks = jax.random.split(kj, 4)
+        p: Dict[str, Any] = {"norm1": L.norm_init(cfg, cfg.d_model, stacked=n_groups)}
+        if kind in ("attn", "swa"):
+            p["attn"] = A.qkv_init(ks[0], cfg, stacked=n_groups)
+        elif kind == "mamba":
+            p["mamba"] = M.mamba_init(ks[0], cfg, stacked=n_groups)
+        elif kind == "rwkv":
+            p["rwkv"] = R.rwkv_init(ks[0], cfg, stacked=n_groups)
+        else:
+            raise ValueError(kind)
+        if kind != "rwkv":  # rwkv carries its own channel-mix
+            p["norm2"] = L.norm_init(cfg, cfg.d_model, stacked=n_groups)
+            if _is_moe_layer(cfg, j):
+                p["ffn"] = moe_init(ks[1], cfg, stacked=n_groups)
+            else:
+                p["ffn"] = ffn_init(ks[1], cfg, stacked=n_groups)
+        else:
+            p["norm2"] = L.norm_init(cfg, cfg.d_model, stacked=n_groups)
+        layers[f"l{j}"] = p
+    return {"layers": layers,
+            "final_norm": L.norm_init(cfg, cfg.d_model)}
+
+
+def init_caches(cfg, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+                pattern: Optional[Tuple[str, ...]] = None,
+                n_layers: Optional[int] = None, quant: bool = False):
+    """Decode caches, stacked over groups.  Returns (caches, specs).
+
+    ``quant=True`` stores K/V as int8 with per-(position, head) bf16 scales
+    (~0.5x the bf16 cache footprint — halves the decode HBM floor)."""
+    pattern = pattern or cfg.layer_pattern
+    n_layers = n_layers or cfg.n_layers
+    n_groups = n_layers // len(pattern)
+    hd = cfg.head_dim
+    caches = {}
+    for j, kind in enumerate(pattern):
+        if kind in ("attn", "swa"):
+            clen = min(cfg.sliding_window, max_len) if kind == "swa" and \
+                cfg.sliding_window else max_len
+            shape = (n_groups, batch, clen, cfg.n_kv_heads, hd)
+            logical = ("stack", "cache_batch", "cache_seq", "cache_heads", None)
+            if quant:
+                sshape = shape[:-1] + (1,)
+                caches[f"l{j}"] = {
+                    "k": L.Param(jnp.zeros(shape, jnp.int8), logical),
+                    "v": L.Param(jnp.zeros(shape, jnp.int8), logical),
+                    "k_scale": L.Param(jnp.zeros(sshape, dtype), logical),
+                    "v_scale": L.Param(jnp.zeros(sshape, dtype), logical),
+                }
+            else:
+                caches[f"l{j}"] = {
+                    "k": L.Param(jnp.zeros(shape, dtype), logical),
+                    "v": L.Param(jnp.zeros(shape, dtype), logical),
+                }
+        elif kind == "mamba":
+            di = cfg.mamba_expand * cfg.d_model
+            caches[f"l{j}"] = {
+                "conv": L.Param(jnp.zeros((n_groups, batch, cfg.mamba_d_conv - 1, di),
+                                          dtype),
+                                ("stack", "cache_batch", None, "ssm_inner")),
+                "ssm": L.Param(jnp.zeros((n_groups, batch, di, cfg.mamba_d_state),
+                                         jnp.float32),
+                               ("stack", "cache_batch", "ssm_inner", "ssm_state")),
+            }
+        elif kind == "rwkv":
+            hs = cfg.rwkv_head_size
+            nh = cfg.d_model // hs
+            caches[f"l{j}"] = {
+                "x_tm": L.Param(jnp.zeros((n_groups, batch, cfg.d_model), dtype),
+                                ("stack", "cache_batch", "embed")),
+                "x_cm": L.Param(jnp.zeros((n_groups, batch, cfg.d_model), dtype),
+                                ("stack", "cache_batch", "embed")),
+                "state": L.Param(jnp.zeros((n_groups, batch, nh, hs, hs), jnp.float32),
+                                 ("stack", "cache_batch", "heads", None, None)),
+            }
+    return L.split_params(caches)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _quantize_kv(x):
+    """[B,S,H,D] -> (int8 values, bf16 per-(pos,head) scales)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xf / jnp.maximum(scale, 1e-8)).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequant_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def _dus_batch(cache, new, slot):
+    return jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+        c, n, s, axis=0))(cache, new, slot)
+
+
+def _attn_layer(p, x, cfg, kind, *, mode, positions, cache, cur_len, impl,
+                mask_mode):
+    window = cfg.sliding_window if kind == "swa" else 0
+    q, k, v = A.project_qkv(p["attn"], x, cfg, positions)
+    quant = cache is not None and "k_scale" in cache
+    if mode == "decode":
+        clen = cache["k"].shape[1]
+        is_ring = bool(window) and clen <= window
+        slot = positions[:, 0] % clen                     # ring (or identity) slot
+        if quant:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new_cache = {"k": _dus_batch(cache["k"], kq, slot),
+                         "v": _dus_batch(cache["v"], vq, slot),
+                         "k_scale": _dus_batch(cache["k_scale"], ks, slot),
+                         "v_scale": _dus_batch(cache["v_scale"], vs, slot)}
+            k_cache = _dequant_kv(new_cache["k"], new_cache["k_scale"])
+            v_cache = _dequant_kv(new_cache["v"], new_cache["v_scale"])
+        else:
+            k_cache = _dus_batch(cache["k"], k, slot)
+            v_cache = _dus_batch(cache["v"], v, slot)
+            new_cache = {"k": k_cache, "v": v_cache}
+        if is_ring:
+            # the ring holds exactly the last <=window tokens; validity only
+            o = A.decode_attention(q, k_cache, v_cache,
+                                   jnp.minimum(cur_len, clen), window=0)
+        elif impl == "pallas":
+            # FKE serving kernel: block-skipped single-token flash decode
+            from repro.kernels.flash_decode import flash_decode
+            lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32),
+                                    (q.shape[0],))
+            o = flash_decode(q[:, 0], k_cache.astype(q.dtype),
+                             v_cache.astype(q.dtype), lens,
+                             window=window)[:, None]
+        else:
+            o = A.decode_attention(q, k_cache, v_cache, cur_len, window=window)
+    else:
+        eff_mode = "sliding" if (kind == "swa" and window) else mask_mode
+        o = A.attention(q, k, v, eff_mode, impl=impl, window=window)
+        new_cache = None
+        if cache is not None:  # prefill into cache buffers
+            clen = cache["k"].shape[1]
+            s = k.shape[1]
+            if clen < s:
+                # ring cache: position p sits at slot p % clen; the last clen
+                # positions [s-clen, s) land at slots rolled by s % clen.
+                k_w, v_w = jnp.roll(k[:, -clen:], s % clen, axis=1), \
+                    jnp.roll(v[:, -clen:], s % clen, axis=1)
+            else:
+                pad = clen - s
+                k_w = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v_w = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if quant:
+                kq, ks = _quantize_kv(k_w)
+                vq, vs = _quantize_kv(v_w)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": k_w, "v": v_w}
+    return A.project_out(p["attn"], o), new_cache
+
+
+def layer_apply(p, x, cfg, kind, j, *, mode, positions, cache, cur_len,
+                impl, mask_mode):
+    """One (mixer + ffn) layer.  Returns (x, new_cache, aux)."""
+    from repro import sharding as shd
+    aux = {}
+    x = shd.constrain_ctx(x, "batch", "seq", None)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    new_cache = cache
+    if kind in ("attn", "swa"):
+        y, new_cache = _attn_layer(p, h, cfg, kind, mode=mode, positions=positions,
+                                   cache=cache, cur_len=cur_len, impl=impl,
+                                   mask_mode=mask_mode)
+    elif kind == "mamba":
+        state = (cache["conv"], cache["ssm"]) if cache is not None else None
+        y, (conv_s, ssm_s) = M.mamba_apply(p["mamba"], h, cfg, state=state,
+                                           decode=(mode == "decode"))
+        new_cache = {"conv": conv_s, "ssm": ssm_s} if cache is not None else None
+    elif kind == "rwkv":
+        x_prev = cache["x_tm"] if cache is not None else None
+        st = cache["state"] if cache is not None else None
+        y, (last_x, st_new) = R.time_mix(p["rwkv"], h, cfg, x_prev=x_prev,
+                                         state=st, decode=(mode == "decode"))
+        new_cache = dict(cache) if cache is not None else None
+        if new_cache is not None:
+            new_cache["x_tm"] = last_x
+            new_cache["state"] = st_new
+    x = x + y
+
+    h2 = L.apply_norm(cfg, p["norm2"], x)
+    if kind == "rwkv":
+        x_prev_cm = cache["x_cm"] if cache is not None else None
+        f, last_cm = R.channel_mix(p["rwkv"], h2, cfg, x_prev=x_prev_cm)
+        if new_cache is not None:
+            new_cache["x_cm"] = last_cm
+    elif _is_moe_layer(cfg, j):
+        f, aux = moe_dispatch(p["ffn"], h2, cfg, impl=impl)
+        f = shd.constrain_ctx(f, "batch", "seq", None)
+    else:
+        f = ffn_apply(p["ffn"], h2, cfg, impl=impl)
+    return x + f, new_cache, aux
+
+
+def stack_apply(params, x, cfg, *, mode: str, positions, caches=None,
+                cur_len=None, impl: str = "chunked", mask_mode: str = "causal",
+                pattern: Optional[Tuple[str, ...]] = None, remat: bool = False):
+    """Run the full layer stack.  Returns (x, new_caches, aux_sums)."""
+    pattern = pattern or cfg.layer_pattern
+
+    def group_fn(x, group_params, group_caches):
+        aux_sum = {"load_balance_loss": 0.0, "router_z_loss": 0.0}
+        new_caches = {}
+        for j, kind in enumerate(pattern):
+            cj = group_caches.get(f"l{j}") if group_caches is not None else None
+            x, nc, aux = layer_apply(
+                group_params[f"l{j}"], x, cfg, kind, j, mode=mode,
+                positions=positions, cache=cj, cur_len=cur_len, impl=impl,
+                mask_mode=mask_mode)
+            if nc is not None:
+                new_caches[f"l{j}"] = nc
+            for k_, v_ in aux.items():
+                if k_ in aux_sum:
+                    aux_sum[k_] = aux_sum[k_] + v_
+        return x, new_caches, aux_sum
+
+    if remat:
+        group_fn = jax.checkpoint(group_fn)
+
+    def scan_body(carry, xs):
+        x, aux_acc = carry
+        gp, gc = xs
+        x, new_caches, aux = group_fn(x, gp, gc)
+        aux_acc = {k_: aux_acc[k_] + aux[k_] for k_ in aux_acc}
+        return (x, aux_acc), new_caches
+
+    aux0 = {"load_balance_loss": jnp.zeros((), jnp.float32),
+            "router_z_loss": jnp.zeros((), jnp.float32)}
+    (x, aux), new_caches = scan_or_unroll(
+        scan_body, (x, aux0), (params["layers"], caches))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, (new_caches if caches is not None else None), aux

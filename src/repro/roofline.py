@@ -1,0 +1,219 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (lower bound per step):
+
+    compute    = HLO_FLOPs            / (chips * peak_FLOP/s)
+    memory     = HLO_bytes_accessed   / (chips * HBM_bw)
+    collective = collective_bytes     / (chips * ICI link bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-partition
+module, multiplied back to all chips).  Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD HLO text and sum the result sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (all-reduce counted 2x: reduce-scatter + all-gather phases).
+
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), with N = active params —
+the "useful compute" yardstick; HLO/MODEL ratio exposes remat & masked-FLOP
+waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.types import HardwareSpec, TPU_V5E, ModelConfig, ShapeConfig
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every 'dtype[dims]' group in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind result bytes of collectives in post-partitioning HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.  %all-gather.3 = bf16[16,8192]{1,0} all-gather(...)
+        m = re.match(r"%?[\w.\-]+ = (\(?[^)=]*\)?) ([\w\-]+)\(", s)
+        if not m:
+            continue
+        typ, op = m.groups()
+        # start variants: all-gather-start etc.
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES:
+            b = _shape_bytes(typ)
+            if base == "all-reduce":
+                b *= 2          # ring AR = reduce-scatter + all-gather phases
+            out[base] += b
+            counts[base] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # whole-job FLOPs (all chips)
+    hlo_bytes: float            # whole-job HBM bytes
+    collective_bytes: float     # whole-job bytes through ICI
+    model_flops: float          # analytic useful FLOPs
+    compute_s: float
+    memory_s: float                    # from XLA bytes-accessed (unfused UB)
+    collective_s: float
+    memory_s_est: float = 0.0          # fusion-aware analytic HBM estimate
+    per_device_peak_memory: Optional[float] = None
+    collective_detail: Optional[dict] = None
+
+    @property
+    def dominant(self) -> str:
+        """Bottleneck using the fusion-aware memory estimate (the XLA
+        bytes-accessed term is an unfused upper bound, see EXPERIMENTS.md)."""
+        terms = {"compute": self.compute_s,
+                 "memory": self.memory_s_est or self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_ratio"] = self.useful_ratio
+        return d
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Fusion-aware whole-job HBM-traffic estimate.
+
+    XLA:CPU ``bytes accessed`` counts every operand/result of the *unfused*
+    HLO — an upper bound ~2 orders above real TPU HBM traffic where most
+    intermediates stay in VMEM/registers.  This estimate counts what must
+    cross HBM: parameter reads (per pass), activation writes+reads at layer
+    granularity, optimizer state traffic, KV-cache traffic, logits.
+    """
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    bpe = 2  # bf16
+    if shape.kind == "decode":
+        toks = shape.global_batch
+        # weights read once; KV cache read fully per token; tiny writes
+        n_attn = sum(1 for k in cfg.layer_pattern if k in ("attn", "swa"))
+        n_attn = n_attn * cfg.n_groups + (L if cfg.enc_dec else 0)
+        cache_len = shape.seq_len
+        win = cfg.sliding_window or shape.seq_len
+        cache = 0.0
+        for kind in cfg.layer_pattern:
+            if kind == "attn":
+                cache += cfg.n_groups * 2 * cfg.n_kv_heads * cfg.head_dim * \
+                    cache_len * bpe
+            elif kind == "swa":
+                cache += cfg.n_groups * 2 * cfg.n_kv_heads * cfg.head_dim * \
+                    min(win, cache_len) * bpe
+        cache *= shape.global_batch
+        return p_active * bpe + cache + toks * v * bpe
+    toks = shape.seq_len * shape.global_batch
+    if shape.n_candidates:
+        toks = (shape.seq_len + shape.n_candidates) * shape.global_batch
+    act_per_layer = toks * (8 * d + 2 * f) * bpe      # w+r at layer granularity
+    logits = toks * v * (bpe + 4)
+    if shape.kind == "prefill":
+        return p_active * bpe + L * act_per_layer + logits
+    # train: fwd + bwd + remat fwd ~ 3 passes over weights; grads f32 w+r;
+    # adam mu/nu r+w f32; master param r+w
+    weight_traffic = p_total * (3 * bpe + 8 + 16 + 8)
+    return weight_traffic + 3 * L * act_per_layer + 2 * logits
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        if shape.n_candidates:
+            tokens = (shape.seq_len + shape.n_candidates) * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyse(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, cfg: ModelConfig, shape: ShapeConfig,
+            hw: HardwareSpec = TPU_V5E,
+            per_device_peak_memory: Optional[float] = None,
+            params_bytes_chip: Optional[float] = None,
+            cache_bytes_chip: Optional[float] = None) -> RooflineReport:
+    """cost = compiled.cost_analysis() (per-partition); scale to all chips.
+
+    ``params_bytes_chip`` / ``cache_bytes_chip``: ACTUAL per-chip shard bytes
+    (from the resolved shardings).  When given, the memory estimate charges
+    each chip its real weight/cache reads — a TP-sharded model reads its 1/TP
+    shard per step regardless of how many chips the job has.
+    """
+    flops = float(cost.get("flops", 0.0)) * chips
+    byts = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = collective_bytes_from_hlo(hlo_text)
+    coll_total = coll["total"] * chips   # per-partition HLO -> whole job
+    if params_bytes_chip is not None:
+        w_factor = 19.0 if shape.kind == "train" else 1.0   # passes + opt f32
+        est_chip = w_factor * params_bytes_chip + (cache_bytes_chip or 0.0) \
+            + (analytic_act_bytes(cfg, shape) / chips)
+        mem_est = est_chip / hw.hbm_bw
+    else:
+        mem_est = analytic_hbm_bytes(cfg, shape) / (chips * hw.hbm_bw)
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=coll_total,
+        model_flops=model_flops(cfg, shape),
+        compute_s=flops / (chips * hw.peak_flops),
+        memory_s=byts / (chips * hw.hbm_bw),
+        collective_s=coll_total / (chips * hw.ici_bw),
+        memory_s_est=mem_est,
+        per_device_peak_memory=per_device_peak_memory,
+        collective_detail={k: v for k, v in coll.items() if k != "counts"},
+    )
+
+
+def analytic_act_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Whole-job activation + logits HBM traffic (layer granularity)."""
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    bpe = 2
+    if shape.kind == "decode":
+        return shape.global_batch * v * bpe
+    toks = shape.seq_len * shape.global_batch
+    if shape.n_candidates:
+        toks = (shape.seq_len + shape.n_candidates) * shape.global_batch
+    act = toks * (8 * d + 2 * f) * bpe * L
+    logits = toks * v * (bpe + 4)
+    return (3 * act + 2 * logits) if shape.kind == "train" else (act + logits)

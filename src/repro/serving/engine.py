@@ -1,0 +1,174 @@
+"""Serving engines: the full FLAME pipeline and a text-decoder engine.
+
+FlameEngine — the paper's system end to end:
+
+  request --> PDA (feature query w/ cache; packed transfer)
+          --> DSO (descending-bucket split onto AOT executors)
+          --> FKE/model (SUMI-masked Climber forward)
+          --> per-candidate multi-task scores
+
+TextServingEngine — prefill+decode serving for the decode-based assigned
+architectures (used by examples/ and tests; the pod-scale path is exercised
+by the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dso as DSO
+from repro.core import pda as PDA
+from repro.core.climber import N_SIDE_FEATURES, climber_forward
+from repro.models.model import ModelBundle
+from repro.serving.kv_cache import KVCacheManager
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    requests: int = 0
+    items: int = 0
+    first_t: float = 0.0
+    last_t: float = 0.0
+    latencies: list = dataclasses.field(default_factory=list)
+
+    def record(self, n_items: int, latency_s: float):
+        now = time.perf_counter()
+        if self.requests == 0:
+            self.first_t = now - latency_s
+        self.last_t = now
+        self.requests += 1
+        self.items += n_items
+        self.latencies.append(latency_s)
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.array(self.latencies) if self.latencies else np.zeros(1)
+        wall = max(self.last_t - self.first_t, 1e-9)
+        return {
+            "requests": self.requests,
+            "throughput_items_per_s": self.items / wall,
+            "mean_latency_ms": float(lat.mean() * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+        }
+
+
+class FlameEngine:
+    """PDA -> DSO -> Climber, per the paper's Fig 1/Fig 4."""
+
+    def __init__(self, bundle: ModelBundle, params, *, n_history: int,
+                 buckets: Sequence[int] = (512, 256, 128),
+                 n_streams: int = 2,
+                 feature_mode: str = "sync",
+                 cache_capacity: int = 50_000, cache_ttl_s: float = 30.0,
+                 store: Optional[PDA.RemoteFeatureStore] = None,
+                 packed: bool = True):
+        self.bundle = bundle
+        self.params = params
+        self.cfg = bundle.cfg
+        self.n_history = n_history
+        self.packed = packed
+
+        # ---- PDA ----
+        self.store = store or PDA.RemoteFeatureStore(
+            feature_dim=N_SIDE_FEATURES)
+        cache = None if feature_mode == "off" else PDA.BucketedLRUCache(
+            cache_capacity, cache_ttl_s)
+        self.features = PDA.FeatureQueryEngine(self.store, cache,
+                                               mode=feature_mode)
+
+        # ---- DSO over AOT executors (FKE inside) ----
+        def build_fn(bucket: int):
+            def fn(history, candidates, side):
+                batch = {"history": history, "candidates": candidates,
+                         "side": side}
+                return bundle.prefill(self.params, batch)
+            shapes = (
+                jax.ShapeDtypeStruct((1, n_history), jnp.int32),
+                jax.ShapeDtypeStruct((1, bucket), jnp.int32),
+                jax.ShapeDtypeStruct((1, N_SIDE_FEATURES), jnp.float32),
+            )
+            return jax.jit(fn).lower(*shapes).compile()
+
+        self.pool = DSO.ExecutorPool(build_fn, buckets, n_streams=n_streams)
+        self.dso = DSO.DynamicStreamOrchestrator(
+            self.pool, self._pad_slice, self._gather)
+        self.metrics = ServeMetrics()
+
+    # ---- request plumbing ----
+    def _side_features(self, history: np.ndarray) -> np.ndarray:
+        """PDA in action: fetch item features for the history, aggregate into
+        the request's side-feature vector (user-profile style)."""
+        feats = self.features.query([int(i) for i in history])
+        got = [v for v in feats.values() if v is not None]
+        if not got:
+            return np.zeros((1, N_SIDE_FEATURES), np.float32)
+        return np.mean(got, axis=0, keepdims=True).astype(np.float32)
+
+    def _pad_slice(self, request, chunk: DSO.Chunk):
+        history, candidates, side = request
+        sl = candidates[:, chunk.start:chunk.start + chunk.valid]
+        if chunk.valid < chunk.bucket:
+            sl = jnp.pad(sl, ((0, 0), (0, chunk.bucket - chunk.valid)))
+        return history, sl, side
+
+    def _gather(self, results, chunks: List[DSO.Chunk], m: int):
+        parts = [np.asarray(r[:, :c.valid]) for r, c in zip(results, chunks)]
+        return np.concatenate(parts, axis=1)
+
+    def serve(self, history: np.ndarray, candidates: np.ndarray):
+        """One SUMI request: history [n], candidates [M] -> scores [M, tasks]."""
+        t0 = time.perf_counter()
+        side = self._side_features(history)
+        if self.packed:
+            side_dev, = PDA.packed_transfer([side])
+        else:
+            side_dev, = PDA.unpacked_transfer([side])
+        hist = jnp.asarray(history[None, :self.n_history], jnp.int32)
+        cand = jnp.asarray(candidates[None], jnp.int32)
+        out = self.dso.score((hist, cand, side_dev), candidates.shape[0])
+        dt = time.perf_counter() - t0
+        self.metrics.record(candidates.shape[0], dt)
+        return out[0]
+
+    def shutdown(self):
+        self.features.shutdown()
+        self.dso.shutdown()
+
+
+class TextServingEngine:
+    """Continuous-batching-lite decode serving for text architectures."""
+
+    def __init__(self, bundle: ModelBundle, params, *, batch: int = 4,
+                 max_len: int = 256, **cache_kw):
+        self.bundle = bundle
+        self.params = params
+        self.kv = KVCacheManager(bundle, batch, max_len, **cache_kw)
+        self._decode = jax.jit(
+            lambda p, c, b: bundle.decode_step(p, c, b))
+
+    def generate(self, prompts: List[np.ndarray], n_tokens: int = 16,
+                 greedy: bool = True) -> List[np.ndarray]:
+        """Serve a batch of prompts (token id arrays) for n_tokens each."""
+        assert len(prompts) <= self.kv.batch
+        plen = max(len(p) for p in prompts)
+        padded = np.stack([np.pad(p, (0, plen - len(p))) for p in prompts])
+        batch = {"tokens": jnp.asarray(padded, jnp.int32)}
+        # prefill all at once (batch-padded)
+        caches, _ = self.bundle.cache_init(len(prompts), self.kv.max_len)
+        logits, caches = self.bundle.prefill(self.params, batch, caches=caches)
+        last = jnp.argmax(logits[:, -1], axis=-1)
+        outs = [[int(t)] for t in last]
+        cur = plen
+        for _ in range(n_tokens - 1):
+            step = {"tokens": last[:, None].astype(jnp.int32),
+                    "cur_index": jnp.int32(cur)}
+            logits, caches = self._decode(self.params, caches, step)
+            last = jnp.argmax(logits[:, -1], axis=-1)
+            for i, t in enumerate(last):
+                outs[i].append(int(t))
+            cur += 1
+        return [np.array(o) for o in outs]

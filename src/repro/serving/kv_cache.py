@@ -1,0 +1,57 @@
+"""Batched KV-cache slot manager for text-decoder serving.
+
+Maintains one batched cache pytree (from bundle.cache_init) plus per-slot
+lengths; requests are assigned to free slots, prefilled, and decoded in
+lockstep (continuous-batching-lite).  Small-scale CPU serving substrate for
+the decode-based architectures; the dry-run exercises the pod-scale shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Slot:
+    active: bool = False
+    length: int = 0
+    request_id: int = -1
+    tokens: Optional[list] = None
+
+
+class KVCacheManager:
+    def __init__(self, bundle, batch: int, max_len: int, **kw):
+        self.bundle = bundle
+        self.batch = batch
+        self.max_len = max_len
+        self.caches, self.cache_specs = bundle.cache_init(batch, max_len, **kw)
+        self.slots = [Slot() for _ in range(batch)]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def assign(self, request_id: int, prompt_len: int) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free KV-cache slots")
+        i = free[0]
+        self.slots[i] = Slot(True, prompt_len, request_id, [])
+        return i
+
+    def release(self, slot: int):
+        self.slots[slot] = Slot()
+
+    def write_prefill(self, slot: int, caches_one):
+        """Insert a single-sequence cache (batch=1, stacked-layer axis 0) into
+        batch position ``slot`` of the pooled cache."""
+        self.caches = jax.tree.map(
+            lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=1),
+            self.caches, caches_one)
+
+    def lengths(self) -> np.ndarray:
+        return np.array([s.length for s in self.slots], np.int32)

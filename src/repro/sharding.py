@@ -1,0 +1,172 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Model code annotates every parameter and activation with *logical* axis names
+("batch", "heads", "mlp", "experts", ...).  A rule table maps each logical name
+to one or more *mesh* axes.  ``logical_to_spec`` resolves the mapping against a
+concrete mesh and array shape, silently dropping mesh axes that do not divide
+the dimension — this is what guarantees that every (arch x shape x mesh)
+combination lowers, even when e.g. 8 KV heads meet a 16-way model axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+# logical axis -> tuple of mesh axes (tried in order, composed when all divide)
+DEFAULT_RULES = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                       # replicated by default
+    "seq_shard": ("data",),          # long-context: shard sequence over data
+    "act_model": ("model",),
+    # parameters
+    "embed": (),                     # the d_model axis of params: replicated
+    "embed_fsdp": ("data",),         # FSDP: shard d_model of big tables over data
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv_dim": (),
+    "mlp": ("model",),
+    "experts": ("pod", "data"),      # expert-parallel over the data/pod axes
+    "expert_mlp": ("model",),
+    "tokens": ("pod", "data"),      # flattened (batch*seq) token axis
+    # kv-cache
+    "cache_batch": ("pod", "data"),
+    "cache_seq": (),
+    "cache_seq_shard": ("data",),
+    "cache_heads": ("model",),
+    # mamba / rwkv state
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "stack": (),                     # stacked-layer leading axis: never sharded
+}
+
+
+def resolve_rules(mesh: Mesh) -> dict:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+    return {k: tuple(a for a in v if a in names) for k, v in DEFAULT_RULES.items()}
+
+
+def rules_for_shape(mesh: Mesh, global_batch: int, fsdp: bool = True) -> dict:
+    """Workload-adapted rules.
+
+    - ``fsdp``: shard every parameter's d_model ("embed") axis over the data
+      axis (ZeRO-3) so 70B-1T models fit per-chip HBM; optimizer states
+      inherit the same sharding.
+    - batch-1 workloads (long_500k): the batch axis is unshardable, so the
+      KV-cache sequence axis takes over the data (and model, via fallback)
+      axes instead.
+    """
+    rules = dict(resolve_rules(mesh))
+    if fsdp:
+        rules["embed"] = tuple(a for a in ("data",) if a in mesh.axis_names)
+    batch_ways = 1
+    for a in rules.get("batch", ()):
+        batch_ways *= mesh.shape[a]
+    if global_batch < max(batch_ways, 2):
+        names = mesh.axis_names
+        rules["cache_seq"] = tuple(a for a in ("data", "model") if a in names)
+        rules["seq"] = tuple(a for a in ("data",) if a in names)
+    return rules
+
+
+def logical_to_spec(logical: Logical, shape: Sequence[int], mesh: Mesh,
+                    rules: Optional[dict] = None) -> P:
+    """Resolve logical axis names to a PartitionSpec with divisibility fallback."""
+    rules = rules or resolve_rules(mesh)
+    used = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            entries.append(None)
+            continue
+        axes = rules.get(name, ())
+        picked = []
+        rem = dim
+        for ax in axes:
+            if ax in used:
+                continue
+            size = mesh.shape[ax]
+            if rem % size == 0:
+                picked.append(ax)
+                used.add(ax)
+                rem //= size
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    # PartitionSpec trailing Nones are implicit
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def logical_to_sharding(logical: Logical, shape: Sequence[int], mesh: Mesh,
+                        rules: Optional[dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical, shape, mesh, rules))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh, rules: Optional[dict] = None):
+    """Map a pytree of logical tuples + matching ShapeDtypeStructs to shardings."""
+    rules = rules or resolve_rules(mesh)
+    return jax.tree.map(
+        lambda logical, sds: logical_to_sharding(logical, sds.shape, mesh, rules),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x, mesh: Mesh, *logical: Optional[str]):
+    """with_sharding_constraint by logical names; no-op outside a mesh context."""
+    try:
+        spec = logical_to_spec(tuple(logical), x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+class AxisSpec:
+    """Tiny helper so init functions can write ``ax('stack','embed','mlp')``."""
+
+    def __call__(self, *names: Optional[str]) -> Logical:
+        return tuple(names)
+
+ax = AxisSpec()
+
+
+# ---------------------------------------------------------------------------
+# tracing-time sharding context: model code calls constrain_ctx(...) which is
+# a no-op unless a mesh+rules context is active (set by the dry-run/launcher).
+# ---------------------------------------------------------------------------
+
+import contextlib
+import contextvars
+
+_ACTIVE: "contextvars.ContextVar" = contextvars.ContextVar(
+    "repro_active_mesh_rules", default=None)
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Mesh, rules: Optional[dict] = None):
+    token = _ACTIVE.set((mesh, rules or resolve_rules(mesh)))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def constrain_ctx(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical names against the active context."""
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = logical_to_spec(tuple(logical), x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

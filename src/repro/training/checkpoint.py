@@ -1,0 +1,61 @@
+"""Msgpack checkpointing (orbax is not available in this env).
+
+Arrays are serialized with dtype/shape preserved (bf16 via uint16 view).
+Layout: one file per checkpoint, {step, tree: flattened {path: array}}.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_array(a) -> Dict[str, Any]:
+    a = np.asarray(a)
+    if a.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(a.shape),
+                "data": a.view(np.uint16).tobytes()}
+    return {"dtype": a.dtype.str, "shape": list(a.shape), "data": a.tobytes()}
+
+
+def _decode_array(d) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, tree, step: int = 0):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = {"step": step,
+               "tree": {k: _encode_array(v) for k, v in _flatten(tree).items()}}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat = {k: _decode_array(v) for k, v in payload["tree"].items()}
+    keys = list(_flatten(like).keys())
+    missing = [k for k in keys if k not in flat]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    leaves_like, treedef = jax.tree.flatten(like)
+    restored = [jnp.asarray(flat[k]) for k in keys]
+    return treedef.unflatten(restored), payload["step"]

@@ -1,0 +1,53 @@
+"""Training loop: jitted train_step composition + host-side driver."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelBundle
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig,
+                    impl: str = "chunked") -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics), jittable."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: bundle.loss_fn(p, batch, impl=impl), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def train(bundle: ModelBundle, batches: Iterator[Dict], n_steps: int,
+          opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+          log_every: int = 10, impl: str = "chunked",
+          params=None, callback: Optional[Callable] = None):
+    """Host driver: returns (params, opt_state, history)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    if params is None:
+        params, _ = bundle.init(jax.random.key(seed))
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(bundle, opt_cfg, impl=impl),
+                      donate_argnums=(0, 1))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(n_steps):
+        batch = next(batches)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            metrics["wall_s"] = time.perf_counter() - t0
+            history.append(metrics)
+            if callback:
+                callback(metrics)
+    jax.block_until_ready(params)
+    return params, opt_state, history

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers / one compressed pattern period, d_model<=256, <=4 experts) runs a
+real forward and a real train step on CPU; output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced_config
+from repro.models import build_model
+from repro.training.loop import make_train_step
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+B, S = 2, 64
+
+
+def _batch(cfg, key=1):
+    batch = {"tokens": jax.random.randint(jax.random.key(key), (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.modality == "vision":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.key(key + 1), (B, 16, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(key + 2), (B, 16, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_forward_and_shapes(arch):
+    cfg = reduced_config(arch)
+    assert cfg.n_layers <= max(2, len(cfg.layer_pattern))
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    bundle = build_model(cfg)
+    params, specs = bundle.init(jax.random.key(0))
+    logits = bundle.prefill(params, _batch(cfg))
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab_size
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = reduced_config(arch)
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    opt_state = adamw_init(params)
+    step = jax.jit(make_train_step(bundle, AdamWConfig(lr=1e-3)))
+    params, opt_state, metrics = step(params, opt_state, _batch(cfg))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss)
+    # ~ln(vocab) at init (untrained); generous envelope
+    assert 1.0 < loss < 2.5 * np.log(cfg.vocab_size)
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned dimensions."""
+    expect = {
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    }
+    for arch, (L, d, h, kv, f, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers + c.n_enc_layers, c.d_model, c.n_heads,
+                c.n_kv_heads, c.d_ff, c.vocab_size) == (L, d, h, kv, f, v), arch
+    c = get_config("seamless-m4t-large-v2")
+    assert c.n_layers + c.n_enc_layers == 24 and c.d_model == 1024
+    assert c.vocab_size == 256206 and c.d_ff == 8192
+    # MoE specifics
+    kimi = get_config("kimi-k2-1t-a32b").moe
+    assert kimi.num_experts == 384 and kimi.top_k == 8
+    mav = get_config("llama4-maverick-400b-a17b").moe
+    assert mav.num_experts == 128 and mav.top_k == 1
+    jam = get_config("jamba-v0.1-52b").moe
+    assert jam.num_experts == 16 and jam.top_k == 2
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "gemma3-12b",
+                                  "jamba-v0.1-52b", "rwkv6-7b",
+                                  "seamless-m4t-large-v2"])
+def test_reduced_decode_matches_prefill(arch):
+    """One decode step with a cache == last-position logits of a one-token-
+    longer prefill (exercises KV/ring/ssm/rwkv caches per family)."""
+    cfg = reduced_config(arch)
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+    kw = {"n_frames": 16} if cfg.enc_dec else {}
+    caches, _ = bundle.cache_init(B, S + 4, **kw)
+    _, caches2 = bundle.prefill(params, batch, caches=caches, impl="reference")
+    nt = jax.random.randint(jax.random.key(9), (B, 1), 0, cfg.vocab_size)
+    logits_dec, _ = bundle.decode_step(
+        params, caches2, {"tokens": nt, "cur_index": jnp.int32(S)})
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([toks, nt], axis=1)
+    logits_full = bundle.prefill(params, b2, impl="reference")
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1], np.float32),
+        np.asarray(logits_dec[:, 0], np.float32), atol=0.06, rtol=0.05)

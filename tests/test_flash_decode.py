@@ -1,0 +1,84 @@
+"""Flash-decode Pallas kernel: shape/dtype sweep vs oracle + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import ops, ref
+
+CASES = [
+    (2, 4, 2, 512, 64, 0, 128),
+    (1, 8, 8, 300, 64, 0, 64),
+    (2, 4, 1, 512, 128, 100, 128),   # GQA 4:1 + sliding window
+    (3, 2, 2, 256, 96, 0, 64),       # lane-padded head dim
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[f"s{c[3]}d{c[4]}w{c[5]}" for c in CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_vs_oracle(case, dtype):
+    b, h, hkv, s, d, w, bk = case
+    ks = jax.random.split(jax.random.key(s + d), 4)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    lens = jax.random.randint(ks[3], (b,), max(1, w + 1), s + 1)
+    out = ops.flash_decode(q, kc, vc, lens, window=w, bk=bk)
+    exp = ref.reference(q, kc, vc, lens, window=w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_decode_ignores_past_length():
+    """Cache contents beyond `length` must not affect the output (the
+    block-skipping property that makes HBM traffic scale with the valid
+    prefix)."""
+    b, h, s, d = 2, 2, 256, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, s, h, d))
+    vc = jax.random.normal(ks[2], (b, s, h, d))
+    lens = jnp.array([100, 180])
+    out1 = ops.flash_decode(q, kc, vc, lens, bk=64)
+    kc2 = kc.at[:, 200:].set(1e4)
+    vc2 = vc.at[:, 200:].set(-1e4)
+    out2 = ops.flash_decode(q, kc2, vc2, lens, bk=64)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """Same semantics as the model's jnp decode path (uniform lengths)."""
+    from repro.models.attention import decode_attention
+    b, h, hkv, s, d = 2, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    cur = 77
+    jnp_out = decode_attention(q, kc, vc, cur_len=cur)
+    pl_out = ops.flash_decode(q[:, 0], kc, vc, jnp.full((b,), cur), bk=64)
+    np.testing.assert_allclose(np.asarray(jnp_out[:, 0]), np.asarray(pl_out),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_model_decode_step_pallas_impl():
+    """decode_step(impl='pallas') routes through the flash-decode kernel and
+    matches the reference decode path end to end."""
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    cfg = reduced_config("qwen2-72b")   # global-attention arch (non-ring)
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    B, S = 2, 48
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    caches, _ = bundle.cache_init(B, S + 4)
+    _, c2 = bundle.prefill(params, {"tokens": toks}, caches=caches,
+                           impl="reference")
+    nt = jax.random.randint(jax.random.key(2), (B, 1), 0, cfg.vocab_size)
+    step = {"tokens": nt, "cur_index": jnp.int32(S)}
+    ref_out, _ = bundle.decode_step(params, c2, step, impl="reference")
+    pal_out, _ = bundle.decode_step(params, c2, step, impl="pallas")
+    np.testing.assert_allclose(np.asarray(ref_out, np.float32),
+                               np.asarray(pal_out, np.float32),
+                               atol=3e-2, rtol=3e-2)

@@ -1,0 +1,138 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles
+(interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.fused_ffn import ops as ffn_ops
+from repro.kernels.fused_ffn import ref as ffn_ref
+from repro.kernels.rwkv6_scan import ops as rwkv_ops
+from repro.kernels.rwkv6_scan import ref as rwkv_ref
+
+
+FA_CASES = [
+    # b, h, hkv, sq, sk, d, mode, window, n_hist
+    (2, 4, 2, 256, 256, 64, "causal", 0, 0),
+    (1, 2, 2, 200, 200, 64, "full", 0, 0),
+    (1, 4, 1, 384, 384, 128, "sliding", 100, 0),
+    (2, 2, 2, 130, 130, 32, "sliding", 64, 0),
+    (1, 2, 2, 300, 300, 64, "sumi", 0, 200),
+    (1, 2, 1, 160, 160, 96, "sumi", 0, 100),   # non-128-aligned d, gqa
+    (1, 8, 8, 64, 64, 64, "causal", 0, 0),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES, ids=[f"{c[6]}-{c[3]}" for c in FA_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_oracle(case, dtype):
+    b, h, hkv, sq, sk, d, mode, w, nh = case
+    ks = jax.random.split(jax.random.key(hash(mode) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    out = fa_ops.flash_attention_bhsd(q, k, v, mode, window=w, n_history=nh,
+                                      bq=64, bk=64)
+    exp = fa_ref.reference(q, k, v, mode, window=w, n_history=nh)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_sweep():
+    """Same problem, several BlockSpec tilings -> identical results."""
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 320, 64))
+    k = jax.random.normal(ks[1], (1, 2, 320, 64))
+    v = jax.random.normal(ks[2], (1, 2, 320, 64))
+    ref = fa_ref.reference(q, k, v, "sumi", n_history=200)
+    for b in (32, 64, 128):
+        out = fa_ops.flash_attention_bhsd(q, k, v, "sumi", n_history=200,
+                                          bq=b, bk=b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_model_layout():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    out = fa_ops.flash_attention(q, k, v, "causal")
+    assert out.shape == q.shape
+
+
+FFN_CASES = [
+    (100, 256, 700, "swiglu", True),
+    (512, 128, 512, "gelu", True),
+    (33, 256, 512, "swiglu", False),
+    (256, 512, 1024, "relu", True),
+]
+
+
+@pytest.mark.parametrize("case", FFN_CASES, ids=[f"{c[3]}-{c[0]}" for c in FFN_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ffn_vs_oracle(case, dtype):
+    t, d, f, act, norm = case
+    ks = jax.random.split(jax.random.key(t), 5)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    wu = (jax.random.normal(ks[1], (d, f), dtype) / np.sqrt(d)).astype(dtype)
+    wd = (jax.random.normal(ks[2], (f, d), dtype) / np.sqrt(f)).astype(dtype)
+    wg = (jax.random.normal(ks[3], (d, f), dtype) / np.sqrt(d)).astype(dtype) \
+        if act == "swiglu" else None
+    ns = (jax.random.normal(ks[4], (d,), dtype) * 0.1).astype(dtype) if norm else None
+    out = ffn_ops.fused_ffn_2d(x, wu, wd, wg, ns, activation=act, bt=64, bf=128)
+    exp = ffn_ref.reference(x, wu, wd, w_gate=wg, norm_scale=ns, activation=act)
+    scale = max(1e-6, float(np.abs(np.asarray(exp, np.float32)).max()))
+    err = np.abs(np.asarray(out, np.float32) - np.asarray(exp, np.float32)).max()
+    assert err / scale < (1e-5 if dtype == jnp.float32 else 3e-2)
+
+
+RWKV_CASES = [(2, 2, 128, 64, 32), (1, 4, 100, 64, 64), (2, 1, 256, 32, 64),
+              (1, 2, 64, 64, 64)]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES, ids=[f"s{c[2]}d{c[3]}" for c in RWKV_CASES])
+def test_rwkv6_scan_vs_oracle(case):
+    b, h, s, d, chunk = case
+    ks = jax.random.split(jax.random.key(s), 5)
+    r = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    wl = -jnp.exp(jax.random.normal(ks[3], (b, s, h, d)))
+    u = jax.random.normal(ks[4], (h, d)) * 0.5
+    o, sf = rwkv_ops.rwkv6_scan(r, k, v, wl, u, chunk=chunk)
+
+    def to_bh(x):
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, s, d)
+
+    oref, sref = rwkv_ref.reference(
+        to_bh(r), to_bh(k), to_bh(v), to_bh(wl),
+        jnp.broadcast_to(u[None], (b, h, d)).reshape(b * h, d))
+    oref = jnp.moveaxis(oref.reshape(b, h, s, d), 1, 2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(sf).reshape(b * h, d, d),
+                               np.asarray(sref), atol=2e-3, rtol=2e-3)
+
+
+def test_rwkv6_scan_state_carry():
+    """Two half-sequence scans with carried state == one full scan."""
+    b, h, s, d = 1, 2, 128, 64
+    ks = jax.random.split(jax.random.key(7), 5)
+    r = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    wl = -jnp.exp(jax.random.normal(ks[3], (b, s, h, d)))
+    u = jax.random.normal(ks[4], (h, d)) * 0.5
+    o_full, s_full = rwkv_ops.rwkv6_scan(r, k, v, wl, u, chunk=32)
+    o1, st = rwkv_ops.rwkv6_scan(r[:, :64], k[:, :64], v[:, :64], wl[:, :64],
+                                 u, chunk=32)
+    o2, s2 = rwkv_ops.rwkv6_scan(r[:, 64:], k[:, 64:], v[:, 64:], wl[:, 64:],
+                                 u, state=st, chunk=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=2e-3, rtol=2e-3)

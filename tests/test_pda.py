@@ -1,0 +1,112 @@
+"""PDA: bucketed LRU-TTL cache, async/sync query engines, packed transfer."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pda import (BucketedLRUCache, FeatureQueryEngine,
+                            RemoteFeatureStore, pack_features,
+                            packed_transfer, unpacked_transfer)
+
+
+def test_lru_eviction_order():
+    c = BucketedLRUCache(capacity=4, ttl_s=100, n_buckets=1)
+    for i in range(4):
+        c.put(i, i)
+    c.get(0)          # touch 0 -> 1 becomes LRU
+    c.put(99, 99)     # evicts 1
+    assert c.get(1)[0] is None
+    assert c.get(0)[0] == 0
+    assert c.get(99)[0] == 99
+
+
+def test_ttl_expiry():
+    c = BucketedLRUCache(capacity=10, ttl_s=0.5, n_buckets=2)
+    c.put(1, "x", now=100.0)
+    val, fresh = c.get(1, now=100.2)
+    assert val == "x" and fresh
+    val, fresh = c.get(1, now=101.0)
+    assert val == "x" and not fresh     # expired but still returned (stale)
+
+
+def test_sync_engine_accuracy_and_hits():
+    store = RemoteFeatureStore(latency_s=0.0)
+    eng = FeatureQueryEngine(store, BucketedLRUCache(100, 100), mode="sync")
+    out1 = eng.query([1, 2, 3])
+    assert all(v is not None for v in out1.values())   # sync never misses
+    out2 = eng.query([1, 2, 3])
+    assert eng.stats.hits == 3
+    for k in (1, 2, 3):
+        np.testing.assert_array_equal(out1[k], out2[k])
+
+
+def test_async_engine_never_blocks_then_converges():
+    store = RemoteFeatureStore(latency_s=0.002)
+    eng = FeatureQueryEngine(store, BucketedLRUCache(100, 100), mode="async")
+    t0 = time.perf_counter()
+    out1 = eng.query(list(range(50)))
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 0.5                      # returned without blocking
+    assert any(v is None for v in out1.values())
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        out2 = eng.query(list(range(50)))
+        if all(v is not None for v in out2.values()):
+            break
+        time.sleep(0.01)
+    assert all(v is not None for v in out2.values())
+    eng.shutdown()
+
+
+def test_off_mode_always_network():
+    store = RemoteFeatureStore(latency_s=0.0)
+    eng = FeatureQueryEngine(store, None, mode="off")
+    eng.query([1, 2])
+    eng.query([1, 2])
+    assert store.requests == 2                # no caching at all
+
+
+def test_network_bytes_accounting():
+    store = RemoteFeatureStore(latency_s=0.0, feature_dim=8)
+    store.query([1, 2, 3])
+    assert store.bytes_sent == 3 * 8 * 4
+
+
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1,
+                max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_pack_features_roundtrip(shapes):
+    rng = np.random.default_rng(0)
+    arrays = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    buf, layout = pack_features(arrays)
+    assert buf.size == sum(a.size for a in arrays)
+    off = 0
+    for (o, shp), a in zip(layout, arrays):
+        assert o == off and tuple(shp) == a.shape
+        np.testing.assert_array_equal(buf[o:o + a.size].reshape(shp), a)
+        off += a.size
+
+
+def test_packed_equals_unpacked_transfer():
+    rng = np.random.default_rng(1)
+    arrays = [rng.standard_normal((4, 8)).astype(np.float32) for _ in range(5)]
+    p = packed_transfer(arrays)
+    u = unpacked_transfer(arrays)
+    for a, b in zip(p, u):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_cache_invariant_capacity(keys, n_buckets):
+    """Hypothesis: cache never exceeds capacity; a get after put within TTL
+    returns the stored value."""
+    cap = 32
+    c = BucketedLRUCache(capacity=cap, ttl_s=1000, n_buckets=n_buckets)
+    for k in keys:
+        c.put(k, k * 2)
+        got, fresh = c.get(k)
+        assert got == k * 2 and fresh
+    assert len(c) <= max(1, cap // n_buckets) * n_buckets

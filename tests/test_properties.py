@@ -1,0 +1,85 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.rwkv6_scan import ops as rwkv_ops
+from repro.kernels.rwkv6_scan import ref as rwkv_ref
+from repro.models import attention as A
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 64),
+       st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_mask_modes_are_subsets_of_full(sq, sk, n_hist, window):
+    """Every mask is a subset of full; causal ⊆ full; sliding ⊆ causal."""
+    causal = np.asarray(A.make_mask(sq, sk, "causal"))
+    sliding = np.asarray(A.make_mask(sq, sk, "sliding", window=window))
+    sumi = np.asarray(A.make_mask(sq, sk, "sumi", n_history=n_hist))
+    assert (~causal | np.asarray(A.make_mask(sq, sk, "full"))).all()
+    assert (~sliding | causal).all()
+    # every row attends to something when k covers the diagonal
+    if sk >= sq:
+        assert causal.any(axis=1).all()
+        assert sumi.any(axis=1).all()
+
+
+@given(st.integers(0, 32), st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_sumi_candidates_never_see_each_other(n_hist, m):
+    mask = np.asarray(A.make_mask(n_hist + m, n_hist + m, "sumi",
+                                  n_history=n_hist))
+    cand = mask[n_hist:, n_hist:]
+    assert (cand == np.eye(m, dtype=bool)).all()
+
+
+@given(st.integers(1, 4), st.integers(8, 80), st.integers(1, 2))
+@settings(max_examples=10, deadline=None)
+def test_rwkv_chunked_equals_sequential(seed, s, h):
+    """The kernel's chunked formulation == the token-by-token recurrence for
+    arbitrary decays (the invariant that makes chunked serving legal)."""
+    d = 16
+    ks = jax.random.split(jax.random.key(seed), 5)
+    r = jax.random.normal(ks[0], (1, s, h, d))
+    k = jax.random.normal(ks[1], (1, s, h, d))
+    v = jax.random.normal(ks[2], (1, s, h, d))
+    wl = -jnp.exp(jax.random.normal(ks[3], (1, s, h, d)))
+    u = jax.random.normal(ks[4], (h, d)) * 0.5
+    o, _ = rwkv_ops.rwkv6_scan(r, k, v, wl, u, chunk=16)
+
+    def to_bh(x):
+        return jnp.moveaxis(x, 2, 1).reshape(h, s, d)
+
+    oref, _ = rwkv_ref.reference(to_bh(r), to_bh(k), to_bh(v), to_bh(wl),
+                                 u.reshape(h, d))
+    oref = jnp.moveaxis(oref.reshape(1, h, s, d), 1, 2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               atol=5e-3, rtol=5e-3)
+
+
+@given(st.integers(1, 6), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_softmax_attention_rows_convex(sq_blocks, seed):
+    """Attention outputs are convex combinations of V rows: bounded by
+    min/max of V per dim."""
+    sq = sq_blocks * 8
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, 2, 8))
+    k = jax.random.normal(ks[1], (1, sq, 2, 8))
+    v = jax.random.normal(ks[2], (1, sq, 2, 8))
+    out = np.asarray(A.reference_attention(q, k, v, "causal"), np.float32)
+    vmin = np.asarray(v, np.float32).min()
+    vmax = np.asarray(v, np.float32).max()
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()
+
+
+@given(st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_cross_entropy_uniform_bound(v):
+    from repro.models.model import cross_entropy
+    logits = jnp.zeros((2, 4, v))
+    tgt = jnp.zeros((2, 4), jnp.int32)
+    ce = float(cross_entropy(logits, tgt, jnp.ones((2, 4))))
+    assert abs(ce - np.log(v)) < 1e-4

@@ -1,0 +1,106 @@
+"""Serving layer: FlameEngine end-to-end, TextServingEngine, scheduler."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.pda import RemoteFeatureStore
+from repro.data import GRInteractionDataset
+from repro.models import build_model
+from repro.serving import FlameEngine, TextServingEngine
+from repro.serving.scheduler import TrafficConfig, generate_traffic, run_workload
+from repro.types import ClimberConfig
+
+
+@pytest.fixture(scope="module")
+def climber_setup():
+    cfg = dataclasses.replace(
+        get_config("climber"), vocab_size=10_000, d_model=64, d_ff=128,
+        n_heads=2, n_kv_heads=2, head_dim=32,
+        climber=ClimberConfig(num_blocks=2, layers_per_block=2))
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    return cfg, bundle, params
+
+
+def test_flame_engine_serves_and_routes(climber_setup):
+    cfg, bundle, params = climber_setup
+    eng = FlameEngine(bundle, params, n_history=64, buckets=(64, 32, 16),
+                      n_streams=2)
+    ds = GRInteractionDataset(n_items=10_000)
+    rng = np.random.default_rng(0)
+    for m in (16, 40, 100):
+        r = ds.sample_request(rng, 64, m)
+        scores = eng.serve(r["history"], r["candidates"])
+        assert scores.shape == (m, 3)
+        assert np.isfinite(scores).all()
+        assert (scores >= 0).all() and (scores <= 1).all()
+    assert eng.dso.chunk_count >= 3
+    eng.shutdown()
+
+
+def test_flame_engine_dso_matches_single_executor(climber_setup):
+    """Routing through multiple buckets == one big-bucket pass (SUMI)."""
+    cfg, bundle, params = climber_setup
+    eng = FlameEngine(bundle, params, n_history=64, buckets=(128, 32, 16),
+                      n_streams=1, feature_mode="off",
+                      store=RemoteFeatureStore(latency_s=0.0, feature_dim=12))
+    ds = GRInteractionDataset(n_items=10_000)
+    rng = np.random.default_rng(1)
+    r = ds.sample_request(rng, 64, 48)       # 48 -> 32 + 16 under the router
+    split = eng.serve(r["history"], r["candidates"])
+    whole = eng.serve(r["history"], r["candidates"][:48].copy())
+    np.testing.assert_allclose(split, whole, atol=2e-2, rtol=2e-2)
+    eng.shutdown()
+
+
+def test_flame_engine_cache_reduces_network(climber_setup):
+    cfg, bundle, params = climber_setup
+    store1 = RemoteFeatureStore(latency_s=0.0, feature_dim=12)
+    eng_nc = FlameEngine(bundle, params, n_history=64, buckets=(64,),
+                         feature_mode="off", store=store1)
+    store2 = RemoteFeatureStore(latency_s=0.0, feature_dim=12)
+    eng_c = FlameEngine(bundle, params, n_history=64, buckets=(64,),
+                        feature_mode="sync", store=store2)
+    ds = GRInteractionDataset(n_items=10_000)
+    rng = np.random.default_rng(2)
+    reqs = [ds.sample_request(rng, 64, 16) for _ in range(6)]
+    for r in reqs + reqs:   # repeat -> second pass should hit cache
+        eng_nc.serve(r["history"], r["candidates"])
+        eng_c.serve(r["history"], r["candidates"])
+    assert store2.bytes_sent < store1.bytes_sent
+    eng_nc.shutdown()
+    eng_c.shutdown()
+
+
+def test_text_serving_engine_greedy_matches_manual():
+    cfg = reduced_config("h2o-danube-3-4b")
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    eng = TextServingEngine(bundle, params, batch=2, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 10).astype(np.int32),
+               rng.integers(0, cfg.vocab_size, 10).astype(np.int32)]
+    outs = eng.generate(prompts, n_tokens=4)
+    assert all(len(o) == 4 for o in outs)
+    # manual greedy continuation of prompt 0 via repeated prefill
+    seq = list(prompts[0])
+    for _ in range(4):
+        logits = bundle.prefill(params, {"tokens": jnp.asarray([seq], jnp.int32)},
+                                impl="reference")
+        seq.append(int(jnp.argmax(logits[0, -1])))
+    np.testing.assert_array_equal(np.array(seq[-4:]), outs[0])
+
+
+def test_traffic_generation_and_workload():
+    tc = TrafficConfig(n_requests=8, n_history=16,
+                       candidate_counts=(8, 16, 32), seed=0)
+    reqs = generate_traffic(tc, n_items=1000)
+    assert len(reqs) == 8
+    assert all(len(r["candidates"]) in (8, 16, 32) for r in reqs)
+    res = run_workload(lambda h, c: None, reqs, concurrency=2)
+    assert res["requests"] == 8
+    assert res["throughput_items_per_s"] > 0

@@ -1,0 +1,109 @@
+"""Sharding rule resolution + roofline HLO parsing (host-side units)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import roofline as RL
+from repro import sharding as shd
+from repro.configs import get_config, get_shape
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single host device: a (1, 1) mesh still exercises the rule machinery
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_logical_to_spec_basic(mesh):
+    spec = shd.logical_to_spec(("batch", None, "mlp"), (16, 8, 64), mesh)
+    assert isinstance(spec, P)
+
+
+def test_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 7 is not divisible by anything > 1 -> must resolve without error
+    spec = shd.logical_to_spec(("heads",), (7,), mesh)
+    assert spec == P() or spec == P(None) or True
+
+
+@given(st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_spec_never_overpartitions(d1, d2):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = shd.logical_to_spec(("batch", "mlp"), (d1, d2), mesh)
+    # on a 1x1 mesh every axis divides; just must not raise and be a P
+    assert isinstance(spec, P)
+
+
+def test_rules_for_shape_batch1():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = shd.rules_for_shape(mesh, global_batch=1)
+    assert rules["cache_seq"] == ("data", "model")
+    rules2 = shd.rules_for_shape(mesh, global_batch=256)
+    assert rules2["cache_seq"] == ()
+
+
+def test_constrain_ctx_noop_outside_context():
+    x = jnp.ones((4, 4))
+    assert shd.constrain_ctx(x, "batch", None) is x
+
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %p0 = bf16[16,8192]{1,0} parameter(0)
+  %all-gather.1 = bf16[256,8192]{1,0} all-gather(%p0), dimensions={0}
+  %all-reduce.2 = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %ar3 = (f32[512]{0}, f32[512]{0}) all-reduce(%a, %b), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%m, %n)
+}
+"""
+
+
+def test_collective_parse():
+    out = RL.collective_bytes_from_hlo(SAMPLE_HLO)
+    assert out["all-gather"] == 256 * 8192 * 2
+    assert out["all-reduce"] == (1024 * 4 + 2 * 512 * 4) * 2   # 2x ring factor
+    assert out["reduce-scatter"] == 64 * 32 * 4
+    assert out["all-to-all"] == 8 * 128 * 2
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_model_flops_kinds():
+    cfg = get_config("h2o-danube-3-4b")
+    tr = RL.model_flops(cfg, get_shape("train_4k"))
+    pf = RL.model_flops(cfg, get_shape("prefill_32k"))
+    dc = RL.model_flops(cfg, get_shape("decode_32k"))
+    assert tr == pytest.approx(6 * cfg.param_count() * 4096 * 256, rel=1e-6)
+    assert pf == pytest.approx(2 * cfg.param_count() * 32768 * 32, rel=1e-6)
+    assert dc == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+
+
+def test_moe_model_flops_use_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    fl = RL.model_flops(kimi, get_shape("train_4k"))
+    assert fl < 6 * kimi.param_count() * 4096 * 256 * 0.1   # far below total
+
+
+def test_analytic_hbm_decode_cache_dominated():
+    cfg = get_config("qwen2-72b")
+    by = RL.analytic_hbm_bytes(cfg, get_shape("decode_32k"))
+    # KV cache read per token: 80L*2*8h*128d*32768*2B*128batch ~ 1.4e12
+    assert by > 1e12
+
+
+def test_report_dominant_and_ratio():
+    cfg = get_config("h2o-danube-3-4b")
+    shp = get_shape("train_4k")
+    rep = RL.analyse("a", "s", "m", 256, {"flops": 1e14, "bytes accessed": 1e9},
+                     SAMPLE_HLO, cfg, shp)
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert 0 < rep.useful_ratio < 10
