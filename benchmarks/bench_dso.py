@@ -23,7 +23,8 @@ import numpy as np
 from benchmarks.common import make_climber
 from repro.core.climber import climber_forward
 from repro.serving import FlameEngine
-from repro.serving.scheduler import TrafficConfig, generate_traffic, run_workload
+from repro.serving.scheduler import (TrafficConfig, generate_traffic,
+                                     run_workload, run_workload_async)
 from repro.core.pda import RemoteFeatureStore
 
 HISTORY = 256
@@ -52,14 +53,18 @@ def run_implicit(cfg, bundle, params, reqs):
     return run_workload(serve, reqs, concurrency=CONCURRENCY), len(fns)
 
 
-def run_dso(cfg, bundle, params, reqs, buckets=(256, 128, 64, 32)):
+def run_dso(cfg, bundle, params, reqs, buckets=(256, 128, 64, 32),
+            coalesce=False):
     eng = FlameEngine(bundle, params, n_history=HISTORY, buckets=buckets,
                       n_streams=2, feature_mode="off",
-                      store=RemoteFeatureStore(latency_s=0.0, feature_dim=12))
-    res = run_workload(lambda h, c: eng.serve(h, c), reqs,
-                       concurrency=CONCURRENCY)
-    res["build_s"] = eng.pool.build_time_s
+                      store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+                      coalesce=coalesce, max_batch=4, window_s=0.004,
+                      n_workers=CONCURRENCY)
+    res = run_workload_async(eng, reqs)
+    res.pop("outputs")
+    res["build_s"] = eng.dso.build_time_s
     res["chunks"] = eng.dso.chunk_count
+    res["dispatches"] = eng.dso.dispatch_count
     eng.shutdown()
     return res
 
@@ -74,6 +79,7 @@ def main(csv=True):
         reqs = generate_traffic(tc, n_items=cfg.vocab_size)
         imp, n_compiles = run_implicit(cfg, bundle, params, reqs)
         dso = run_dso(cfg, bundle, params, reqs)
+        coal = run_dso(cfg, bundle, params, reqs, coalesce=True)
         print(f"\n--- {dist} traffic, M in {sorted(set(len(r['candidates']) for r in reqs))} ---")
         print(f"{'config':<26}{'items/s':>10}{'mean ms':>9}{'p99 ms':>9}")
         print(f"{'Default (Implicit Shape)':<26}"
@@ -85,6 +91,11 @@ def main(csv=True):
               f"{dso['mean_latency_ms']:>9.1f}{dso['p99_latency_ms']:>9.1f}"
               f"   (AOT build {dso['build_s']:.1f}s off-band, "
               f"{dso['chunks']} chunks)")
+        print(f"{'DSO + coalescing':<26}"
+              f"{coal['throughput_items_per_s']:>10.0f}"
+              f"{coal['mean_latency_ms']:>9.1f}{coal['p99_latency_ms']:>9.1f}"
+              f"   ({coal['chunks']} chunks in {coal['dispatches']} "
+              f"dispatches)")
         print(f"-> DSO vs implicit: throughput x"
               f"{dso['throughput_items_per_s']/imp['throughput_items_per_s']:.2f}, "
               f"latency x{imp['mean_latency_ms']/dso['mean_latency_ms']:.2f} "

@@ -1,0 +1,134 @@
+"""Serving API v2 benchmark — coalesced vs per-request dispatch A/B.
+
+Drives concurrent jittered traffic (non-bucket-aligned candidate counts,
+the DSO's hard case) through two FlameEngine configurations that differ
+only in the coalescing policy:
+
+  uncoalesced   executors (1, bucket); every chunk dispatches alone
+  coalesced     executors (max_batch, bucket); same-bucket chunks from
+                different in-flight requests share one dispatch
+
+Both run against a warmed PDA cache (hot steady state) so the measurement
+reflects dispatch economics, not feature-fetch cost.  Small buckets are
+the regime where batching pays even on CPU: a (4, 16) matmul chain
+underutilizes the cores a (1, 16) call leaves idle (see bench notes in
+DESIGN.md §1).
+
+Correctness gates before any throughput claim:
+  1. coalesced concurrent scores are bitwise-identical to the same engine
+     serving the same requests sequentially (same executable — guaranteed
+     by per-row independence, hard assert);
+  2. coalesced scores are bitwise-identical to the uncoalesced baseline
+     (cross-executable; holds for this config and asserted so a future
+     XLA codegen change fails loudly rather than silently).
+
+Emits ``BENCH_serving.json`` at the repo root so future PRs have a perf
+trajectory to compare against.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import make_climber
+from repro.core.pda import RemoteFeatureStore
+from repro.serving import create_engine
+from repro.serving.scheduler import (TrafficConfig, generate_traffic,
+                                     run_workload_async)
+
+HISTORY = 64
+COUNTS = (16, 32, 64)
+N_REQUESTS = 64
+N_ITEMS = 5_000
+BUCKETS = (32, 16)
+MAX_BATCH = 4
+N_WORKERS = 8
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+
+def _run(bundle, params, reqs, *, coalesce: bool, sequential_ref: bool):
+    eng = create_engine(
+        "flame", bundle, params, n_history=HISTORY, buckets=BUCKETS,
+        n_streams=2, feature_mode="sync",
+        store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+        coalesce=coalesce, max_batch=MAX_BATCH, window_s=0.008,
+        n_workers=N_WORKERS)
+    # warm the feature cache and the executors (steady-state measurement)
+    eng.features.query(list(range(N_ITEMS)))
+    for r in reqs[:4]:
+        eng.serve(r["history"], r["candidates"])
+    seq = [eng.serve(r["history"], r["candidates"]) for r in reqs] \
+        if sequential_ref else None
+    m0 = eng.metrics()
+    res = run_workload_async(eng, reqs)
+    outputs = res.pop("outputs")
+    m1 = eng.metrics()
+    chunks = m1["dso_chunks"] - m0["dso_chunks"]
+    dispatches = m1["dso_dispatches"] - m0["dso_dispatches"]
+    res.update(build_s=eng.dso.build_time_s, chunks=chunks,
+               dispatches=dispatches,
+               avg_fill=chunks / max(dispatches, 1),
+               batch_axis=m1["dso_batch_axis"])
+    eng.shutdown()
+    return res, outputs, seq
+
+
+def main(csv=True):
+    cfg, bundle, params = make_climber(d_model=64, layers=2, blocks=2)
+    tc = TrafficConfig(candidate_counts=COUNTS, distribution="jittered",
+                       n_requests=N_REQUESTS, n_history=HISTORY, seed=11)
+    reqs = generate_traffic(tc, n_items=N_ITEMS)
+
+    print("\n=== Serving API v2: coalesced vs per-request dispatch "
+          "(jittered traffic, hot cache) ===")
+    base, out_base, _ = _run(bundle, params, reqs, coalesce=False,
+                             sequential_ref=False)
+    coal, out_coal, seq_ref = _run(bundle, params, reqs, coalesce=True,
+                                   sequential_ref=True)
+
+    bitwise_seq = all(np.array_equal(a, b)
+                      for a, b in zip(seq_ref, out_coal))
+    bitwise_base = all(np.array_equal(a, b)
+                       for a, b in zip(out_base, out_coal))
+    print(f"{'config':<26}{'items/s':>10}{'p50 ms':>9}{'p99 ms':>9}"
+          f"{'dispatches':>12}{'fill':>6}")
+    for name, r in (("per-request (B=1)", base),
+                    (f"coalesced (B={MAX_BATCH})", coal)):
+        print(f"{name:<26}{r['throughput_items_per_s']:>10.0f}"
+              f"{r['p50_latency_ms']:>9.1f}{r['p99_latency_ms']:>9.1f}"
+              f"{r['dispatches']:>12}{r['avg_fill']:>6.1f}")
+    speedup = (coal["throughput_items_per_s"]
+               / max(base["throughput_items_per_s"], 1e-9))
+    print(f"-> coalescing: throughput x{speedup:.2f}; bitwise vs sequential "
+          f"self: {bitwise_seq}; bitwise vs B=1 baseline: {bitwise_base}")
+    if csv:
+        print(f"serving/uncoalesced,{base['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={base['throughput_items_per_s']:.0f}")
+        print(f"serving/coalesced,{coal['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={coal['throughput_items_per_s']:.0f}")
+
+    report = {
+        "workload": {"distribution": "jittered", "counts": list(COUNTS),
+                     "n_requests": N_REQUESTS, "history": HISTORY,
+                     "buckets": list(BUCKETS), "max_batch": MAX_BATCH,
+                     "n_workers": N_WORKERS},
+        "uncoalesced": base,
+        "coalesced": coal,
+        "speedup_items_per_s": speedup,
+        "bitwise_identical": bool(bitwise_base),
+        "bitwise_vs_sequential_self": bool(bitwise_seq),
+    }
+    path = os.path.abspath(OUT_PATH)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+    if not (bitwise_seq and bitwise_base):
+        raise AssertionError("coalesced scores diverged from per-request "
+                             "reference — correctness gate failed")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,24 +1,27 @@
-"""DSO demo: implicit-shape recompilation vs explicit-bucket routing under
-non-uniform upstream candidate counts (paper §4.2.3 / Table 5).
+"""DSO demo: implicit-shape recompilation vs explicit-bucket routing vs
+cross-request chunk coalescing under non-uniform upstream candidate counts
+(paper §4.2.3 / Table 5, extended with the API v2 coalescing dispatcher).
 
-    PYTHONPATH=src python examples/mixed_traffic_dso.py
+    PYTHONPATH=src:. python examples/mixed_traffic_dso.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_climber
 from repro.core.dso import split_request
-from repro.serving import FlameEngine
 from repro.core.pda import RemoteFeatureStore
+from repro.serving import create_engine
+from repro.serving.scheduler import run_workload_async
 
 
 def main():
     cfg, bundle, params = make_climber(d_model=96, layers=2, blocks=2)
     rng = np.random.default_rng(0)
     counts = [17, 33, 64, 90, 128, 40, 77, 128, 25, 60]
+    reqs = [{"history": rng.integers(0, 1000, 256).astype(np.int32),
+             "candidates": rng.integers(0, 1000, m).astype(np.int32)}
+            for m in counts]
 
     print("bucket split plans (buckets 128/64/32/16):")
     for m in counts[:5]:
@@ -26,34 +29,36 @@ def main():
         print(f"  M={m:>4} -> " + " + ".join(
             f"{c.bucket}({c.valid})" for c in plan))
 
-    # implicit shape: fresh jit per novel M
-    jits = {}
+    def store():
+        return RemoteFeatureStore(latency_s=0, feature_dim=12)
+
+    # implicit shape: fresh jit trace+compile per novel M, in-band
+    eng = create_engine("implicit", bundle, params, n_history=256,
+                        feature_mode="off", store=store(), n_workers=4)
     t0 = time.perf_counter()
-    for m in counts:
-        batch = {
-            "history": jnp.zeros((1, 256), jnp.int32),
-            "candidates": jnp.asarray(rng.integers(0, 1000, (1, m)), jnp.int32),
-            "side": jnp.zeros((1, 12), jnp.float32),
-        }
-        if m not in jits:
-            jits[m] = jax.jit(lambda b: bundle.prefill(params, b))
-        jax.block_until_ready(jits[m](batch))
+    run_workload_async(eng, reqs)
     t_implicit = time.perf_counter() - t0
     print(f"\nimplicit shape: {t_implicit:.2f}s for {len(counts)} requests "
-          f"({len(jits)} in-band compiles)")
-
-    eng = FlameEngine(bundle, params, n_history=256,
-                      buckets=(128, 64, 32, 16), n_streams=2,
-                      feature_mode="off",
-                      store=RemoteFeatureStore(latency_s=0, feature_dim=12))
-    t0 = time.perf_counter()
-    for m in counts:
-        eng.serve(rng.integers(0, 1000, 256), rng.integers(0, 1000, m))
-    t_dso = time.perf_counter() - t0
-    print(f"DSO routing:    {t_dso:.2f}s "
-          f"(AOT pool built off-band in {eng.pool.build_time_s:.1f}s)")
-    print(f"-> speedup x{t_implicit / t_dso:.1f}")
+          f"({eng.metrics()['jit_compiles']} in-band compiles)")
     eng.shutdown()
+
+    for coalesce in (False, True):
+        eng = create_engine("flame", bundle, params, n_history=256,
+                            buckets=(128, 64, 32, 16), n_streams=2,
+                            feature_mode="off", store=store(),
+                            coalesce=coalesce, max_batch=4, window_s=0.005,
+                            n_workers=4)
+        t0 = time.perf_counter()
+        run_workload_async(eng, reqs)
+        dt = time.perf_counter() - t0
+        m = eng.metrics()
+        tag = "DSO + coalescing" if coalesce else "DSO routing     "
+        print(f"{tag}: {dt:.2f}s "
+              f"(AOT pool built off-band in {eng.dso.build_time_s:.1f}s; "
+              f"{m['dso_chunks']} chunks in {m['dso_dispatches']} dispatches, "
+              f"avg fill {m['dso_avg_fill']:.1f})")
+        print(f"-> speedup over implicit x{t_implicit / dt:.1f}")
+        eng.shutdown()
 
 
 if __name__ == "__main__":

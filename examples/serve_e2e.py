@@ -19,7 +19,8 @@ from repro.configs import get_config
 from repro.data import GRInteractionDataset, make_batch_iterator
 from repro.models import build_model
 from repro.serving import FlameEngine
-from repro.serving.scheduler import TrafficConfig, generate_traffic, run_workload
+from repro.serving.scheduler import (TrafficConfig, generate_traffic,
+                                     run_workload_async)
 from repro.training.loop import train
 from repro.training.optimizer import AdamWConfig
 from repro.types import ClimberConfig
@@ -44,21 +45,26 @@ def main():
                             callback=lambda m: print(
                                 f"    step {m['step']:>3} loss {m['loss']:.4f}"))
 
-    # ---- 2. serve through the full FLAME pipeline ----
-    print("[2/3] building FLAME engine (PDA + DSO + AOT executors)...")
+    # ---- 2. serve through the full FLAME pipeline (API v2) ----
+    print("[2/3] building FLAME engine (PDA + coalescing DSO + AOT "
+          "executors)...")
     eng = FlameEngine(bundle, params, n_history=HISTORY,
-                      buckets=(64, 32, 16), n_streams=2, feature_mode="sync")
-    print(f"    executor pool AOT-built in {eng.pool.build_time_s:.1f}s")
+                      buckets=(64, 32, 16), n_streams=2, feature_mode="sync",
+                      coalesce=True, max_batch=4, n_workers=4)
+    print(f"    executor pool AOT-built in {eng.dso.build_time_s:.1f}s "
+          f"(batch axis {eng.dso.policy.batch})")
     tc = TrafficConfig(candidate_counts=(16, 32, 64), distribution="jittered",
                        n_requests=24, n_history=HISTORY, seed=1)
     reqs = generate_traffic(tc, n_items=N_ITEMS)
-    res = run_workload(lambda h, c: eng.serve(h, c), reqs, concurrency=4)
+    res = run_workload_async(eng, reqs)
     print(f"    {res['requests']} concurrent requests | "
           f"{res['throughput_items_per_s']:.0f} user-item pairs/s | "
-          f"mean {res['mean_latency_ms']:.1f} ms | "
+          f"p50 {res['p50_latency_ms']:.1f} ms | "
           f"p99 {res['p99_latency_ms']:.1f} ms")
+    m = eng.metrics()
     print(f"    PDA cache: {eng.features.stats}")
-    print(f"    DSO chunks issued: {eng.dso.chunk_count}")
+    print(f"    DSO: {m['dso_chunks']} chunks in {m['dso_dispatches']} "
+          f"dispatches (avg fill {m['dso_avg_fill']:.1f})")
 
     # ---- 3. quality check: served scores track planted preferences ----
     print("[3/3] verifying served scores track planted preferences...")

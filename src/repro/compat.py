@@ -1,0 +1,37 @@
+"""JAX version-compat shims.
+
+``jax.sharding.AxisType`` (explicit/auto mesh axis types) only exists on
+newer JAX.  On older versions every mesh axis is implicitly "auto", so the
+correct downlevel behaviour is simply to omit the kwarg.  All mesh
+construction in the repo (and in test subprocess scripts) goes through
+:func:`make_mesh`, and all shard_map use through :func:`shard_map`, so the
+version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def mesh_axis_types(n: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` on new JAX, ``{}`` on old."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    return jax.make_mesh(shape, axis_names,
+                         **mesh_axis_types(len(axis_names)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX; ``jax.experimental.shard_map`` (whose
+    replication check is spelled ``check_rep``) on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

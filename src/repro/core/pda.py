@@ -125,6 +125,7 @@ class QueryStats:
     misses: int = 0
     sync_fetches: int = 0
     async_refreshes: int = 0
+    prefetches: int = 0
 
 
 class FeatureQueryEngine:
@@ -143,10 +144,29 @@ class FeatureQueryEngine:
         self.cache = cache
         self.mode = mode
         self.stats = QueryStats()
+        self._max_workers = max_workers
         self._pool = ThreadPoolExecutor(max_workers=max_workers) \
             if mode == "async" else None
+        self._pool_lock = threading.Lock()
+        self._closed = False
+        self._stats_lock = threading.Lock()
         self._inflight: set = set()
         self._inflight_lock = threading.Lock()
+        # signalled whenever a background refresh retires its ids, so sync
+        # queries can wait for an in-flight prefetch instead of re-fetching
+        self._inflight_cv = threading.Condition(self._inflight_lock)
+
+    def _ensure_pool(self) -> Optional[ThreadPoolExecutor]:
+        """Lazily create the background pool (sync engines only need one
+        once ``prefetch`` is used).  Returns None once shut down so a
+        racing prefetch cannot resurrect a pool."""
+        with self._pool_lock:
+            if self._closed:
+                return None
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._max_workers)
+            return self._pool
 
     def _refresh_async(self, item_ids: List[int]):
         with self._inflight_lock:
@@ -161,48 +181,111 @@ class FeatureQueryEngine:
                 for k, v in res.items():
                     self.cache.put(k, v)
             finally:
-                with self._inflight_lock:
+                with self._inflight_cv:
                     self._inflight.difference_update(todo)
+                    self._inflight_cv.notify_all()
 
-        self.stats.async_refreshes += 1
-        self._pool.submit(work)
+        pool = self._ensure_pool()
+        if pool is None:                 # engine shut down — undo reservation
+            with self._inflight_cv:
+                self._inflight.difference_update(todo)
+                self._inflight_cv.notify_all()
+            return
+        with self._stats_lock:
+            self.stats.async_refreshes += 1
+        pool.submit(work)
+
+    def prefetch(self, item_ids: Sequence[int]):
+        """Serving-pipeline hook (API v2 stage 2): warm the cache for
+        ``item_ids`` in the background without blocking the caller, so the
+        later synchronous ``query`` on the worker thread hits cache.  No-op
+        when caching is disabled; in-flight de-dup via ``_refresh_async``."""
+        if self.mode == "off" or self.cache is None:
+            return
+        need = [i for i in item_ids if not self.cache.get(i)[1]]
+        if not need:
+            return
+        with self._stats_lock:
+            self.stats.prefetches += 1
+        self._refresh_async(need)
 
     def query(self, item_ids: Sequence[int]) -> Dict[int, Optional[np.ndarray]]:
         if self.mode == "off" or self.cache is None:
             res = self.store.query(list(item_ids))
-            self.stats.misses += len(item_ids)
+            with self._stats_lock:
+                self.stats.misses += len(item_ids)
             return dict(res)
 
         out: Dict[int, Optional[np.ndarray]] = {}
         need: List[int] = []
+        hits = stale = misses = 0
         for i in item_ids:
             val, fresh = self.cache.get(i)
             if val is not None and fresh:
-                self.stats.hits += 1
+                hits += 1
                 out[i] = val
             elif val is not None:           # expired
-                self.stats.stale_hits += 1
+                stale += 1
                 out[i] = val                # async: serve stale
                 need.append(i)
             else:
-                self.stats.misses += 1
+                misses += 1
                 out[i] = None
                 need.append(i)
+        with self._stats_lock:
+            self.stats.hits += hits
+            self.stats.stale_hits += stale
+            self.stats.misses += misses
 
         if need:
             if self.mode == "sync":
-                self.stats.sync_fetches += 1
-                res = self.store.query(need)
-                for k, v in res.items():
-                    self.cache.put(k, v)
-                    out[k] = v
+                self._sync_fill(need, out)
             else:
                 self._refresh_async(need)
         return out
 
+    def _sync_fill(self, need: List[int], out: Dict[int, Optional[np.ndarray]]):
+        """Blocking fill for sync mode.  Ids already being fetched by a
+        background prefetch are awaited (instead of re-fetched, which would
+        double the network cost of the exact cold path prefetch exists
+        for); everything else is fetched in one blocking RPC."""
+        with self._inflight_lock:
+            awaited = [i for i in need if i in self._inflight]
+        fetch = [i for i in need if i not in set(awaited)]
+        if fetch:
+            with self._stats_lock:
+                self.stats.sync_fetches += 1
+            res = self.store.query(fetch)
+            for k, v in res.items():
+                self.cache.put(k, v)
+                out[k] = v
+        if awaited:
+            deadline = time.monotonic() + 5.0
+            with self._inflight_cv:
+                while any(i in self._inflight for i in awaited) \
+                        and time.monotonic() < deadline:
+                    self._inflight_cv.wait(timeout=0.05)
+            missing = []
+            for i in awaited:
+                val, fresh = self.cache.get(i)
+                if val is not None and fresh:
+                    out[i] = val
+                else:   # prefetch failed, timed out, or landed expired —
+                    missing.append(i)   # sync mode never serves stale
+            if missing:
+                with self._stats_lock:
+                    self.stats.sync_fetches += 1
+                res = self.store.query(missing)
+                for k, v in res.items():
+                    self.cache.put(k, v)
+                    out[k] = v
+
     def shutdown(self):
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
+        with self._pool_lock:
+            self._closed = True
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
 
 # ---------------------------------------------------------------------------

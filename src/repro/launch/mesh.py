@@ -7,21 +7,18 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever this host actually has (CPU tests: 1 device)."""
     n = len(jax.devices())
     data = max(1, n // model_parallel)
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model_parallel), ("data", "model"))

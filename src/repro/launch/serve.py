@@ -1,7 +1,13 @@
-"""Serving launcher: the full FLAME pipeline under synthetic traffic.
+"""Serving launcher: any registered engine under synthetic traffic.
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 32 \
-        --buckets 64,32,16 --feature-mode sync --distribution jittered
+    PYTHONPATH=src python -m repro.launch.serve --engine flame \
+        --requests 32 --buckets 64,32,16 --distribution jittered
+    PYTHONPATH=src python -m repro.launch.serve --engine implicit
+    PYTHONPATH=src python -m repro.launch.serve --engine text --arch gemma3-12b
+
+Engines are selected by name through the API v2 registry
+(repro.serving.api); requests are driven through ``submit`` so cross-request
+chunk coalescing is exercised for the flame engine.
 """
 from __future__ import annotations
 
@@ -11,31 +17,41 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.data import GRInteractionDataset
+from repro.configs import get_config, reduced_config
 from repro.models import build_model
-from repro.serving import FlameEngine
-from repro.serving.scheduler import TrafficConfig, generate_traffic, run_workload
+from repro.serving import ServeRequest, available_engines, create_engine
+from repro.serving.scheduler import (TrafficConfig, generate_traffic,
+                                     run_workload_async)
 from repro.training import checkpoint
 from repro.types import ClimberConfig
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--history", type=int, default=128)
-    ap.add_argument("--buckets", default="64,32,16")
-    ap.add_argument("--counts", default="16,32,64")
-    ap.add_argument("--distribution", default="uniform",
-                    choices=["uniform", "zipf", "jittered"])
-    ap.add_argument("--feature-mode", default="sync",
-                    choices=["off", "sync", "async"])
-    ap.add_argument("--streams", type=int, default=2)
-    ap.add_argument("--concurrency", type=int, default=4)
-    ap.add_argument("--d-model", type=int, default=128)
-    ap.add_argument("--ckpt", default=None, help="restore params from here")
-    args = ap.parse_args()
+def _print_metrics(tag: str, m: dict):
+    print(f"[serve] {tag}: " + ", ".join(
+        f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in sorted(m.items())))
 
+
+def serve_text(args):
+    cfg = reduced_config(args.arch)
+    print(f"[serve] text engine on reduced {cfg.name}: {cfg.n_layers}L "
+          f"d={cfg.d_model} pattern={cfg.layer_pattern}")
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    eng = create_engine("text", bundle, params, batch=2, max_len=128)
+    rng = np.random.default_rng(0)
+    futs = [eng.submit(ServeRequest(
+        history=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+        n_tokens=args.tokens)) for _ in range(args.requests)]
+    for f in futs:
+        r = f.result()
+        print(f"[serve] req {r.request_id}: generated {r.output.tolist()} "
+              f"in {r.latency_s * 1e3:.0f} ms")
+    _print_metrics("metrics", eng.metrics())
+    eng.shutdown()
+
+
+def serve_rec(args):
     cfg = dataclasses.replace(
         get_config("climber"), vocab_size=50_000, d_model=args.d_model,
         d_ff=4 * args.d_model, n_heads=4, n_kv_heads=4,
@@ -47,27 +63,74 @@ def main():
         params, step = checkpoint.restore(args.ckpt, params)
         print(f"[serve] restored checkpoint @ step {step}")
 
-    buckets = tuple(int(b) for b in args.buckets.split(","))
-    eng = FlameEngine(bundle, params, n_history=args.history,
-                      buckets=buckets, n_streams=args.streams,
-                      feature_mode=args.feature_mode)
-    print(f"[serve] executor pool built in {eng.pool.build_time_s:.2f}s "
-          f"(buckets {buckets} x {args.streams} streams)")
+    kw = dict(n_history=args.history, feature_mode=args.feature_mode,
+              max_pending=args.max_pending)
+    if args.engine == "flame":
+        kw.update(buckets=tuple(int(b) for b in args.buckets.split(",")),
+                  n_streams=args.streams, coalesce=not args.no_coalesce,
+                  max_batch=args.max_batch,
+                  window_s=args.window_ms * 1e-3,
+                  n_workers=args.concurrency)
+    else:
+        kw.update(n_workers=args.concurrency)
+    eng = create_engine(args.engine, bundle, params, **kw)
+    if args.engine == "flame":
+        print(f"[serve] executor pool built in {eng.dso.build_time_s:.2f}s "
+              f"(buckets {sorted(eng.dso.buckets, reverse=True)}, "
+              f"batch axis {eng.dso.policy.batch}, "
+              f"coalesce={'on' if eng.dso.policy.enabled else 'off'})")
 
     tc = TrafficConfig(
         candidate_counts=tuple(int(c) for c in args.counts.split(",")),
         distribution=args.distribution, n_requests=args.requests,
         n_history=args.history, seed=0)
     reqs = generate_traffic(tc, n_items=cfg.vocab_size)
-    res = run_workload(lambda h, c: eng.serve(h, c), reqs,
-                       concurrency=args.concurrency)
+    res = run_workload_async(eng, reqs, arrival_gap_s=args.arrival_gap_ms * 1e-3)
     print(f"[serve] {res['requests']} requests | "
           f"{res['throughput_items_per_s']:.0f} items/s | "
-          f"mean {res['mean_latency_ms']:.1f} ms | "
+          f"p50 {res['p50_latency_ms']:.1f} ms | "
           f"p99 {res['p99_latency_ms']:.1f} ms")
-    print(f"[serve] feature cache: {eng.features.stats}")
-    print(f"[serve] dso chunks: {eng.dso.chunk_count}")
+    _print_metrics("engine metrics", eng.metrics())
     eng.shutdown()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="flame",
+                    choices=list(available_engines()))
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--history", type=int, default=128)
+    ap.add_argument("--buckets", default="64,32,16")
+    ap.add_argument("--counts", default="16,32,64")
+    ap.add_argument("--distribution", default="uniform",
+                    choices=["uniform", "zipf", "jittered"])
+    ap.add_argument("--feature-mode", default="sync",
+                    choices=["off", "sync", "async"])
+    ap.add_argument("--streams", type=int, default=2)
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="pipeline worker threads")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable cross-request chunk coalescing")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="coalescing fill target / executor batch axis")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="coalescing time window")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="admission queue bound (backpressure)")
+    ap.add_argument("--arrival-gap-ms", type=float, default=0.0,
+                    help="max random gap between request arrivals")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--ckpt", default=None, help="restore params from here")
+    ap.add_argument("--arch", default="gemma3-12b",
+                    help="text engine: reduced config name")
+    ap.add_argument("--tokens", type=int, default=12,
+                    help="text engine: tokens per request")
+    args = ap.parse_args()
+
+    if args.engine == "text":
+        serve_text(args)
+    else:
+        serve_rec(args)
 
 
 if __name__ == "__main__":

@@ -291,8 +291,9 @@ def context_parallel_attention(q, k, v, mode: str, *, window: int, mesh,
     Compute uses all mesh axes; comm is O(window) or O(S*Hkv*D) per layer
     instead of O(S*d_model) activation all-reduces.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     n = mesh.shape[seq_axis]
     batch_axes = tuple(a for a in mesh.axis_names if a != seq_axis)

@@ -150,8 +150,9 @@ def moe_apply_a2a(params, x, cfg, *, mesh, axis: str = "data",
     local experts, and reverses the exchange.  ICI traffic per layer is
     2 * tokens * top_k * d * capacity_factor bytes — independent of E.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     m = cfg.moe
     b, s, d = x.shape

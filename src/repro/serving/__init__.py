@@ -1,1 +1,8 @@
-from repro.serving.engine import FlameEngine, TextServingEngine  # noqa: F401
+from repro.serving.api import (AdmissionQueueFull, ResponseFuture,  # noqa: F401
+                               ServeMetrics, ServeRequest, ServeResponse,
+                               ServingEngine, available_engines,
+                               create_engine, register_engine)
+# importing engine registers "flame" / "implicit" / "text" in the registry
+from repro.serving.engine import (FlameEngine,  # noqa: F401
+                                  ImplicitShapeServingEngine,
+                                  TextServingEngine)

@@ -1,0 +1,204 @@
+"""FLAME Serving API v2 — the request/response surface every engine speaks.
+
+The serving system is addressed through four pieces (see DESIGN.md for the
+full request lifecycle diagram):
+
+  ServeRequest / ServeResponse   frozen value types crossing the API boundary
+  ResponseFuture                 handle returned by ``submit``; resolves to a
+                                 ServeResponse once the pipeline finishes
+  ServingEngine                  the protocol all engines implement:
+                                 ``submit`` (async), ``serve`` (blocking
+                                 sugar), ``metrics``, ``shutdown``
+  engine registry                name -> factory, so launchers/benchmarks
+                                 select engines with ``--engine flame``
+
+Engines register themselves with :func:`register_engine`; callers construct
+them with :func:`create_engine` and never import concrete classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import (Any, Callable, Dict, Optional, Protocol, Sequence,
+                    runtime_checkable)
+
+import numpy as np
+
+_REQUEST_IDS = itertools.count()
+
+
+# ---------------------------------------------------------------------------
+# value types
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One upstream request.
+
+    Recommendation engines read ``history`` (item ids) and ``candidates``
+    (item ids to score); text engines read ``history`` as prompt token ids
+    and generate ``n_tokens``.
+    """
+
+    history: np.ndarray
+    candidates: Optional[np.ndarray] = None
+    n_tokens: int = 16
+    request_id: int = dataclasses.field(
+        default_factory=lambda: next(_REQUEST_IDS))
+    arrival_t: float = dataclasses.field(default_factory=time.perf_counter)
+
+    @property
+    def m(self) -> int:
+        """Number of candidates (0 for text requests)."""
+        return 0 if self.candidates is None else int(self.candidates.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResponse:
+    """Pipeline output for one request.
+
+    ``output`` is ``[M, num_tasks]`` scores for recommendation engines, or a
+    ``[n_tokens]`` generated-id array for text engines.  ``timings`` breaks
+    the latency into pipeline stages (queue / features / execute).
+    """
+
+    request_id: int
+    output: np.ndarray
+    latency_s: float
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class ResponseFuture:
+    """Handle for an in-flight request; resolves to a :class:`ServeResponse`."""
+
+    def __init__(self, request: ServeRequest):
+        self.request = request
+        self._f: "Future[ServeResponse]" = Future()
+
+    # ---- consumer side ----
+    def done(self) -> bool:
+        return self._f.done()
+
+    def result(self, timeout: Optional[float] = None) -> ServeResponse:
+        return self._f.result(timeout)
+
+    def scores(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Convenience: block and return just the output array."""
+        return self.result(timeout).output
+
+    def add_done_callback(self, fn: Callable[["ResponseFuture"], None]):
+        self._f.add_done_callback(lambda _: fn(self))
+
+    # ---- engine side ----
+    def set_result(self, response: ServeResponse):
+        self._f.set_result(response)
+
+    def set_exception(self, exc: BaseException):
+        self._f.set_exception(exc)
+
+
+class AdmissionQueueFull(RuntimeError):
+    """Raised by ``submit`` when the bounded admission queue stays full past
+    the caller's timeout (the backpressure signal)."""
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+class ServeMetrics:
+    """Thread-safe request/latency accounting shared by all engines.
+
+    ``record`` is called from pipeline worker threads concurrently; every
+    mutation happens under one lock (the unguarded ``requests += 1`` and
+    first/last-timestamp updates used to race under ``run_workload``'s
+    thread pool)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.items = 0
+        self.first_t = 0.0
+        self.last_t = 0.0
+        self.latencies: list = []
+
+    def record(self, n_items: int, latency_s: float):
+        now = time.perf_counter()
+        with self._lock:
+            if self.requests == 0:
+                self.first_t = now - latency_s
+            self.last_t = now
+            self.requests += 1
+            self.items += n_items
+            self.latencies.append(latency_s)
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            lat = np.array(self.latencies) if self.latencies else np.zeros(1)
+            wall = max(self.last_t - self.first_t, 1e-9)
+            return {
+                "requests": self.requests,
+                "throughput_items_per_s": self.items / wall,
+                "mean_latency_ms": float(lat.mean() * 1e3),
+                "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+            }
+
+
+# ---------------------------------------------------------------------------
+# the engine protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ServingEngine(Protocol):
+    """What every serving engine exposes, regardless of model family."""
+
+    def submit(self, request: ServeRequest, *,
+               timeout: Optional[float] = None) -> ResponseFuture:
+        """Admit a request into the pipeline; returns immediately with a
+        future.  Blocks (up to ``timeout``) when the admission queue is
+        full; raises :class:`AdmissionQueueFull` on timeout."""
+        ...
+
+    def serve(self, history: np.ndarray,
+              candidates: Optional[np.ndarray] = None, **kw) -> np.ndarray:
+        """Blocking sugar: submit one request and wait for its output."""
+        ...
+
+    def metrics(self) -> Dict[str, Any]:
+        """Unified metrics snapshot (request stats + engine internals)."""
+        ...
+
+    def shutdown(self) -> None:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+_ENGINES: Dict[str, Callable[..., ServingEngine]] = {}
+
+
+def register_engine(name: str):
+    """Class/factory decorator: ``@register_engine("flame")``."""
+    def deco(factory):
+        _ENGINES[name] = factory
+        return factory
+    return deco
+
+
+def available_engines() -> Sequence[str]:
+    return sorted(_ENGINES)
+
+
+def create_engine(name: str, *args, **kwargs) -> ServingEngine:
+    try:
+        factory = _ENGINES[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; "
+                       f"available: {list(available_engines())}") from None
+    return factory(*args, **kwargs)

@@ -1,21 +1,35 @@
-"""Serving engines: the full FLAME pipeline and a text-decoder engine.
+"""Serving engines behind the API v2 surface (repro.serving.api).
 
-FlameEngine — the paper's system end to end:
+Every engine shares the same staged pipeline scaffolding:
 
-  request --> PDA (feature query w/ cache; packed transfer)
-          --> DSO (descending-bucket split onto AOT executors)
-          --> FKE/model (SUMI-masked Climber forward)
-          --> per-candidate multi-task scores
+  submit() --> bounded admission queue (backpressure)
+           --> PDA feature prefetch (fire-and-forget cache warm)
+           --> worker threads: feature query -> execute -> ResponseFuture
 
-TextServingEngine — prefill+decode serving for the decode-based assigned
-architectures (used by examples/ and tests; the pod-scale path is exercised
-by the dry-run).
+and differs only in the execute stage:
+
+  FlameEngine                the paper's system end to end — PDA feature
+                             query, coalescing DSO over batch-axis AOT
+                             executors (chunks from *different* in-flight
+                             requests share one dispatch), SUMI-masked
+                             Climber forward, per-candidate task scores;
+  ImplicitShapeServingEngine Table 5 "Default" — plain jit over the full
+                             model, retrace+recompile per novel M, wrapped
+                             in the same pipeline for A/B comparison;
+  TextServingEngine          prefill+decode serving for the decode-based
+                             assigned architectures.
+
+Engines self-register ("flame" / "implicit" / "text"); construct them via
+``repro.serving.api.create_engine``.  See DESIGN.md for the request
+lifecycle diagram.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,41 +37,192 @@ import numpy as np
 
 from repro.core import dso as DSO
 from repro.core import pda as PDA
-from repro.core.climber import N_SIDE_FEATURES, climber_forward
+from repro.core.climber import N_SIDE_FEATURES
 from repro.models.model import ModelBundle
+from repro.serving.api import (AdmissionQueueFull, ResponseFuture,
+                               ServeMetrics, ServeRequest, ServeResponse,
+                               register_engine)
 from repro.serving.kv_cache import KVCacheManager
 
-
-@dataclasses.dataclass
-class ServeMetrics:
-    requests: int = 0
-    items: int = 0
-    first_t: float = 0.0
-    last_t: float = 0.0
-    latencies: list = dataclasses.field(default_factory=list)
-
-    def record(self, n_items: int, latency_s: float):
-        now = time.perf_counter()
-        if self.requests == 0:
-            self.first_t = now - latency_s
-        self.last_t = now
-        self.requests += 1
-        self.items += n_items
-        self.latencies.append(latency_s)
-
-    def summary(self) -> Dict[str, float]:
-        lat = np.array(self.latencies) if self.latencies else np.zeros(1)
-        wall = max(self.last_t - self.first_t, 1e-9)
-        return {
-            "requests": self.requests,
-            "throughput_items_per_s": self.items / wall,
-            "mean_latency_ms": float(lat.mean() * 1e3),
-            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
-        }
+_STOP = object()
 
 
-class FlameEngine:
-    """PDA -> DSO -> Climber, per the paper's Fig 1/Fig 4."""
+def _try_fail(fut: ResponseFuture, exc: BaseException):
+    """Best-effort set_exception: the future may have been resolved by a
+    worker in the same race window."""
+    try:
+        fut.set_exception(exc)
+    except Exception:  # InvalidStateError — already resolved, fine
+        pass
+
+
+class _PipelinedEngine:
+    """API v2 pipeline scaffolding shared by all engines.
+
+    ``submit`` admits into a bounded queue (blocking when full is the
+    backpressure signal; a timeout raises :class:`AdmissionQueueFull`);
+    ``n_workers`` threads drain it and run the engine-specific ``_execute``.
+    Subclasses must finish their own setup *before* calling ``__init__``
+    here — workers start immediately."""
+
+    def __init__(self, *, max_pending: int = 64, n_workers: int = 4,
+                 name: str = "engine"):
+        self._metrics = ServeMetrics()
+        self._admission: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._open = True
+        self._workers: List[threading.Thread] = []
+        for i in range(n_workers):
+            th = threading.Thread(target=self._worker_loop,
+                                  name=f"{name}-worker-{i}", daemon=True)
+            th.start()
+            self._workers.append(th)
+
+    # ---- engine-specific hooks ----
+    def _execute(self, request: ServeRequest
+                 ) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Run one request; returns (output, stage timings)."""
+        raise NotImplementedError
+
+    def _admit_hook(self, request: ServeRequest):
+        """Called on the caller's thread at submit time (e.g. PDA prefetch)."""
+
+    def _extra_metrics(self) -> Dict[str, float]:
+        return {}
+
+    def _close(self):
+        """Engine-specific teardown after the workers have drained."""
+
+    # ---- ServingEngine protocol ----
+    def submit(self, request: ServeRequest, *,
+               timeout: Optional[float] = None) -> ResponseFuture:
+        if not self._open:
+            raise RuntimeError("engine is shut down")
+        fut = ResponseFuture(request)
+        self._admit_hook(request)
+        t_submit = time.perf_counter()
+        try:
+            if timeout == 0:
+                self._admission.put_nowait((fut, t_submit))
+            else:
+                self._admission.put((fut, t_submit), timeout=timeout)
+        except queue.Full:
+            raise AdmissionQueueFull(
+                f"admission queue full ({self._admission.maxsize} pending)"
+            ) from None
+        if not self._open:
+            # lost the race with shutdown(): the workers may already have
+            # drained their stop sentinels, so nobody will resolve this
+            # future — fail it rather than hang the caller
+            _try_fail(fut, RuntimeError("engine shut down during submit"))
+        return fut
+
+    def serve(self, history: np.ndarray,
+              candidates: Optional[np.ndarray] = None, **kw) -> np.ndarray:
+        """Blocking sugar around submit()."""
+        req = ServeRequest(
+            history=np.asarray(history),
+            candidates=None if candidates is None else np.asarray(candidates),
+            **kw)
+        return self.submit(req).result().output
+
+    def metrics(self) -> Dict[str, float]:
+        out = self._metrics.summary()
+        out["pending"] = self._admission.qsize()
+        out.update(self._extra_metrics())
+        return out
+
+    def shutdown(self):
+        if not self._open:
+            return
+        self._open = False
+        for _ in self._workers:
+            try:
+                # bounded: with wedged workers and a full queue an
+                # untimed put would hang shutdown before the joins below
+                self._admission.put(_STOP, timeout=5.0)
+            except queue.Full:
+                break
+        for th in self._workers:
+            th.join(timeout=10.0)
+        # fail any request that raced past the stop sentinels
+        while True:
+            try:
+                item = self._admission.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _STOP:
+                _try_fail(item[0], RuntimeError("engine shut down"))
+        self._close()
+
+    # ---- worker side ----
+    def _worker_loop(self):
+        while True:
+            item = self._admission.get()
+            if item is _STOP:
+                return
+            fut, t_submit = item
+            t_deq = time.perf_counter()
+            req = fut.request
+            try:
+                output, timings = self._execute(req)
+                latency = time.perf_counter() - t_submit
+                timings = {"queue_s": t_deq - t_submit, **timings}
+                n_items = req.m if req.candidates is not None else len(output)
+                self._metrics.record(n_items, latency)
+                fut.set_result(ServeResponse(req.request_id, output,
+                                             latency, timings))
+            except BaseException as e:  # noqa: BLE001 — surface via future
+                _try_fail(fut, e)
+
+
+def _make_features(feature_mode: str, store, cache_capacity: int,
+                   cache_ttl_s: float):
+    store = store or PDA.RemoteFeatureStore(feature_dim=N_SIDE_FEATURES)
+    cache = None if feature_mode == "off" else PDA.BucketedLRUCache(
+        cache_capacity, cache_ttl_s)
+    return store, PDA.FeatureQueryEngine(store, cache, mode=feature_mode)
+
+
+class _SideFeatureMixin:
+    """PDA in action: fetch item features for the history, aggregate into
+    the request's side-feature vector (user-profile style)."""
+
+    def _check_request(self, req: ServeRequest):
+        """Reject malformed requests before their chunks reach the shared
+        coalescing queue — a bad shape there would fail every co-rider
+        batched into the same dispatch, not just this request."""
+        if req.candidates is None or req.candidates.ndim != 1 or req.m < 1:
+            raise ValueError(
+                f"request {req.request_id}: candidates must be a non-empty "
+                f"1-D id array, got "
+                f"{None if req.candidates is None else req.candidates.shape}")
+        if req.history.ndim != 1 or req.history.shape[0] < self.n_history:
+            raise ValueError(
+                f"request {req.request_id}: history must be a 1-D id array "
+                f"with >= n_history={self.n_history} entries, got "
+                f"{req.history.shape}")
+
+    def _side_features(self, history: np.ndarray) -> np.ndarray:
+        feats = self.features.query([int(i) for i in history])
+        got = [v for v in feats.values() if v is not None]
+        if not got:
+            return np.zeros((1, N_SIDE_FEATURES), np.float32)
+        return np.mean(got, axis=0, keepdims=True).astype(np.float32)
+
+    def _admit_hook(self, request: ServeRequest):
+        self.features.prefetch([int(i) for i in request.history])
+
+
+@register_engine("flame")
+class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
+    """PDA -> coalescing DSO -> Climber, per the paper's Fig 1/Fig 4.
+
+    Executors are AOT-compiled with a real batch axis ``(max_batch,
+    bucket)``; the DSO dispatcher merges same-bucket chunks from different
+    in-flight requests into one executor call (time-window + fill-target
+    policy) and scatters rows back to per-request futures.  Batch rows are
+    independent, so coalesced scores are bitwise-identical to sequential
+    per-request serving (tests assert this)."""
 
     def __init__(self, bundle: ModelBundle, params, *, n_history: int,
                  buckets: Sequence[int] = (512, 256, 128),
@@ -65,110 +230,175 @@ class FlameEngine:
                  feature_mode: str = "sync",
                  cache_capacity: int = 50_000, cache_ttl_s: float = 30.0,
                  store: Optional[PDA.RemoteFeatureStore] = None,
-                 packed: bool = True):
+                 coalesce: bool = True, max_batch: int = 4,
+                 window_s: float = 0.002,
+                 max_pending: int = 64, n_workers: int = 4):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
         self.n_history = n_history
-        self.packed = packed
+        self.store, self.features = _make_features(
+            feature_mode, store, cache_capacity, cache_ttl_s)
 
-        # ---- PDA ----
-        self.store = store or PDA.RemoteFeatureStore(
-            feature_dim=N_SIDE_FEATURES)
-        cache = None if feature_mode == "off" else PDA.BucketedLRUCache(
-            cache_capacity, cache_ttl_s)
-        self.features = PDA.FeatureQueryEngine(self.store, cache,
-                                               mode=feature_mode)
-
-        # ---- DSO over AOT executors (FKE inside) ----
-        def build_fn(bucket: int):
+        def build_fn(bucket: int, batch: int):
             def fn(history, candidates, side):
-                batch = {"history": history, "candidates": candidates,
-                         "side": side}
-                return bundle.prefill(self.params, batch)
+                b = {"history": history, "candidates": candidates,
+                     "side": side}
+                return bundle.prefill(self.params, b)
             shapes = (
-                jax.ShapeDtypeStruct((1, n_history), jnp.int32),
-                jax.ShapeDtypeStruct((1, bucket), jnp.int32),
-                jax.ShapeDtypeStruct((1, N_SIDE_FEATURES), jnp.float32),
+                jax.ShapeDtypeStruct((batch, n_history), jnp.int32),
+                jax.ShapeDtypeStruct((batch, bucket), jnp.int32),
+                jax.ShapeDtypeStruct((batch, N_SIDE_FEATURES), jnp.float32),
             )
             return jax.jit(fn).lower(*shapes).compile()
 
-        self.pool = DSO.ExecutorPool(build_fn, buckets, n_streams=n_streams)
-        self.dso = DSO.DynamicStreamOrchestrator(
-            self.pool, self._pad_slice, self._gather)
-        self.metrics = ServeMetrics()
+        policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
+                                    window_s=window_s)
+        self.dso = DSO.CoalescingOrchestrator(
+            build_fn, buckets, self._pad_slice, self._gather,
+            policy=policy, n_streams=n_streams)
+        super().__init__(max_pending=max_pending, n_workers=n_workers,
+                         name="flame")
 
-    # ---- request plumbing ----
-    def _side_features(self, history: np.ndarray) -> np.ndarray:
-        """PDA in action: fetch item features for the history, aggregate into
-        the request's side-feature vector (user-profile style)."""
-        feats = self.features.query([int(i) for i in history])
-        got = [v for v in feats.values() if v is not None]
-        if not got:
-            return np.zeros((1, N_SIDE_FEATURES), np.float32)
-        return np.mean(got, axis=0, keepdims=True).astype(np.float32)
+    # back-compat alias: callers used to read eng.pool.build_time_s
+    @property
+    def pool(self):
+        return self.dso
 
+    # ---- chunk plumbing (host-side; the dispatcher stacks + transfers) ----
     def _pad_slice(self, request, chunk: DSO.Chunk):
         history, candidates, side = request
         sl = candidates[:, chunk.start:chunk.start + chunk.valid]
         if chunk.valid < chunk.bucket:
-            sl = jnp.pad(sl, ((0, 0), (0, chunk.bucket - chunk.valid)))
+            sl = np.pad(sl, ((0, 0), (0, chunk.bucket - chunk.valid)))
         return history, sl, side
 
-    def _gather(self, results, chunks: List[DSO.Chunk], m: int):
-        parts = [np.asarray(r[:, :c.valid]) for r, c in zip(results, chunks)]
+    def _gather(self, rows, chunks: List[DSO.Chunk], m: int):
+        parts = [r[:, :c.valid] for r, c in zip(rows, chunks)]
         return np.concatenate(parts, axis=1)
 
-    def serve(self, history: np.ndarray, candidates: np.ndarray):
-        """One SUMI request: history [n], candidates [M] -> scores [M, tasks]."""
+    def _execute(self, req: ServeRequest):
+        self._check_request(req)
         t0 = time.perf_counter()
-        side = self._side_features(history)
-        if self.packed:
-            side_dev, = PDA.packed_transfer([side])
-        else:
-            side_dev, = PDA.unpacked_transfer([side])
-        hist = jnp.asarray(history[None, :self.n_history], jnp.int32)
-        cand = jnp.asarray(candidates[None], jnp.int32)
-        out = self.dso.score((hist, cand, side_dev), candidates.shape[0])
-        dt = time.perf_counter() - t0
-        self.metrics.record(candidates.shape[0], dt)
-        return out[0]
+        side = self._side_features(req.history)
+        t1 = time.perf_counter()
+        hist = np.asarray(req.history[None, :self.n_history], np.int32)
+        cand = np.asarray(req.candidates[None], np.int32)
+        out = self.dso.score((hist, cand, side), req.m)
+        t2 = time.perf_counter()
+        return out[0], {"features_s": t1 - t0, "execute_s": t2 - t1}
 
-    def shutdown(self):
+    def _extra_metrics(self):
+        out = {f"dso_{k}": v for k, v in self.dso.stats().items()}
+        out["dso_build_s"] = self.dso.build_time_s
+        out.update({f"pda_{k}": v for k, v in
+                    dataclasses.asdict(self.features.stats).items()})
+        return out
+
+    def _close(self):
         self.features.shutdown()
         self.dso.shutdown()
 
 
-class TextServingEngine:
-    """Continuous-batching-lite decode serving for text architectures."""
+@register_engine("implicit")
+class ImplicitShapeServingEngine(_SideFeatureMixin, _PipelinedEngine):
+    """Table 5 "Default" — plain jit over the full model: every novel
+    candidate count M retraces + recompiles in-band (the XLA analogue of
+    TensorRT implicit-shape dynamic (re)allocation).  Same pipeline and
+    protocol as FlameEngine so the two are A/B-comparable."""
+
+    def __init__(self, bundle: ModelBundle, params, *, n_history: int,
+                 feature_mode: str = "off",
+                 cache_capacity: int = 50_000, cache_ttl_s: float = 30.0,
+                 store: Optional[PDA.RemoteFeatureStore] = None,
+                 max_pending: int = 64, n_workers: int = 4):
+        self.bundle = bundle
+        self.params = params
+        self.n_history = n_history
+        self.store, self.features = _make_features(
+            feature_mode, store, cache_capacity, cache_ttl_s)
+        self._fn = jax.jit(lambda h, c, s: bundle.prefill(
+            params, {"history": h, "candidates": c, "side": s}))
+        self.compiles = 0
+        self._seen: set = set()
+        self._seen_lock = threading.Lock()
+        super().__init__(max_pending=max_pending, n_workers=n_workers,
+                         name="implicit")
+
+    def _execute(self, req: ServeRequest):
+        self._check_request(req)
+        t0 = time.perf_counter()
+        side = self._side_features(req.history)
+        t1 = time.perf_counter()
+        with self._seen_lock:
+            if req.m not in self._seen:
+                self._seen.add(req.m)
+                self.compiles += 1
+        hist = jnp.asarray(req.history[None, :self.n_history], jnp.int32)
+        cand = jnp.asarray(req.candidates[None], jnp.int32)
+        out = self._fn(hist, cand, jnp.asarray(side))
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        return np.asarray(out)[0], {"features_s": t1 - t0,
+                                    "execute_s": t2 - t1}
+
+    def _extra_metrics(self):
+        out = {"jit_compiles": self.compiles}
+        out.update({f"pda_{k}": v for k, v in
+                    dataclasses.asdict(self.features.stats).items()})
+        return out
+
+    def _close(self):
+        self.features.shutdown()
+
+
+@register_engine("text")
+class TextServingEngine(_PipelinedEngine):
+    """Continuous-batching-lite decode serving for text architectures.
+
+    Through the API v2 surface, ``request.history`` is the prompt token-id
+    array and ``request.n_tokens`` the generation budget; the batched
+    ``generate`` entry point remains for direct callers."""
 
     def __init__(self, bundle: ModelBundle, params, *, batch: int = 4,
-                 max_len: int = 256, **cache_kw):
+                 max_len: int = 256, max_pending: int = 64, **cache_kw):
         self.bundle = bundle
         self.params = params
         self.kv = KVCacheManager(bundle, batch, max_len, **cache_kw)
         self._decode = jax.jit(
             lambda p, c, b: bundle.decode_step(p, c, b))
+        self._gen_lock = threading.Lock()
+        # decode state is single-stream: exactly one pipeline worker
+        super().__init__(max_pending=max_pending, n_workers=1, name="text")
+
+    def _execute(self, req: ServeRequest):
+        t0 = time.perf_counter()
+        out = self.generate([np.asarray(req.history)],
+                            n_tokens=req.n_tokens)[0]
+        return out, {"execute_s": time.perf_counter() - t0}
 
     def generate(self, prompts: List[np.ndarray], n_tokens: int = 16,
                  greedy: bool = True) -> List[np.ndarray]:
         """Serve a batch of prompts (token id arrays) for n_tokens each."""
         assert len(prompts) <= self.kv.batch
-        plen = max(len(p) for p in prompts)
-        padded = np.stack([np.pad(p, (0, plen - len(p))) for p in prompts])
-        batch = {"tokens": jnp.asarray(padded, jnp.int32)}
-        # prefill all at once (batch-padded)
-        caches, _ = self.bundle.cache_init(len(prompts), self.kv.max_len)
-        logits, caches = self.bundle.prefill(self.params, batch, caches=caches)
-        last = jnp.argmax(logits[:, -1], axis=-1)
-        outs = [[int(t)] for t in last]
-        cur = plen
-        for _ in range(n_tokens - 1):
-            step = {"tokens": last[:, None].astype(jnp.int32),
-                    "cur_index": jnp.int32(cur)}
-            logits, caches = self._decode(self.params, caches, step)
+        with self._gen_lock:
+            plen = max(len(p) for p in prompts)
+            padded = np.stack([np.pad(p, (0, plen - len(p)))
+                               for p in prompts])
+            batch = {"tokens": jnp.asarray(padded, jnp.int32)}
+            # prefill all at once (batch-padded)
+            caches, _ = self.bundle.cache_init(len(prompts), self.kv.max_len)
+            logits, caches = self.bundle.prefill(self.params, batch,
+                                                 caches=caches)
             last = jnp.argmax(logits[:, -1], axis=-1)
-            for i, t in enumerate(last):
-                outs[i].append(int(t))
-            cur += 1
-        return [np.array(o) for o in outs]
+            outs = [[int(t)] for t in last]
+            cur = plen
+            for _ in range(n_tokens - 1):
+                step = {"tokens": last[:, None].astype(jnp.int32),
+                        "cur_index": jnp.int32(cur)}
+                logits, caches = self._decode(self.params, caches, step)
+                last = jnp.argmax(logits[:, -1], axis=-1)
+                for i, t in enumerate(last):
+                    outs[i].append(int(t))
+                cur += 1
+            return [np.array(o) for o in outs]

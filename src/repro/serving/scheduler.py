@@ -14,6 +14,8 @@ from typing import Callable, Dict, List, Sequence
 
 import numpy as np
 
+from repro.serving.api import ServeRequest, ServingEngine
+
 
 @dataclasses.dataclass
 class TrafficConfig:
@@ -69,4 +71,38 @@ def run_workload(serve_fn: Callable, requests: List[Dict], concurrency: int = 4
         "mean_latency_ms": float(la.mean() * 1e3),
         "p50_latency_ms": float(np.percentile(la, 50) * 1e3),
         "p99_latency_ms": float(np.percentile(la, 99) * 1e3),
+    }
+
+
+def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
+                       arrival_gap_s: float = 0.0, seed: int = 0
+                       ) -> Dict[str, object]:
+    """Drive an API v2 engine through ``submit`` — all requests in flight
+    together, which is the condition under which the coalescing DSO can
+    merge same-bucket chunks from different requests into one dispatch.
+
+    ``arrival_gap_s`` > 0 sleeps a uniform random gap in [0, arrival_gap_s)
+    between submits (open-loop jittered arrivals).  Returns the run_workload
+    metric keys plus ``outputs`` (per-request score arrays, request order)
+    so callers can compare result correctness across engine configs."""
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    futs = []
+    for r in requests:
+        if arrival_gap_s > 0:
+            time.sleep(float(rng.uniform(0, arrival_gap_s)))
+        futs.append(engine.submit(ServeRequest(
+            history=r["history"], candidates=r["candidates"])))
+    resps = [f.result() for f in futs]
+    total = time.perf_counter() - t0
+    la = np.array([r.latency_s for r in resps])
+    items = sum(len(r["candidates"]) for r in requests)
+    return {
+        "requests": len(requests),
+        "total_s": total,
+        "throughput_items_per_s": items / total,
+        "mean_latency_ms": float(la.mean() * 1e3),
+        "p50_latency_ms": float(np.percentile(la, 50) * 1e3),
+        "p99_latency_ms": float(np.percentile(la, 99) * 1e3),
+        "outputs": [r.output for r in resps],
     }

@@ -1,0 +1,85 @@
+"""Property-test front-end: real hypothesis when installed, otherwise a tiny
+deterministic fallback so the modules still collect and their core
+assertions still run offline (the importorskip-style guard lives here, in
+one place, instead of in every module).
+
+The fallback implements only the strategy surface this repo's tests use —
+``integers``, ``sampled_from``, ``lists``, ``tuples`` — and a ``given``
+that replays the test body over a fixed number of seed-deterministic
+examples (same draws every run, no shrinking)."""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 25
+    _SEED = 0xF1A3E
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    def _lists(elem, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            if not unique:
+                return [elem.example(rng) for _ in range(n)]
+            out = []
+            tries = 0
+            while len(out) < n and tries < 50 * (n + 1):
+                v = elem.example(rng)
+                tries += 1
+                if v not in out:
+                    out.append(v)
+            return out
+        return _Strategy(draw)
+
+    def _tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    class _Strategies:
+        integers = staticmethod(_integers)
+        sampled_from = staticmethod(_sampled_from)
+        lists = staticmethod(_lists)
+        tuples = staticmethod(_tuples)
+
+    st = _Strategies()
+
+    def settings(**kw):
+        def deco(fn):
+            fn._prop_max_examples = kw.get("max_examples")
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: runner takes no params and carries no __wrapped__, so
+            # pytest does not mistake the drawn arguments for fixtures.
+            def runner():
+                n = min(getattr(fn, "_prop_max_examples", None)
+                        or _FALLBACK_EXAMPLES, _FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rng = _np.random.default_rng(_SEED + i)
+                    drawn = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*drawn)
+                    except BaseException:
+                        print(f"[propcheck] falsifying example #{i}: {drawn}")
+                        raise
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.models.attention import (context_parallel_attention,
                                     reference_attention)
 
@@ -20,10 +21,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.models.attention import context_parallel_attention, reference_attention
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 ks = jax.random.split(jax.random.key(0), 3)
 q = jax.random.normal(ks[0], (2, 256, 4, 32))
 k = jax.random.normal(ks[1], (2, 256, 2, 32))
@@ -41,8 +42,7 @@ print("OK")
 @pytest.mark.parametrize("mode,window", [("sliding", 64), ("causal", 0),
                                          ("full", 0)])
 def test_cp_attention_single_device(mode, window):
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     ks = jax.random.split(jax.random.key(0), 3)
     q = jax.random.normal(ks[0], (2, 256, 4, 32))
     k = jax.random.normal(ks[1], (2, 256, 2, 32))
@@ -67,8 +67,7 @@ def test_cp_halo_masks_wraparound():
     """Shard 0's halo comes from the LAST shard (ring ppermute) and must be
     fully masked: changing the tail of the sequence must not affect the
     first window of outputs under sliding attention."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     ks = jax.random.split(jax.random.key(1), 3)
     q = jax.random.normal(ks[0], (1, 128, 2, 16))
     k = jax.random.normal(ks[1], (1, 128, 2, 16))

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.models.layers import split_params
 from repro.models.moe import moe_apply, moe_apply_a2a, moe_init
 from tests.test_moe import make_cfg
@@ -22,6 +23,7 @@ import sys
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.models.layers import split_params
 from repro.models.moe import moe_apply, moe_apply_a2a, moe_init
 from tests.test_moe import make_cfg
@@ -29,8 +31,7 @@ from tests.test_moe import make_cfg
 cfg = make_cfg(e=8, k=2, cf=8.0)
 params, _ = split_params(moe_init(jax.random.key(0), cfg))
 x = jax.random.normal(jax.random.key(1), (8, 16, 64), jnp.float32)
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 ref, aux_ref = moe_apply(params, x, cfg)
 out, aux = jax.jit(lambda p, xx: moe_apply_a2a(p, xx, cfg, mesh=mesh,
                                                axis="data"))(params, x)
@@ -50,8 +51,7 @@ def test_a2a_single_shard_matches_gspmd():
     cfg = make_cfg(e=4, k=2, cf=8.0)
     params, _ = split_params(moe_init(jax.random.key(0), cfg))
     x = jax.random.normal(jax.random.key(1), (2, 32, 64), jnp.float32)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     ref, _ = moe_apply(params, x, cfg)
     out, aux = moe_apply_a2a(params, x, cfg, mesh=mesh, axis="data")
     np.testing.assert_allclose(np.asarray(out, np.float32),

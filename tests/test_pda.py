@@ -3,7 +3,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._propcheck import given, settings, st
 
 from repro.core.pda import (BucketedLRUCache, FeatureQueryEngine,
                             RemoteFeatureStore, pack_features,

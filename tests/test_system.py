@@ -46,8 +46,8 @@ def test_train_then_serve_pipeline(trained_climber):
     res = run_workload(lambda h, c: eng.serve(h, c), reqs, concurrency=3)
     assert res["requests"] == 12
     assert res["throughput_items_per_s"] > 0
-    assert eng.metrics.requests == 12
-    summary = eng.metrics.summary()
+    summary = eng.metrics()
+    assert summary["requests"] == 12
     assert summary["p99_latency_ms"] >= summary["mean_latency_ms"] * 0.5
     eng.shutdown()
 
