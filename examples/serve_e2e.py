@@ -38,7 +38,7 @@ def main():
     bundle = build_model(cfg)
     ds = GRInteractionDataset(n_items=N_ITEMS, n_users=2_000, seed=0)
     it = make_batch_iterator(ds, 16, n_history=HISTORY, n_candidates=8)
-    print("[1/3] training climber on synthetic interactions...")
+    print("[1/4] training climber on synthetic interactions...")
     params, _, hist = train(bundle, it, 60,
                             AdamWConfig(lr=3e-3, warmup_steps=5),
                             log_every=20, impl="reference",
@@ -46,7 +46,7 @@ def main():
                                 f"    step {m['step']:>3} loss {m['loss']:.4f}"))
 
     # ---- 2. serve through the full FLAME pipeline (API v2) ----
-    print("[2/3] building FLAME engine (PDA + coalescing DSO + AOT "
+    print("[2/4] building FLAME engine (PDA + coalescing DSO + AOT "
           "executors)...")
     eng = FlameEngine(bundle, params, n_history=HISTORY,
                       buckets=(64, 32, 16), n_streams=2, feature_mode="sync",
@@ -67,7 +67,7 @@ def main():
           f"dispatches (avg fill {m['dso_avg_fill']:.1f})")
 
     # ---- 3. quality check: served scores track planted preferences ----
-    print("[3/3] verifying served scores track planted preferences...")
+    print("[3/4] verifying served scores track planted preferences...")
     rng = np.random.default_rng(7)
     pos, neg = [], []
     for _ in range(30):
@@ -76,10 +76,35 @@ def main():
         lab = r["labels"][:, 0] > 0.5
         pos.extend(scores[lab, 0].tolist())
         neg.extend(scores[~lab, 0].tolist())
+    track_ok = np.mean(pos) > np.mean(neg)
     print(f"    mean score on positives {np.mean(pos):.4f} vs "
           f"negatives {np.mean(neg):.4f} "
-          f"({'OK' if np.mean(pos) > np.mean(neg) else 'FAIL'})")
+          f"({'OK' if track_ok else 'FAIL'})")
+
+    # ---- 4. session re-rank through the history-KV pool ----
+    print("[4/4] session re-rank: split forward + history-KV pool...")
+    engc = FlameEngine(bundle, params, n_history=HISTORY,
+                       buckets=(64, 32, 16), n_streams=2, feature_mode="sync",
+                       coalesce=True, max_batch=4, n_workers=4,
+                       history_cache=True, pool_slots=64)
+    r = ds.sample_request(rng, HISTORY, 16)
+    ref = eng.serve(r["history"], r["candidates"])
+    for _ in range(4):      # session re-ranks: same user, fresh slates
+        engc.serve(r["history"], rng.integers(0, N_ITEMS, 16).astype(np.int32),
+                   user_id=1)
+    first = engc.serve(r["history"], r["candidates"], user_id=1)
+    m = engc.metrics()
+    # full-pass and cached scores come from different AOT executables, so
+    # the contract is tight allclose (<= 2e-3 on sigmoids), not bitwise
+    same = np.allclose(np.asarray(ref, np.float32),
+                       np.asarray(first, np.float32), atol=2e-3, rtol=2e-3)
+    print(f"    pool: {m['pool_hits']} hits / {m['pool_misses']} miss "
+          f"({m['pool_bytes']} bytes cached); cached scores == full pass: "
+          f"{'OK' if same else 'FAIL'}")
+    engc.shutdown()
     eng.shutdown()
+    if not (track_ok and same):
+        raise SystemExit("serve_e2e correctness checks FAILED")
 
 
 if __name__ == "__main__":

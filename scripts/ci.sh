@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the repo's own test suite plus an end-to-end serving
+# smoke run.  Run from the repo root:  bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: examples/serve_e2e.py =="
+python examples/serve_e2e.py
+
+echo "CI OK"

@@ -81,54 +81,27 @@ def climber_init(key, cfg: ModelConfig):
     return L.split_params(params)
 
 
-def _block_forward(bp, x, n_history: int, cfg, impl: str):
-    """x [B,S,d] through one stacked transformer block under the SUMI mask.
-
-    All candidates share position ``n_history`` (each is a hypothetical
-    "next item"), which makes scoring permutation-invariant across the
-    candidate set — required for DSO chunk-splitting to be exact."""
-    b, s, d = x.shape
-    pos = jnp.concatenate([jnp.arange(n_history),
-                           jnp.full((s - n_history,), n_history)])
-    positions = jnp.broadcast_to(pos, (b, s))
-
-    def layer(x, p):
-        h = L.apply_norm(cfg, p["norm1"], x)
-        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
-        tau = jax.nn.softplus(p["temp"][0]) + 0.5
-        o = sumi.sumi_attention(q, k, v, n_history, impl=impl, temperature=tau)
-        x = x + A.project_out(p["attn"], o)
-        h2 = L.apply_norm(cfg, p["norm2"], x)
-        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
-
-    from repro.models.transformer import scan_or_unroll
-    x, _ = scan_or_unroll(layer, x, bp)
-    return x
+def _tau(p):
+    """Adaptive temperature for one layer's params."""
+    return jax.nn.softplus(p["temp"][0]) + 0.5
 
 
-def climber_forward(params, batch: Dict, cfg: ModelConfig, *,
-                    impl: str = "reference"):
-    """batch: history [B,n] ids, candidates [B,M] ids, side [B,F].
-    Returns task logits [B, M, num_tasks]."""
-    c = cfg.climber
+def _history_block_inputs(params, batch: Dict, cfg) -> list:
+    """Embed the history and reorganize it into per-block input sequences:
+    [context side token, sub-sequence + positional embeddings]."""
     hist = jnp.take(params["embed"]["embedding"], batch["history"], axis=0)
-    cand = jnp.take(params["embed"]["embedding"], batch["candidates"], axis=0)
     b, n, d = hist.shape
-    m = cand.shape[1]
     side = jnp.einsum("bf,fd->bd", batch["side"].astype(hist.dtype),
                       params["side_proj"])[:, None]
-
-    nb = c.num_blocks
+    nb = cfg.climber.num_blocks
     sub = hist.reshape(b, nb, n // nb, d)
-    block_outs = []
-    for i in range(nb):
-        xb = sub[:, i] + params["pos_embed"][None, :n // nb]
-        xb = jnp.concatenate([side, xb], axis=1)        # context token prefix
-        seq, n_hist = sumi.assemble(xb, cand)
-        out = _block_forward(params["blocks"][f"b{i}"], seq, n_hist, cfg, impl)
-        block_outs.append(sumi.split_candidates(out, n_hist))
-    h = jnp.stack(block_outs, axis=2)                   # [B,M,Nb,d]
+    return [jnp.concatenate([side, sub[:, i] + params["pos_embed"][None, :n // nb]],
+                            axis=1)
+            for i in range(nb)]
 
+
+def _fuse_and_head(params, h, cfg):
+    """Per-candidate block outputs h [B,M,Nb,d] -> task logits [B,M,T]."""
     # bit-wise gating fusion: per-dimension softmax over blocks
     gate_logits = h.astype(jnp.float32) * params["gate_w"].astype(jnp.float32) \
         + params["gate_b"].astype(jnp.float32)
@@ -148,6 +121,138 @@ def climber_forward(params, batch: Dict, cfg: ModelConfig, *,
     return logits
 
 
+def _block_forward(bp, x, n_history: int, cfg, impl: str):
+    """x [B,S,d] through one stacked transformer block under the SUMI mask.
+
+    All candidates share position ``n_history`` (each is a hypothetical
+    "next item"), which makes scoring permutation-invariant across the
+    candidate set — required for DSO chunk-splitting to be exact."""
+    b, s, d = x.shape
+    pos = jnp.concatenate([jnp.arange(n_history),
+                           jnp.full((s - n_history,), n_history)])
+    positions = jnp.broadcast_to(pos, (b, s))
+
+    def layer(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        o = sumi.sumi_attention(q, k, v, n_history, impl=impl,
+                                temperature=_tau(p))
+        x = x + A.project_out(p["attn"], o)
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
+
+    from repro.models.transformer import scan_or_unroll
+    x, _ = scan_or_unroll(layer, x, bp)
+    return x
+
+
+def _block_encode_kv(bp, x, cfg, impl: str):
+    """History-only causal pass over one block; returns per-layer K/V.
+
+    Under the SUMI mask the history prefix is self-contained (causal among
+    itself, blind to candidates), so the K/V recorded here are exactly the
+    history rows the monolithic pass would compute."""
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def layer(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        # n_history == s: the SUMI mask degenerates to causal here
+        o = sumi.sumi_attention(q, k, v, s, impl=impl, temperature=_tau(p))
+        x = x + A.project_out(p["attn"], o)
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), (k, v)
+
+    from repro.models.transformer import scan_or_unroll
+    _, kv = scan_or_unroll(layer, x, bp)
+    return kv                                  # (k, v), each [L,B,s,Hkv,D]
+
+
+def _block_score(bp, cand, k_hist, v_hist, cfg, impl: str):
+    """Candidate-only pass for one block against cached history K/V.
+
+    ``cand`` [B,M,d]; ``k_hist``/``v_hist`` [L,B,n_hist,Hkv,D].  Candidates
+    all sit at RoPE position ``n_hist`` exactly as in the monolithic pass."""
+    b, m, d = cand.shape
+    n_hist = k_hist.shape[2]
+    positions = jnp.broadcast_to(jnp.asarray(n_hist), (b, m))
+
+    def layer(x, inp):
+        p, kh, vh = inp
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        o = sumi.cached_candidate_attention(q, kh, vh, k, v, impl=impl,
+                                            temperature=_tau(p))
+        x = x + A.project_out(p["attn"], o)
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
+
+    from repro.models.transformer import scan_or_unroll
+    x, _ = scan_or_unroll(layer, cand, (bp, k_hist, v_hist))
+    return x
+
+
+def encode_history(params, batch: Dict, cfg: ModelConfig, *,
+                   impl: str = "reference"):
+    """batch: history [B,n] ids, side [B,F] -> HistoryKV pytree.
+
+    Per block ``b{i}``: {"k", "v"} with shape [B, L, n_hist_block, Hkv, D]
+    (batch axis leading, so serving can stack pool entries from different
+    requests along axis 0).  n_hist_block = n // num_blocks + 1 — the
+    context side token rides at position 0 of every block sequence, so the
+    cached K/V fold the side features in."""
+    kv = {}
+    for i, xb in enumerate(_history_block_inputs(params, batch, cfg)):
+        k, v = _block_encode_kv(params["blocks"][f"b{i}"], xb, cfg, impl)
+        kv[f"b{i}"] = {"k": jnp.moveaxis(k, 1, 0), "v": jnp.moveaxis(v, 1, 0)}
+    return kv
+
+
+def score_candidates(params, history_kv, candidates, cfg: ModelConfig, *,
+                     impl: str = "reference"):
+    """Candidate-only forward against cached history K/V.
+
+    ``candidates`` [B,M] ids; ``history_kv`` from :func:`encode_history`.
+    Returns task logits [B,M,T] — numerically identical to the candidate
+    slice of :func:`climber_forward` (bitwise under the reference impl)."""
+    cand = jnp.take(params["embed"]["embedding"], candidates, axis=0)
+    block_outs = []
+    for i in range(cfg.climber.num_blocks):
+        kv = history_kv[f"b{i}"]
+        block_outs.append(_block_score(
+            params["blocks"][f"b{i}"], cand,
+            jnp.moveaxis(kv["k"], 1, 0), jnp.moveaxis(kv["v"], 1, 0),
+            cfg, impl))
+    h = jnp.stack(block_outs, axis=2)                   # [B,M,Nb,d]
+    return _fuse_and_head(params, h, cfg)
+
+
+def history_kv_specs(params, cfg: ModelConfig, n_history: int,
+                     batch: int = 1):
+    """ShapeDtypeStruct pytree of the HistoryKV for AOT executor builds."""
+    batch_spec = {
+        "history": jax.ShapeDtypeStruct((batch, n_history), jnp.int32),
+        "side": jax.ShapeDtypeStruct((batch, N_SIDE_FEATURES), jnp.float32),
+    }
+    return jax.eval_shape(lambda p, b: encode_history(p, b, cfg),
+                          params, batch_spec)
+
+
+def climber_forward(params, batch: Dict, cfg: ModelConfig, *,
+                    impl: str = "reference"):
+    """batch: history [B,n] ids, candidates [B,M] ids, side [B,F].
+    Returns task logits [B, M, num_tasks]."""
+    cand = jnp.take(params["embed"]["embedding"], batch["candidates"], axis=0)
+    block_outs = []
+    for i, xb in enumerate(_history_block_inputs(params, batch, cfg)):
+        seq, n_hist = sumi.assemble(xb, cand)
+        out = _block_forward(params["blocks"][f"b{i}"], seq, n_hist, cfg, impl)
+        block_outs.append(sumi.split_candidates(out, n_hist))
+    h = jnp.stack(block_outs, axis=2)                   # [B,M,Nb,d]
+    return _fuse_and_head(params, h, cfg)
+
+
 def build_climber(cfg: ModelConfig) -> ModelBundle:
     c = cfg.climber
 
@@ -165,6 +270,20 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
     def prefill(params, batch, impl: str = "reference", caches=None):
         """Serving entry: per-candidate multi-task probabilities [B,M,T]."""
         return jax.nn.sigmoid(climber_forward(params, batch, cfg, impl=impl))
+
+    def encode_history_fn(params, batch, impl: str = "reference"):
+        """Serving entry: history-only pass -> cacheable HistoryKV pytree."""
+        return encode_history(params, batch, cfg, impl=impl)
+
+    def score_candidates_fn(params, history_kv, candidates,
+                            impl: str = "reference"):
+        """Serving entry: candidate-only probabilities [B,M,T] against a
+        cached HistoryKV — prefill == score_candidates(encode_history)."""
+        return jax.nn.sigmoid(
+            score_candidates(params, history_kv, candidates, cfg, impl=impl))
+
+    def history_kv_specs_fn(params, n_history: int, batch: int = 1):
+        return history_kv_specs(params, cfg, n_history, batch)
 
     def decode_step(params, caches, batch, impl: str = "reference"):
         raise NotImplementedError(
@@ -194,4 +313,7 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
         return lg
 
     return ModelBundle(cfg, init, loss_fn, prefill, decode_step,
-                       input_specs, input_logical, cache_init)
+                       input_specs, input_logical, cache_init,
+                       encode_history=encode_history_fn,
+                       score_candidates=score_candidates_fn,
+                       history_kv_specs=history_kv_specs_fn)

@@ -220,8 +220,19 @@ class CoalescingOrchestrator:
     args for one chunk (each shaped ``(1, ...)``, candidate axis padded to
     ``chunk.bucket``); ``gather_fn(rows, chunks, m)`` -> final output.
 
-    Per bucket there are ``n_streams`` worker threads, each owning one
-    executor (the CUDA-stream analogue).  A worker that pops the first
+    ``families`` generalizes the executor key from ``bucket`` to
+    ``(kind, bucket)`` — the history-cache serving path registers separate
+    executor families for full-pass, candidate-only (pool hit) and
+    history-encode (pool miss) dispatches, each with its own bucket list and
+    coalescing queues.  With families, ``build_fn(kind, bucket, batch)``
+    builds each executor, ``submit(..., kind=...)`` routes, and
+    ``pad_slice_fn(request, chunk, kind)`` / ``gather_fn(rows, chunks, m,
+    kind)`` slice and reassemble.  Executor outputs may be arbitrary pytrees
+    (the encode family returns a HistoryKV dict); rows are scattered back
+    leaf-wise.
+
+    Per (kind, bucket) there are ``n_streams`` worker threads, each owning
+    one executor (the CUDA-stream analogue).  A worker that pops the first
     pending chunk keeps collecting until ``max_batch`` rows are filled or
     ``window_s`` elapses, stacks the host args along the batch axis (ONE
     device transfer per argument per dispatch — the PDA packed-transfer
@@ -230,12 +241,31 @@ class CoalescingOrchestrator:
     independent under XLA, so coalesced scores are bitwise-identical to
     solo dispatches (asserted in tests)."""
 
-    def __init__(self, build_fn: Callable[[int, int], Callable],
-                 buckets: Sequence[int],
-                 pad_slice_fn: Callable, gather_fn: Callable,
+    _DEFAULT_KIND = "default"
+
+    def __init__(self, build_fn: Callable,
+                 buckets: Optional[Sequence[int]] = None,
+                 pad_slice_fn: Callable = None, gather_fn: Callable = None,
                  policy: CoalescePolicy = CoalescePolicy(),
-                 n_streams: int = 2):
-        self.buckets = sorted(set(buckets), reverse=True)
+                 n_streams: int = 2,
+                 families: Optional[Dict[str, Sequence[int]]] = None):
+        self._legacy = families is None
+        if families is None:
+            # adapt the single-family callbacks to the kinds signatures once
+            # so the dispatch paths below stay uniform
+            if buckets is None:
+                raise ValueError("pass either buckets (legacy single-family)"
+                                 " or families")
+            families = {self._DEFAULT_KIND: buckets}
+            _build, _pad, _gather = build_fn, pad_slice_fn, gather_fn
+            build_fn = lambda kind, b, batch: _build(b, batch)  # noqa: E731
+            pad_slice_fn = lambda req, c, kind: _pad(req, c)    # noqa: E731
+            gather_fn = lambda rows, cs, m, kind: _gather(rows, cs, m)  # noqa: E731
+        self.families: Dict[str, List[int]] = {
+            kind: sorted(set(bs), reverse=True)
+            for kind, bs in families.items()}
+        # primary (first-registered) family drives the legacy .buckets view
+        self.buckets = next(iter(self.families.values()))
         self.policy = policy
         self.pad_slice = pad_slice_fn
         self.gather = gather_fn
@@ -243,57 +273,67 @@ class CoalescingOrchestrator:
         self.chunk_count = 0
         self.dispatch_count = 0
         self.rows_dispatched = 0       # real (non-padding) rows
+        self.kind_chunks: Dict[str, int] = {k: 0 for k in self.families}
+        self.kind_dispatches: Dict[str, int] = {k: 0 for k in self.families}
         self._stat_lock = threading.Lock()
         self._stop = False
 
-        self._pending: Dict[int, "collections.deque[_PendingChunk]"] = {}
-        self._cond: Dict[int, threading.Condition] = {}
+        self._pending: Dict[Tuple[str, int],
+                            "collections.deque[_PendingChunk]"] = {}
+        self._cond: Dict[Tuple[str, int], threading.Condition] = {}
         self._threads: List[threading.Thread] = []
         self.build_time_s = 0.0
 
         t0 = time.perf_counter()
-        for b in self.buckets:
-            self._pending[b] = collections.deque()
-            self._cond[b] = threading.Condition()
-            compiled = build_fn(b, policy.batch)
-            for s in range(n_streams):
-                ex = Executor(b, compiled, eid=len(self._threads))
-                th = threading.Thread(target=self._worker, args=(b, ex),
-                                      name=f"dso-b{b}-s{s}", daemon=True)
-                self._threads.append(th)
+        for kind, bs in self.families.items():
+            for b in bs:
+                self._pending[(kind, b)] = collections.deque()
+                self._cond[(kind, b)] = threading.Condition()
+                compiled = build_fn(kind, b, policy.batch)
+                for s in range(n_streams):
+                    ex = Executor(b, compiled, eid=len(self._threads))
+                    th = threading.Thread(
+                        target=self._worker, args=(kind, b, ex),
+                        name=f"dso-{kind}-b{b}-s{s}", daemon=True)
+                    self._threads.append(th)
         self.build_time_s = time.perf_counter() - t0
         for th in self._threads:
             th.start()
 
     # ---- submission ----
-    def submit(self, request, m: int):
-        """Non-blocking: split into chunks, enqueue each onto its bucket's
-        coalescing queue; returns a lazy future gathering the chunk rows."""
-        plan = split_request(m, self.buckets)
+    def submit(self, request, m: int, kind: Optional[str] = None):
+        """Non-blocking: split into chunks, enqueue each onto its
+        (kind, bucket) coalescing queue; returns a lazy future gathering the
+        chunk rows."""
+        if kind is None:
+            kind = next(iter(self.families))
+        plan = split_request(m, self.families[kind])
         with self._stat_lock:
             self.chunk_count += len(plan)
+            self.kind_chunks[kind] += len(plan)
         futs = []
         for c in plan:
-            args = self.pad_slice(request, c)
+            args = self.pad_slice(request, c, kind)
             f = Future()
             futs.append(f)
-            cond = self._cond[c.bucket]
+            cond = self._cond[(kind, c.bucket)]
             with cond:
-                self._pending[c.bucket].append(_PendingChunk(args, f))
+                self._pending[(kind, c.bucket)].append(_PendingChunk(args, f))
                 cond.notify()
 
         def resolve():
             rows = [f.result() for f in futs]
-            return self.gather(rows, plan, m)
+            return self.gather(rows, plan, m, kind)
 
         return _Lazy(resolve)
 
-    def score(self, request, m: int):
-        return self.submit(request, m).result()
+    def score(self, request, m: int, kind: Optional[str] = None):
+        return self.submit(request, m, kind).result()
 
     # ---- dispatcher ----
-    def _worker(self, bucket: int, ex: Executor):
-        cond, pending = self._cond[bucket], self._pending[bucket]
+    def _worker(self, kind: str, bucket: int, ex: Executor):
+        key = (kind, bucket)
+        cond, pending = self._cond[key], self._pending[key]
         pol = self.policy
         while True:
             with cond:
@@ -315,9 +355,10 @@ class CoalescingOrchestrator:
                         if left <= 0:
                             break
                         cond.wait(timeout=left)
-            self._dispatch(ex, batch)
+            self._dispatch(kind, ex, batch)
 
-    def _dispatch(self, ex: Executor, batch: List[_PendingChunk]):
+    def _dispatch(self, kind: str, ex: Executor,
+                  batch: List[_PendingChunk]):
         n = len(batch)
         try:
             stacked = []
@@ -328,12 +369,14 @@ class CoalescingOrchestrator:
                 stacked.append(np.concatenate(rows, axis=0))
             out = ex(*stacked)
             jax.block_until_ready(out)
-            host = np.asarray(out)
+            host = jax.tree.map(np.asarray, out)   # pytree-valued outputs OK
             with self._stat_lock:
                 self.dispatch_count += 1
+                self.kind_dispatches[kind] += 1
                 self.rows_dispatched += n
             for i, c in enumerate(batch):
-                c.future.set_result(host[i:i + 1])
+                c.future.set_result(
+                    jax.tree.map(lambda a: a[i:i + 1], host))
         except BaseException as e:  # noqa: BLE001 — fail every rider
             for c in batch:
                 if not c.future.done():
@@ -343,13 +386,18 @@ class CoalescingOrchestrator:
     def stats(self) -> Dict[str, float]:
         with self._stat_lock:
             d = max(self.dispatch_count, 1)
-            return {
+            out = {
                 "chunks": self.chunk_count,
                 "dispatches": self.dispatch_count,
                 "rows_dispatched": self.rows_dispatched,
                 "avg_fill": self.rows_dispatched / d,
                 "batch_axis": self.policy.batch,
             }
+            if not self._legacy:
+                for kind in self.families:
+                    out[f"chunks_{kind}"] = self.kind_chunks[kind]
+                    out[f"dispatches_{kind}"] = self.kind_dispatches[kind]
+            return out
 
     def shutdown(self):
         self._stop = True

@@ -35,6 +35,29 @@ def sumi_attention(q, k, v, n_history: int, *, impl: str = "reference",
     return A.attention(q, k, v, "sumi", impl=impl, n_history=n_history)
 
 
+def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
+                               impl: str = "reference", temperature=None):
+    """Candidate-only SUMI attention against cached per-layer history K/V.
+
+    The SUMI mask makes the history prefix self-contained (history rows are
+    causal among themselves and never see candidates), so the history-side
+    K/V depend only on the user history and can be reused across requests.
+    Here ``q``/``k_cand``/``v_cand`` are [B,M,...] candidate projections and
+    ``k_hist``/``v_hist`` [B,n_history,...] come from a cached
+    ``encode_history`` pass; query row i sits at absolute KV position
+    ``n_history + i`` (its own key), which every impl honors via
+    ``q_offset``.  Output is bit-for-bit the candidate slice of the
+    monolithic SUMI pass under the reference impl (allclose for the
+    block-reordered chunked/pallas impls)."""
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    n_history = k_hist.shape[1]
+    k = jnp.concatenate([k_hist, k_cand], axis=1)
+    v = jnp.concatenate([v_hist, v_cand], axis=1)
+    return A.attention(q, k, v, "sumi", impl=impl, n_history=n_history,
+                       q_offset=n_history)
+
+
 def sumi_mask(n_history: int, n_candidates: int) -> jnp.ndarray:
     """Dense boolean mask (for tests / the unfused baseline)."""
     s = n_history + n_candidates
@@ -50,4 +73,17 @@ def flops_per_request(n_history: int, n_candidates: int, n_blocks: int,
     n_hist_b = n_history // n_blocks
     attn_pairs = n_hist_b * (n_hist_b + 1) / 2 + n_candidates * (n_hist_b + 1)
     per_layer = s_block * per_tok_proj + 2 * 2 * attn_pairs * d_model
+    return n_blocks * layers_per_block * per_layer
+
+
+def cached_flops_per_request(n_history: int, n_candidates: int, n_blocks: int,
+                             layers_per_block: int, d_model: int,
+                             d_ff: int) -> float:
+    """Analytic FLOPs of a candidate-only pass against cached history K/V:
+    projections/FFN run over M tokens instead of n_history + M, and the
+    attention pairs lose the causal history-history triangle."""
+    per_tok_proj = 2 * (4 * d_model * d_model + 2 * d_model * d_ff)
+    n_hist_b = n_history // n_blocks
+    attn_pairs = n_candidates * (n_hist_b + 1)
+    per_layer = n_candidates * per_tok_proj + 2 * 2 * attn_pairs * d_model
     return n_blocks * layers_per_block * per_layer

@@ -31,24 +31,34 @@ NEG_INF = -1e30
 
 
 def _kv_steps(mode: str, nk: int, bq: int, bk: int, window: int,
-              n_history: int) -> int:
+              n_history: int, q_offset: int = 0) -> int:
     if mode == "sliding":
         return min(nk, (window + bq + bk - 1) // bk + 1)
     if mode == "sumi":
-        nhb = (n_history + bk - 1) // bk
-        return min(nk, nhb) + 1
+        nhb = min(nk, (n_history + bk - 1) // bk)
+        # q_offset > 0 (cached-history path): every query is a candidate, so
+        # all history blocks are visited plus the block(s) holding its own
+        # key — the offset need not be bk-aligned, so the bq-wide self range
+        # can straddle two KV blocks
+        return nhb + (2 if q_offset else 1)
     return nk
 
 
 def _k_index(mode: str, qi, kj, *, nk: int, bq: int, bk: int, window: int,
-             n_history: int, steps: int):
+             n_history: int, steps: int, q_offset: int = 0):
     """Map (q block, kv step) -> kv block index (may be clamped; guard masks
     duplicates)."""
-    diag = (qi * bq + bq - 1) // bk            # block holding the diagonal
+    diag = (q_offset + qi * bq + bq - 1) // bk  # block holding the diagonal
     if mode == "sliding":
         raw = diag + kj - (steps - 1)          # last step = diagonal block
         return jnp.clip(raw, 0, nk - 1)
     if mode == "sumi":
+        if q_offset:
+            nhb = steps - 2
+            d0 = (q_offset + qi * bq) // bk    # first block of the self range
+            return jnp.where(kj < nhb, jnp.minimum(kj, nk - 1),
+                             jnp.clip(jnp.where(kj == nhb, d0, diag),
+                                      0, nk - 1))
         nhb = steps - 1
         return jnp.where(kj < nhb, jnp.minimum(kj, nk - 1),
                          jnp.minimum(diag, nk - 1))
@@ -56,17 +66,28 @@ def _k_index(mode: str, qi, kj, *, nk: int, bq: int, bk: int, window: int,
 
 
 def _guard(mode: str, qi, kj, *, nk: int, bq: int, bk: int, window: int,
-           n_history: int, steps: int):
+           n_history: int, steps: int, q_offset: int = 0):
     """True when this (q block, kv step) must be computed (fresh + visible)."""
     if mode == "full":
         return jnp.bool_(True)
-    diag = (qi * bq + bq - 1) // bk
+    diag = (q_offset + qi * bq + bq - 1) // bk
     if mode == "causal":
         return kj <= diag
     if mode == "sliding":
         raw = diag + kj - (steps - 1)
         return (raw >= 0) & (raw <= diag)
     if mode == "sumi":
+        if q_offset:
+            # cached-history path: all queries are candidates.  History
+            # blocks [0, nhb) are always visited; the two trailing steps
+            # cover the (possibly straddling) self range, skipping blocks
+            # the history sweep already produced and pure-padding blocks.
+            nhb = steps - 2
+            d0 = (q_offset + qi * bq) // bk
+            d1 = diag
+            self0 = (kj == nhb) & (d0 >= nhb) & (d0 < nk)
+            self1 = (kj == nhb + 1) & (d1 >= nhb) & (d1 < nk) & (d1 > d0)
+            return (kj < nhb) | self0 | self1
         nhb = steps - 1
         hist_step = (kj < nhb) & (kj <= diag)
         # diagonal step only needed when this q block extends past the
@@ -77,8 +98,8 @@ def _guard(mode: str, qi, kj, *, nk: int, bq: int, bk: int, window: int,
 
 
 def _element_mask(mode: str, rows, cols, *, window: int, n_history: int,
-                  sq: int, sk: int):
-    ok = (rows < sq) & (cols < sk)          # trim padding
+                  sq: int, sk: int, q_offset: int = 0):
+    ok = (rows < sq) & (cols < sk)          # trim padding (rows are local)
     if mode == "full":
         return ok
     if mode == "causal":
@@ -86,15 +107,17 @@ def _element_mask(mode: str, rows, cols, *, window: int, n_history: int,
     if mode == "sliding":
         return ok & (cols <= rows) & (rows - cols < window)
     if mode == "sumi":
-        hist = cols <= rows
-        cand = (cols < n_history) | (cols == rows)
-        return ok & jnp.where(rows < n_history, hist, cand)
+        abs_rows = rows + q_offset          # absolute position in the KV axis
+        hist = cols <= abs_rows
+        cand = (cols < n_history) | (cols == abs_rows)
+        return ok & jnp.where(abs_rows < n_history, hist, cand)
     raise ValueError(mode)
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                mode: str, bq: int, bk: int, window: int, n_history: int,
-               sq: int, sk: int, nk: int, steps: int, scale: float):
+               sq: int, sk: int, nk: int, steps: int, scale: float,
+               q_offset: int):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -105,12 +128,12 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     guard = _guard(mode, qi, kj, nk=nk, bq=bq, bk=bk, window=window,
-                   n_history=n_history, steps=steps)
+                   n_history=n_history, steps=steps, q_offset=q_offset)
 
     @pl.when(guard)
     def _compute():
         kidx = _k_index(mode, qi, kj, nk=nk, bq=bq, bk=bk, window=window,
-                        n_history=n_history, steps=steps)
+                        n_history=n_history, steps=steps, q_offset=q_offset)
         q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, D]
         k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
         v = v_ref[0, 0].astype(jnp.float32)
@@ -118,7 +141,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         cols = kidx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         msk = _element_mask(mode, rows, cols, window=window,
-                            n_history=n_history, sq=sq, sk=sk)
+                            n_history=n_history, sq=sq, sk=sk,
+                            q_offset=q_offset)
         s = jnp.where(msk, s, NEG_INF)
         m_prev = m_ref[...]                                  # [bq, 1]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
@@ -139,25 +163,42 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_kernel(q, k, v, *, mode: str, window: int = 0,
                            n_history: int = 0, sq: int, sk: int,
                            bq: int = 128, bk: int = 128,
-                           interpret: bool = True):
+                           interpret: bool = True, q_offset: int = 0):
     """q [B,H,Sqp,D], k/v [B,Hkv,Skp,D] (pre-padded to block/lane multiples).
 
     ``sq``/``sk`` are the *unpadded* lengths (padding is masked out).
+    ``q_offset`` shifts query positions against KV positions (sumi only):
+    the cached-history path runs M candidate queries against n_history
+    cached K/V rows followed by the candidates' own K/V, so query row i
+    sits at absolute position ``q_offset + i``.
     Softmax scale must be folded by the caller via ``scale``-preserving
     convention: this kernel applies 1/sqrt(D_real) via the ``scale`` closure
     in ops.py — here q is scaled already, so scale=1.
     """
+    if q_offset and mode != "sumi":
+        # block selection honors the offset for every mode, but the
+        # causal/sliding element masks still use local row positions —
+        # fail loudly rather than return silently-masked zeros
+        raise NotImplementedError(
+            f"q_offset is only supported for mode='sumi', got {mode!r}")
+    if q_offset and bq > bk:
+        # the offset self range of a q block spans <= 2 KV blocks only for
+        # bq <= bk (ops.py always passes square blocks); wider q blocks
+        # would silently drop candidates' own keys
+        raise NotImplementedError(
+            f"q_offset needs bq <= bk, got bq={bq} bk={bk}")
     b, h, sqp, d = q.shape
     hkv = k.shape[1]
     g = h // hkv
     skp = k.shape[2]
     nq = sqp // bq
     nk = skp // bk
-    steps = _kv_steps(mode, nk, bq, bk, window, n_history)
+    steps = _kv_steps(mode, nk, bq, bk, window, n_history, q_offset)
 
     kernel = functools.partial(
         _fa_kernel, mode=mode, bq=bq, bk=bk, window=window,
-        n_history=n_history, sq=sq, sk=sk, nk=nk, steps=steps, scale=1.0)
+        n_history=n_history, sq=sq, sk=sk, nk=nk, steps=steps, scale=1.0,
+        q_offset=q_offset)
 
     grid = (b * h, nq, steps)
 
@@ -166,7 +207,7 @@ def flash_attention_kernel(q, k, v, *, mode: str, window: int = 0,
 
     def kv_map(bh, qi, kj):
         kidx = _k_index(mode, qi, kj, nk=nk, bq=bq, bk=bk, window=window,
-                        n_history=n_history, steps=steps)
+                        n_history=n_history, steps=steps, q_offset=q_offset)
         return (bh // h, (bh % h) // g, kidx, 0)
 
     return pl.pallas_call(

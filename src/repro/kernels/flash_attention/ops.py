@@ -26,10 +26,11 @@ def _pad_to(x, axis, mult):
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "window", "n_history",
-                                             "bq", "bk", "interpret"))
+                                             "bq", "bk", "interpret",
+                                             "q_offset"))
 def flash_attention_bhsd(q, k, v, mode: str = "causal", *, window: int = 0,
                          n_history: int = 0, bq: int = 128, bk: int = 128,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None, q_offset: int = 0):
     """q [B,H,Sq,D]; k,v [B,Hkv,Sk,D] -> [B,H,Sq,D]."""
     if interpret is None:
         interpret = default_interpret()
@@ -45,14 +46,16 @@ def flash_attention_bhsd(q, k, v, mode: str = "causal", *, window: int = 0,
     out = flash_attention_kernel(qp.astype(q.dtype), kp, vp, mode=mode,
                                  window=window, n_history=n_history,
                                  sq=sq, sk=sk, bq=bq, bk=bk,
-                                 interpret=interpret)
+                                 interpret=interpret, q_offset=q_offset)
     return out[:, :, :sq, :d]
 
 
 def flash_attention(q, k, v, mode: str = "causal", *, window: int = 0,
-                    n_history: int = 0, interpret: bool | None = None):
+                    n_history: int = 0, interpret: bool | None = None,
+                    q_offset: int = 0):
     """Model-layout entry point: q [B,Sq,H,D]; k,v [B,Sk,Hkv,D]."""
     o = flash_attention_bhsd(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
                              jnp.swapaxes(v, 1, 2), mode, window=window,
-                             n_history=n_history, interpret=interpret)
+                             n_history=n_history, interpret=interpret,
+                             q_offset=q_offset)
     return jnp.swapaxes(o, 1, 2)

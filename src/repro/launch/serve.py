@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --engine flame \
         --requests 32 --buckets 64,32,16 --distribution jittered
+    PYTHONPATH=src python -m repro.launch.serve --engine flame \
+        --history-cache --pool-slots 128 --users 8 --requests 64
     PYTHONPATH=src python -m repro.launch.serve --engine implicit
     PYTHONPATH=src python -m repro.launch.serve --engine text --arch gemma3-12b
 
@@ -64,26 +66,31 @@ def serve_rec(args):
         print(f"[serve] restored checkpoint @ step {step}")
 
     kw = dict(n_history=args.history, feature_mode=args.feature_mode,
-              max_pending=args.max_pending)
+              max_pending=args.max_pending, impl=args.impl)
     if args.engine == "flame":
         kw.update(buckets=tuple(int(b) for b in args.buckets.split(",")),
                   n_streams=args.streams, coalesce=not args.no_coalesce,
                   max_batch=args.max_batch,
                   window_s=args.window_ms * 1e-3,
-                  n_workers=args.concurrency)
+                  n_workers=args.concurrency,
+                  history_cache=args.history_cache,
+                  pool_slots=args.pool_slots)
     else:
         kw.update(n_workers=args.concurrency)
     eng = create_engine(args.engine, bundle, params, **kw)
     if args.engine == "flame":
+        fams = ", ".join(f"{k}:{v}" for k, v in eng.dso.families.items())
         print(f"[serve] executor pool built in {eng.dso.build_time_s:.2f}s "
-              f"(buckets {sorted(eng.dso.buckets, reverse=True)}, "
+              f"(families {fams}, impl {args.impl}, "
               f"batch axis {eng.dso.policy.batch}, "
               f"coalesce={'on' if eng.dso.policy.enabled else 'off'})")
+        if args.history_cache:
+            print(f"[serve] history-KV pool: {args.pool_slots} slots")
 
     tc = TrafficConfig(
         candidate_counts=tuple(int(c) for c in args.counts.split(",")),
         distribution=args.distribution, n_requests=args.requests,
-        n_history=args.history, seed=0)
+        n_history=args.history, seed=0, n_users=args.users)
     reqs = generate_traffic(tc, n_items=cfg.vocab_size)
     res = run_workload_async(eng, reqs, arrival_gap_s=args.arrival_gap_ms * 1e-3)
     print(f"[serve] {res['requests']} requests | "
@@ -106,6 +113,18 @@ def main():
                     choices=["uniform", "zipf", "jittered"])
     ap.add_argument("--feature-mode", default="sync",
                     choices=["off", "sync", "async"])
+    ap.add_argument("--impl", default="chunked",
+                    choices=["reference", "chunked", "pallas"],
+                    help="attention impl for the model forward (chunked "
+                         "avoids O(S^2) score materialization on CPU)")
+    ap.add_argument("--history-cache", action="store_true",
+                    help="split the SUMI forward: pool per-user history KV, "
+                         "serve candidate-only executors on pool hits")
+    ap.add_argument("--pool-slots", type=int, default=256,
+                    help="history-KV pool capacity (entries, LRU-evicted)")
+    ap.add_argument("--users", type=int, default=0,
+                    help="repeat-user traffic: draw requests from this many "
+                         "users with stable histories (0 = unique users)")
     ap.add_argument("--streams", type=int, default=2)
     ap.add_argument("--concurrency", type=int, default=4,
                     help="pipeline worker threads")

@@ -133,14 +133,26 @@ def reference_attention(q, k, v, mode: str, *, window: int = 0,
 # ---------------------------------------------------------------------------
 
 def chunked_attention(q, k, v, mode: str, *, window: int = 0, n_history: int = 0,
-                      q_chunk: int = 1024, k_chunk: int = 1024):
+                      q_chunk: int = 1024, k_chunk: int = 1024,
+                      q_offset: int = 0):
     """Online-softmax attention over KV chunks.
 
     Shapes as in reference_attention.  For ``sliding`` only the in-window KV
     slice is touched per q chunk (compute scales with S*window).  For other
     modes all KV chunks are visited with masking (full S^2 matmul FLOPs; the
     Pallas kernel and the exact-causal §Perf variant avoid that).
+
+    ``q_offset`` shifts the query positions against the KV positions — the
+    cached-history serving path scores M candidate queries against
+    ``n_history`` cached K/V rows plus their own, so q row i sits at absolute
+    position ``n_history + i``.
     """
+    if q_offset and mode != "sumi":
+        # the sliding fast path slices KV around un-offset q positions —
+        # fail loudly rather than window the wrong region (mirrors the
+        # pallas kernel's guard)
+        raise NotImplementedError(
+            f"q_offset is only supported for mode='sumi', got {mode!r}")
     b, sq, h, d = q.shape
     sk = k.shape[1]
     hkv = k.shape[2]
@@ -165,7 +177,7 @@ def chunked_attention(q, k, v, mode: str, *, window: int = 0, n_history: int = 0
     vs = v.reshape(b, nk, k_chunk, hkv, d)
 
     def q_block(qi, q_blk):
-        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
         qf = q_blk.astype(jnp.float32).reshape(b, q_chunk, hkv, g, d) * scale
 
         def kv_step(carry, inp):
@@ -326,12 +338,12 @@ def context_parallel_attention(q, k, v, mode: str, *, window: int, mesh,
 
 
 def attention(q, k, v, mode: str, *, impl: str = "chunked", window: int = 0,
-              n_history: int = 0, temperature=None):
+              n_history: int = 0, temperature=None, q_offset: int = 0):
     """Dispatch wrapper used by the transformer stack."""
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
         return fa_ops.flash_attention(q, k, v, mode, window=window,
-                                      n_history=n_history)
+                                      n_history=n_history, q_offset=q_offset)
     if impl == "cp":
         from repro import sharding as shd
         active = shd._ACTIVE.get()
@@ -344,5 +356,7 @@ def attention(q, k, v, mode: str, *, impl: str = "chunked", window: int = 0,
         impl = "chunked"
     if impl == "reference" or q.shape[1] * k.shape[1] <= 256 * 256:
         return reference_attention(q, k, v, mode, window=window,
-                                   n_history=n_history, temperature=temperature)
-    return chunked_attention(q, k, v, mode, window=window, n_history=n_history)
+                                   n_history=n_history, temperature=temperature,
+                                   q_offset=q_offset)
+    return chunked_attention(q, k, v, mode, window=window, n_history=n_history,
+                             q_offset=q_offset)

@@ -38,6 +38,11 @@ class ModelBundle:
     input_specs: Callable                # (ShapeConfig) -> {name: ShapeDtypeStruct}
     input_logical: Callable              # (ShapeConfig) -> {name: logical tuple}
     cache_init: Callable                 # (batch, max_len) -> (caches, specs)
+    # split-forward serving surface (GR models; None for decode families):
+    # prefill == score_candidates(params, encode_history(params, hist), cand)
+    encode_history: Optional[Callable] = None   # (params, batch) -> HistoryKV
+    score_candidates: Optional[Callable] = None  # (params, kv, cand) -> scores
+    history_kv_specs: Optional[Callable] = None  # (params, n_hist, b) -> specs
 
 
 def cross_entropy(logits, targets, mask):

@@ -6,3 +6,4 @@ from repro.serving.api import (AdmissionQueueFull, ResponseFuture,  # noqa: F401
 from repro.serving.engine import (FlameEngine,  # noqa: F401
                                   ImplicitShapeServingEngine,
                                   TextServingEngine)
+from repro.serving.kv_cache import HistoryKVPool, KVCacheManager  # noqa: F401

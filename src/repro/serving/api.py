@@ -40,12 +40,16 @@ class ServeRequest:
 
     Recommendation engines read ``history`` (item ids) and ``candidates``
     (item ids to score); text engines read ``history`` as prompt token ids
-    and generate ``n_tokens``.
+    and generate ``n_tokens``.  ``user_id`` is an optional stable upstream
+    identity: cache-aware engines key their history-KV pool by it (falling
+    back to a content hash of the history when absent), so repeat-user and
+    session-re-rank traffic reuses the cached history encode.
     """
 
     history: np.ndarray
     candidates: Optional[np.ndarray] = None
     n_tokens: int = 16
+    user_id: Optional[int] = None
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     arrival_t: float = dataclasses.field(default_factory=time.perf_counter)

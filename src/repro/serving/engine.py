@@ -26,9 +26,11 @@ lifecycle diagram.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import queue
 import threading
 import time
+from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -42,7 +44,7 @@ from repro.models.model import ModelBundle
 from repro.serving.api import (AdmissionQueueFull, ResponseFuture,
                                ServeMetrics, ServeRequest, ServeResponse,
                                register_engine)
-from repro.serving.kv_cache import KVCacheManager
+from repro.serving.kv_cache import HistoryKVPool, KVCacheManager
 
 _STOP = object()
 
@@ -196,6 +198,10 @@ class _SideFeatureMixin:
                 f"request {req.request_id}: candidates must be a non-empty "
                 f"1-D id array, got "
                 f"{None if req.candidates is None else req.candidates.shape}")
+        if req.m and int(np.min(req.candidates)) < 0:
+            raise ValueError(
+                f"request {req.request_id}: candidate ids must be >= 0 "
+                f"(negative ids are reserved for chunk-padding sentinels)")
         if req.history.ndim != 1 or req.history.shape[0] < self.n_history:
             raise ValueError(
                 f"request {req.request_id}: history must be a 1-D id array "
@@ -222,7 +228,17 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     in-flight requests into one executor call (time-window + fill-target
     policy) and scatters rows back to per-request futures.  Batch rows are
     independent, so coalesced scores are bitwise-identical to sequential
-    per-request serving (tests assert this)."""
+    per-request serving (tests assert this).
+
+    With ``history_cache=True`` the engine splits the SUMI forward
+    (MTServe-style hierarchical caching): the per-request history encode is
+    keyed into a :class:`HistoryKVPool` (by ``request.user_id``, else a
+    content hash of the history prefix) and scoring always runs the cheap
+    candidate-only executor family against the pooled K/V.  A pool hit
+    skips the history encode entirely; a miss routes one batched
+    ``encode`` dispatch first and parks the result for the next request
+    from that user.  Scores are numerically identical to the full pass
+    (bitwise under the reference/chunked impls)."""
 
     def __init__(self, bundle: ModelBundle, params, *, n_history: int,
                  buckets: Sequence[int] = (512, 256, 128),
@@ -232,31 +248,80 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  store: Optional[PDA.RemoteFeatureStore] = None,
                  coalesce: bool = True, max_batch: int = 4,
                  window_s: float = 0.002,
-                 max_pending: int = 64, n_workers: int = 4):
+                 max_pending: int = 64, n_workers: int = 4,
+                 impl: str = "chunked",
+                 history_cache: bool = False, pool_slots: int = 256):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
         self.n_history = n_history
+        self.impl = impl
         self.store, self.features = _make_features(
             feature_mode, store, cache_capacity, cache_ttl_s)
 
-        def build_fn(bucket: int, batch: int):
-            def fn(history, candidates, side):
-                b = {"history": history, "candidates": candidates,
-                     "side": side}
-                return bundle.prefill(self.params, b)
-            shapes = (
-                jax.ShapeDtypeStruct((batch, n_history), jnp.int32),
-                jax.ShapeDtypeStruct((batch, bucket), jnp.int32),
-                jax.ShapeDtypeStruct((batch, N_SIDE_FEATURES), jnp.float32),
-            )
+        self.history_pool: Optional[HistoryKVPool] = None
+        if history_cache:
+            if bundle.encode_history is None or bundle.score_candidates is None:
+                raise ValueError(
+                    "history_cache=True needs a bundle with the split "
+                    "encode_history/score_candidates serving surface")
+            self.history_pool = HistoryKVPool(pool_slots)
+            kv_specs = bundle.history_kv_specs(params, n_history, batch=1)
+            leaves, self._kv_treedef = jax.tree.flatten(kv_specs)
+            self._kv_row_specs = leaves          # per-request rows (batch=1)
+            self._encode_inflight: Dict[tuple, Future] = {}
+            self._encode_lock = threading.Lock()
+            self._key_memo: Dict[int, tuple] = {}   # request_id -> (key, fp)
+
+        hist_spec = lambda batch: jax.ShapeDtypeStruct(  # noqa: E731
+            (batch, n_history), jnp.int32)
+        side_spec = lambda batch: jax.ShapeDtypeStruct(  # noqa: E731
+            (batch, N_SIDE_FEATURES), jnp.float32)
+
+        def build_fn(kind: str, bucket: int, batch: int):
+            if kind == "full":
+                def fn(history, candidates, side):
+                    b = {"history": history,
+                         # -1 chunk-padding sentinel -> a real (ignored) row
+                         "candidates": jnp.maximum(candidates, 0),
+                         "side": side}
+                    return bundle.prefill(self.params, b, impl=self.impl)
+                shapes = (hist_spec(batch),
+                          jax.ShapeDtypeStruct((batch, bucket), jnp.int32),
+                          side_spec(batch))
+            elif kind == "encode":
+                def fn(history, side):
+                    return bundle.encode_history(
+                        self.params, {"history": history, "side": side},
+                        impl=self.impl)
+                shapes = (hist_spec(batch), side_spec(batch))
+            elif kind == "cached":
+                def fn(*args):
+                    *kv_leaves, candidates = args
+                    kv = jax.tree.unflatten(self._kv_treedef, list(kv_leaves))
+                    return bundle.score_candidates(
+                        self.params, kv, jnp.maximum(candidates, 0),
+                        impl=self.impl)
+                shapes = tuple(
+                    jax.ShapeDtypeStruct((batch,) + s.shape[1:], s.dtype)
+                    for s in self._kv_row_specs) + (
+                    jax.ShapeDtypeStruct((batch, bucket), jnp.int32),)
+            else:
+                raise ValueError(kind)
             return jax.jit(fn).lower(*shapes).compile()
 
+        # the bucket key gains a hit/miss dimension: candidate-only
+        # ("cached") executors serve pool traffic, "encode" repopulates the
+        # pool on miss, "full" is the monolithic path when the pool is off
+        if history_cache:
+            families = {"cached": tuple(buckets), "encode": (n_history,)}
+        else:
+            families = {"full": tuple(buckets)}
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
                                     window_s=window_s)
         self.dso = DSO.CoalescingOrchestrator(
-            build_fn, buckets, self._pad_slice, self._gather,
-            policy=policy, n_streams=n_streams)
+            build_fn, pad_slice_fn=self._pad_slice, gather_fn=self._gather,
+            policy=policy, n_streams=n_streams, families=families)
         super().__init__(max_pending=max_pending, n_workers=n_workers,
                          name="flame")
 
@@ -265,39 +330,140 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     def pool(self):
         return self.dso
 
+    def _pool_key(self, request: ServeRequest) -> tuple:
+        fp = self._fingerprint(np.asarray(request.history, np.int32))
+        key = ("u", int(request.user_id)) \
+            if request.user_id is not None else ("h", fp)
+        return key, fp
+
+    def _admit_hook(self, request: ServeRequest):
+        if self.history_pool is not None and request.candidates is not None:
+            key, fp = self._pool_key(request)
+            # stash for _execute so the O(n_history) hash runs once
+            self._key_memo[request.request_id] = (key, fp)
+            if self.history_pool.peek(key, fp) is not None:
+                return      # pool hit ahead: side features never consumed
+        super()._admit_hook(request)
+
     # ---- chunk plumbing (host-side; the dispatcher stacks + transfers) ----
-    def _pad_slice(self, request, chunk: DSO.Chunk):
-        history, candidates, side = request
+    @staticmethod
+    def _slice_candidates(candidates, chunk: DSO.Chunk):
         sl = candidates[:, chunk.start:chunk.start + chunk.valid]
         if chunk.valid < chunk.bucket:
-            sl = np.pad(sl, ((0, 0), (0, chunk.bucket - chunk.valid)))
-        return history, sl, side
+            # -1 sentinel: padding is never a real item id (0 is)
+            sl = np.pad(sl, ((0, 0), (0, chunk.bucket - chunk.valid)),
+                        constant_values=-1)
+        return sl
 
-    def _gather(self, rows, chunks: List[DSO.Chunk], m: int):
+    def _pad_slice(self, request, chunk: DSO.Chunk, kind: str):
+        if kind == "encode":
+            history, side = request
+            return history, side
+        if kind == "full":
+            history, candidates, side = request
+            return history, self._slice_candidates(candidates, chunk), side
+        kv_leaves, candidates = request          # cached
+        return tuple(kv_leaves) + (self._slice_candidates(candidates, chunk),)
+
+    def _gather(self, rows, chunks: List[DSO.Chunk], m: int,
+                kind: str = "full"):
+        if kind == "encode":
+            return rows[0]                      # one chunk: the KV pytree
         parts = [r[:, :c.valid] for r, c in zip(rows, chunks)]
         return np.concatenate(parts, axis=1)
 
+    # ---- history-KV pool ----
+    @staticmethod
+    def _fingerprint(history: np.ndarray) -> str:
+        """Content hash of the FULL history array — the model truncates to
+        n_history, but side features average over every entry, so a
+        tail-only change must read as stale too (full-pass parity)."""
+        return hashlib.blake2b(np.ascontiguousarray(history).tobytes(),
+                               digest_size=16).hexdigest()
+
+    def _lookup_or_encode(self, req: ServeRequest, hist: np.ndarray,
+                          memo: Optional[tuple] = None
+                          ) -> Tuple[tuple, bool, float]:
+        """Returns (kv_leaves, hit, features_s); encodes + populates the
+        pool on miss.  Concurrent misses for one (key, fingerprint) are
+        single-flighted: the first worker encodes, co-arriving session
+        requests wait on its future instead of dispatching duplicate
+        O(n_history) encodes."""
+        key, fp = memo if memo is not None else self._pool_key(req)
+        kv = self.history_pool.get(key, fp)
+        if kv is not None:
+            return kv, True, 0.0
+        with self._encode_lock:
+            fut = self._encode_inflight.get((key, fp))
+            leader = fut is None
+            if leader:
+                # a racing leader may have put + deregistered between our
+                # counted miss and taking this lock — re-check (uncounted)
+                # before electing ourselves and re-encoding
+                kv = self.history_pool.peek(key, fp)
+                if kv is not None:
+                    return kv, False, 0.0
+                fut = Future()
+                self._encode_inflight[(key, fp)] = fut
+        if not leader:
+            return fut.result(), False, 0.0
+        try:
+            t0 = time.perf_counter()
+            side = self._side_features(req.history)
+            t1 = time.perf_counter()
+            kv_tree = self.dso.score((hist, side), self.n_history,
+                                     kind="encode")
+            # copy: dispatcher rows are views into the (max_batch, ...)
+            # stacked batch array — pooling the view would pin the whole
+            # padded parent and make pool_bytes under-report
+            kv = tuple(np.array(a) for a in jax.tree.leaves(kv_tree))
+            self.history_pool.put(key, fp, kv)
+            fut.set_result(kv)
+        except BaseException as e:
+            fut.set_exception(e)
+            raise
+        finally:
+            with self._encode_lock:
+                self._encode_inflight.pop((key, fp), None)
+        return kv, False, t1 - t0
+
     def _execute(self, req: ServeRequest):
+        memo = (self._key_memo.pop(req.request_id, None)
+                if self.history_pool is not None else None)
         self._check_request(req)
         t0 = time.perf_counter()
-        side = self._side_features(req.history)
-        t1 = time.perf_counter()
         hist = np.asarray(req.history[None, :self.n_history], np.int32)
         cand = np.asarray(req.candidates[None], np.int32)
-        out = self.dso.score((hist, cand, side), req.m)
+        if self.history_pool is None:
+            side = self._side_features(req.history)
+            t1 = time.perf_counter()
+            out = self.dso.score((hist, cand, side), req.m, kind="full")
+            t2 = time.perf_counter()
+            return out[0], {"features_s": t1 - t0, "execute_s": t2 - t1}
+        kv, hit, features_s = self._lookup_or_encode(req, hist, memo)
+        t1 = time.perf_counter()
+        out = self.dso.score((kv, cand), req.m, kind="cached")
         t2 = time.perf_counter()
-        return out[0], {"features_s": t1 - t0, "execute_s": t2 - t1}
+        return out[0], {"features_s": features_s,
+                        "encode_s": (t1 - t0) - features_s if not hit else 0.0,
+                        "pool_hit": 1.0 if hit else 0.0,
+                        "execute_s": t2 - t1}
 
     def _extra_metrics(self):
         out = {f"dso_{k}": v for k, v in self.dso.stats().items()}
         out["dso_build_s"] = self.dso.build_time_s
         out.update({f"pda_{k}": v for k, v in
                     dataclasses.asdict(self.features.stats).items()})
+        if self.history_pool is not None:
+            out.update({f"pool_{k}": v
+                        for k, v in self.history_pool.stats().items()})
         return out
 
     def _close(self):
         self.features.shutdown()
         self.dso.shutdown()
+        if self.history_pool is not None:
+            self.history_pool.release()
 
 
 @register_engine("implicit")
@@ -311,14 +477,16 @@ class ImplicitShapeServingEngine(_SideFeatureMixin, _PipelinedEngine):
                  feature_mode: str = "off",
                  cache_capacity: int = 50_000, cache_ttl_s: float = 30.0,
                  store: Optional[PDA.RemoteFeatureStore] = None,
-                 max_pending: int = 64, n_workers: int = 4):
+                 max_pending: int = 64, n_workers: int = 4,
+                 impl: str = "chunked"):
         self.bundle = bundle
         self.params = params
         self.n_history = n_history
+        self.impl = impl
         self.store, self.features = _make_features(
             feature_mode, store, cache_capacity, cache_ttl_s)
         self._fn = jax.jit(lambda h, c, s: bundle.prefill(
-            params, {"history": h, "candidates": c, "side": s}))
+            params, {"history": h, "candidates": c, "side": s}, impl=impl))
         self.compiles = 0
         self._seen: set = set()
         self._seen_lock = threading.Lock()

@@ -1,14 +1,25 @@
-"""Batched KV-cache slot manager for text-decoder serving.
+"""KV state managers for serving.
 
-Maintains one batched cache pytree (from bundle.cache_init) plus per-slot
-lengths; requests are assigned to free slots, prefilled, and decoded in
-lockstep (continuous-batching-lite).  Small-scale CPU serving substrate for
-the decode-based architectures; the dry-run exercises the pod-scale shapes.
+Two families live here:
+
+``KVCacheManager``   batched decode-cache slot manager for the text
+                     architectures (continuous-batching-lite): one pooled
+                     cache pytree, per-slot lengths, prefill-insert/release.
+
+``HistoryKVPool``    per-user LRU pool of cached *history-side* SUMI K/V for
+                     GR serving (the MTServe / "One Pool, Two Caches"
+                     hierarchical-cache idea).  The SUMI mask makes the
+                     history prefix self-contained, so its per-layer K/V
+                     depend only on the user history; FlameEngine encodes it
+                     once, parks it here, and repeat/session-re-rank traffic
+                     runs candidate-only executors against the pooled entry.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+import threading
+from typing import Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,3 +66,115 @@ class KVCacheManager:
 
     def lengths(self) -> np.ndarray:
         return np.array([s.length for s in self.slots], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# history-KV pool (GR serving)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _PoolEntry:
+    fingerprint: Hashable      # content hash of the history prefix
+    kv: object                 # HistoryKV pytree (or flattened leaves)
+    nbytes: int
+
+
+class HistoryKVPool:
+    """Per-user LRU pool of encoded history K/V.
+
+    ``get(key, fingerprint)`` returns the cached pytree and refreshes the
+    entry's recency, or None on miss.  A key hit whose fingerprint differs
+    (the user's history advanced since the encode) is *stale*: the entry is
+    dropped and the call counts as a miss, so serving re-encodes rather than
+    scoring against outdated state.  ``put`` inserts/overwrites and evicts
+    from the LRU end until at most ``slots`` entries remain.  All methods
+    are thread-safe — pipeline workers hit the pool concurrently.
+    """
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError(f"pool needs >= 1 slot, got {slots}")
+        self.slots = slots
+        self._entries: "collections.OrderedDict[Hashable, _PoolEntry]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.stale = 0
+        self.evictions = 0
+        self.bytes_used = 0
+
+    @staticmethod
+    def entry_bytes(kv) -> int:
+        return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                   for a in jax.tree.leaves(kv))
+
+    def get(self, key: Hashable, fingerprint: Hashable):
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                self.misses += 1
+                return None
+            if e.fingerprint != fingerprint:
+                del self._entries[key]          # stale: history advanced
+                self.bytes_used -= e.nbytes
+                self.stale += 1
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)      # refresh recency
+            self.hits += 1
+            return e.kv
+
+    def peek(self, key: Hashable, fingerprint: Hashable):
+        """Like ``get`` but without touching hit/miss/stale counters (and
+        without dropping stale entries) — used by the engine's single-flight
+        leader election to re-check the pool after the initial counted miss,
+        so each request still counts exactly one lookup."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or e.fingerprint != fingerprint:
+                return None
+            self._entries.move_to_end(key)
+            return e.kv
+
+    def put(self, key: Hashable, fingerprint: Hashable, kv) -> None:
+        nbytes = self.entry_bytes(kv)
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.bytes_used -= old.nbytes
+            self._entries[key] = _PoolEntry(fingerprint, kv, nbytes)
+            self.bytes_used += nbytes
+            while len(self._entries) > self.slots:
+                _, ev = self._entries.popitem(last=False)   # LRU end
+                self.bytes_used -= ev.nbytes
+                self.evictions += 1
+
+    def keys(self) -> List[Hashable]:
+        """LRU -> MRU order (for tests/introspection)."""
+        with self._lock:
+            return list(self._entries)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def release(self) -> None:
+        """Drop every entry (engine shutdown); counters survive for metrics."""
+        with self._lock:
+            self._entries.clear()
+            self.bytes_used = 0
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "slots": self.slots,
+                "hits": self.hits,
+                "misses": self.misses,
+                "stale": self.stale,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+                "bytes": self.bytes_used,
+            }

@@ -25,11 +25,18 @@ class TrafficConfig:
     n_history: int = 1024
     concurrency: int = 4
     seed: int = 0
+    # repeat-user / session-re-rank profile: > 0 draws each request's user
+    # from a fixed population whose histories are stable across requests, so
+    # the same user re-ranks fresh candidate slates against one history —
+    # the regime where a history-KV pool converts full passes into
+    # candidate-only passes.  0 keeps the legacy one-user-per-request shape.
+    n_users: int = 0
 
 
 def generate_traffic(tc: TrafficConfig, n_items: int = 100_000
                      ) -> List[Dict[str, np.ndarray]]:
     rng = np.random.default_rng(tc.seed)
+    user_hist = {}
     reqs = []
     for _ in range(tc.n_requests):
         if tc.distribution == "uniform":
@@ -40,10 +47,18 @@ def generate_traffic(tc: TrafficConfig, n_items: int = 100_000
         else:  # jittered: non-bucket-aligned counts (the hard case)
             base = int(rng.choice(tc.candidate_counts))
             m = max(1, base - int(rng.integers(0, base // 3)))
-        reqs.append({
-            "history": rng.integers(0, n_items, tc.n_history).astype(np.int32),
-            "candidates": rng.integers(0, n_items, m).astype(np.int32),
-        })
+        req = {"candidates": rng.integers(0, n_items, m).astype(np.int32)}
+        if tc.n_users > 0:
+            uid = int(rng.integers(tc.n_users))
+            if uid not in user_hist:
+                user_hist[uid] = rng.integers(
+                    0, n_items, tc.n_history).astype(np.int32)
+            req["history"] = user_hist[uid]
+            req["user_id"] = uid
+        else:
+            req["history"] = rng.integers(
+                0, n_items, tc.n_history).astype(np.int32)
+        reqs.append(req)
     return reqs
 
 
@@ -92,7 +107,8 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
         if arrival_gap_s > 0:
             time.sleep(float(rng.uniform(0, arrival_gap_s)))
         futs.append(engine.submit(ServeRequest(
-            history=r["history"], candidates=r["candidates"])))
+            history=r["history"], candidates=r["candidates"],
+            user_id=r.get("user_id"))))
     resps = [f.result() for f in futs]
     total = time.perf_counter() - t0
     la = np.array([r.latency_s for r in resps])
