@@ -16,7 +16,22 @@ runs candidate-only executors against cached per-layer history K/V
 (O(M) tokens instead of O(n_history + M) per block); misses pay one
 batched encode.  Measured at steady state (pool warmed by a first sweep).
 
-Both profiles run against a warmed PDA cache (hot steady state) so the
+Profile 3 (PDA v2 hot path): the PR 2-style pool (host-resident entries,
+KV rows restacked once per chunk) vs PDA v2 (device-resident entries +
+KV-row dedup in the dispatcher) on the same repeat-user workload — the
+"device-resident pool entries" ROADMAP item, isolated.
+
+Profile 4 (suffix extension): stale-sweep workload — every user's history
+tail-appends between sweeps, so every request is a stale hit.  Full
+re-encode (incremental off) vs incremental suffix extension (re-encode one
+token per block against the cached prefix).  Same seed on both sides, so
+outputs are compared pairwise at the pool tolerance.
+
+Profile 5 (quantized pool): int8 pool entries vs native on the hot
+repeat-user path — bytes/entry ratio (users-per-replica capacity) and the
+measured score drift.
+
+All profiles run against a warmed PDA cache (hot steady state) so the
 measurement reflects dispatch economics, not feature-fetch cost.
 
 Correctness gates before any throughput claim:
@@ -30,10 +45,22 @@ Correctness gates before any throughput claim:
      (the split forward is mathematically exact; the two AOT executables
      fuse differently, so isolated bf16 lanes may round differently —
      the gate admits <= 2e-3 absolute on sigmoid outputs, ~half a bf16
-     ulp at 0.5, and reports the bitwise-identical request fraction).
+     ulp at 0.5, and reports the bitwise-identical request fraction);
+  4. suffix-extension scores match the full re-encode run at the same
+     tolerance, and int8 pool drift stays under its stated bound (5e-2).
+
+Perf gates (explicit, enforced on every run): pool >= 1.5x full pass;
+suffix extension >= 1.1x full re-encode on the stale-sweep profile;
+PDA v2 >= 0.9x the v1-style pool.  The last one is a parity guard, not a
+victory lap: on the CPU backend "device" and "host" placement are the same
+memory, so the v2 machinery must simply cost nothing — its wins
+(HBM-resident entries skipping the per-dispatch H2D copy, dedup skipping
+one transfer per duplicate row) are transfer-bound and materialize on
+accelerator backends, where kv_dedup auto-enables.  The forced-dedup row
+records the dedup machinery live (rows saved -> modeled transfer bytes).
 
 Emits ``BENCH_serving.json`` at the repo root so future PRs have a perf
-trajectory to compare against.
+trajectory to compare against (see benchmarks/README.md for every field).
 """
 from __future__ import annotations
 
@@ -55,10 +82,21 @@ N_ITEMS = 5_000
 BUCKETS = (32, 16)
 MAX_BATCH = 4
 N_WORKERS = 8
-# repeat-user profile: longer history (the term the pool amortizes away)
+# repeat-user profile: longer history (the term the pool amortizes away),
+# multi-chunk candidate counts (the regime where KV-row dedup bites: a
+# m=96 request splits into three bucket-32 chunks that share one KV row),
+# and a deeper batch axis so co-batched same-user rows dedup too
 REPEAT_HISTORY = 128
 REPEAT_USERS = 8
+REPEAT_COUNTS = (48, 64, 96)
+REPEAT_MAX_BATCH = 8
 POOL_SLOTS = 32
+# stale-sweep profile: longer history still, so the full re-encode the
+# extension path avoids dominates dispatch overhead even at bench scale
+STALE_HISTORY = 256
+# the v2 engine carries an explicit byte budget (active accounting; sized
+# far above the working set so the hot path is budget-checked, not evicted)
+V2_BUDGET_BYTES = 64 << 20
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
 
 
@@ -89,31 +127,141 @@ def _run(bundle, params, reqs, *, coalesce: bool, sequential_ref: bool):
     return res, outputs, seq
 
 
-def _run_repeat(bundle, params, reqs, *, history_cache: bool):
-    """Repeat-user profile: one engine config, steady state (hot pool)."""
+def _repeat_engine(bundle, params, *, history_cache: bool, **engine_kw):
+    """Build + warm one repeat-profile engine (hot features, hot pool)."""
     eng = create_engine(
         "flame", bundle, params, n_history=REPEAT_HISTORY, buckets=BUCKETS,
         n_streams=2, feature_mode="sync",
         store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
-        coalesce=True, max_batch=MAX_BATCH, window_s=0.008,
+        coalesce=True, max_batch=REPEAT_MAX_BATCH, window_s=0.008,
         n_workers=N_WORKERS, history_cache=history_cache,
-        pool_slots=POOL_SLOTS)
+        pool_slots=POOL_SLOTS, **engine_kw)
     eng.features.query(list(range(N_ITEMS)))
-    # warm sweep: compiles executors and (when enabled) populates the pool —
-    # session re-rank steady state, not cold start
-    run_workload_async(eng, reqs)
-    m0 = eng.metrics()
-    res = run_workload_async(eng, reqs)
-    outputs = res.pop("outputs")
-    m1 = eng.metrics()
-    res.update(dispatches=m1["dso_dispatches"] - m0["dso_dispatches"],
-               encode_dispatches=(m1.get("dso_dispatches_encode", 0)
+    return eng
+
+
+def _pool_delta(m0, m1):
+    return dict(
+        dispatches=m1["dso_dispatches"] - m0["dso_dispatches"],
+        encode_dispatches=(m1.get("dso_dispatches_encode", 0)
+                           - m0.get("dso_dispatches_encode", 0)),
+        pool_hits=m1.get("pool_hits", 0) - m0.get("pool_hits", 0),
+        pool_misses=m1.get("pool_misses", 0) - m0.get("pool_misses", 0),
+        pool_bytes=m1.get("pool_bytes", 0),
+        dedup_rows_saved=(m1.get("dso_dedup_rows_saved", 0)
+                          - m0.get("dso_dedup_rows_saved", 0)))
+
+
+def _ab_interleaved(eng_a, eng_b, reqs, rounds: int = 5):
+    """Interleaved A/B throughput measurement.
+
+    CPU CI boxes drift by integer factors across seconds and single passes
+    jitter +-25%, so measuring config A start-to-finish and then config B
+    bakes both into the ratio.  Alternating measured passes and aggregating
+    each side's items/time over all rounds cancels the drift (every A pass
+    sits adjacent to a B pass) and averages the jitter — the perf gates
+    below are hard asserts, so the ratio must be honest *and* stable.
+    Both engines are warmed by one untimed pass first."""
+    run_workload_async(eng_a, reqs)
+    run_workload_async(eng_b, reqs)
+    m0 = [eng_a.metrics(), eng_b.metrics()]
+    items_per_pass = sum(len(r["candidates"]) for r in reqs)
+    agg = [dict(t=0.0, p50=[], p99=[]), dict(t=0.0, p50=[], p99=[])]
+    outs = [None, None]
+    for _ in range(rounds):
+        for i, eng in enumerate((eng_a, eng_b)):
+            r = run_workload_async(eng, reqs)
+            outs[i] = r.pop("outputs")
+            agg[i]["t"] += r["total_s"]
+            agg[i]["p50"].append(r["p50_latency_ms"])
+            agg[i]["p99"].append(r["p99_latency_ms"])
+    res = []
+    for i, eng in enumerate((eng_a, eng_b)):
+        res.append({
+            "requests": len(reqs) * rounds,
+            "throughput_items_per_s": rounds * items_per_pass / agg[i]["t"],
+            "p50_latency_ms": float(np.median(agg[i]["p50"])),
+            "p99_latency_ms": float(np.median(agg[i]["p99"])),
+            **_pool_delta(m0[i], eng.metrics()),
+        })
+    return res[0], outs[0], res[1], outs[1]
+
+
+def _run_stale_sweeps_interleaved(bundle, params, n_sweeps: int = 16,
+                                  seed: int = 17):
+    """Suffix-extension profile: every user's history tail-appends between
+    sweeps, so every request arrives as a stale hit.  The re-encode engine
+    pays a full window re-encode per request; the incremental engine
+    extends the cached prefix (one token per block).  Both engines consume
+    identical request streams (same seed) with sweeps interleaved, so the
+    outputs are comparable pairwise and machine drift cancels out of the
+    throughput ratio."""
+    import time as _time
+    from repro.serving import ServeRequest
+
+    engines = {}
+    for name, inc in (("reencode", False), ("incremental", True)):
+        eng = create_engine(
+            "flame", bundle, params, n_history=STALE_HISTORY,
+            buckets=BUCKETS, n_streams=2, feature_mode="sync",
+            store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+            coalesce=True, max_batch=REPEAT_MAX_BATCH, window_s=0.008,
+            n_workers=N_WORKERS, history_cache=True, pool_slots=POOL_SLOTS,
+            incremental_history=inc)
+        eng.features.query(list(range(N_ITEMS)))
+        rng = np.random.default_rng(seed)
+        hists = {u: rng.integers(0, N_ITEMS,
+                                 STALE_HISTORY + 16).astype(np.int32)
+                 for u in range(REPEAT_USERS)}
+        engines[name] = dict(eng=eng, rng=rng, hists=hists, outputs=[],
+                             lat=[], items=0, time=0.0)
+
+    def one_sweep(state, timed):
+        eng, rng, hists = state["eng"], state["rng"], state["hists"]
+        if timed:
+            for u in range(REPEAT_USERS):         # tail-append => stale
+                hists[u] = np.concatenate(
+                    [hists[u], rng.integers(0, N_ITEMS, 4).astype(np.int32)])
+        t0 = _time.perf_counter()
+        futs = []
+        for u in range(REPEAT_USERS):
+            m = int(rng.choice(REPEAT_COUNTS))
+            cand = rng.integers(0, N_ITEMS, m).astype(np.int32)
+            futs.append(eng.submit(ServeRequest(history=hists[u],
+                                                candidates=cand,
+                                                user_id=u)))
+        resps = [f.result() for f in futs]
+        if timed:
+            state["time"] += _time.perf_counter() - t0
+            for r in resps:
+                state["outputs"].append(r.output)
+                state["lat"].append(r.latency_s)
+                state["items"] += len(r.output)
+
+    for state in engines.values():                # warm: encode all users
+        one_sweep(state, timed=False)
+        state["m0"] = state["eng"].metrics()      # counter deltas below
+    for _ in range(n_sweeps):
+        for state in engines.values():
+            one_sweep(state, timed=True)
+
+    results = {}
+    for name, state in engines.items():
+        m, m0 = state["eng"].metrics(), state["m0"]
+        results[name] = ({
+            "requests": n_sweeps * REPEAT_USERS,
+            "throughput_items_per_s": state["items"] / state["time"],
+            "p50_latency_ms": float(np.percentile(state["lat"], 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(state["lat"], 99) * 1e3),
+            "pool_stale": m["pool_stale"] - m0["pool_stale"],
+            "pool_extensions": m["pool_extensions"] - m0["pool_extensions"],
+            "encode_dispatches": (m.get("dso_dispatches_encode", 0)
                                   - m0.get("dso_dispatches_encode", 0)),
-               pool_hits=m1.get("pool_hits", 0) - m0.get("pool_hits", 0),
-               pool_misses=m1.get("pool_misses", 0) - m0.get("pool_misses", 0),
-               pool_bytes=m1.get("pool_bytes", 0))
-    eng.shutdown()
-    return res, outputs
+            "extend_dispatches": (m.get("dso_dispatches_extend", 0)
+                                  - m0.get("dso_dispatches_extend", 0)),
+        }, state["outputs"])
+        state["eng"].shutdown()
+    return results["reencode"] + results["incremental"]
 
 
 def main(csv=True):
@@ -152,12 +300,17 @@ def main(csv=True):
 
     print("\n=== History-KV pool: repeat-user / session re-rank "
           f"({REPEAT_USERS} users, history {REPEAT_HISTORY}, hot pool) ===")
-    rtc = TrafficConfig(candidate_counts=COUNTS, distribution="jittered",
+    rtc = TrafficConfig(candidate_counts=REPEAT_COUNTS,
+                        distribution="jittered",
                         n_requests=N_REQUESTS, n_history=REPEAT_HISTORY,
                         seed=13, n_users=REPEAT_USERS)
     rreqs = generate_traffic(rtc, n_items=N_ITEMS)
-    full, out_full = _run_repeat(bundle, params, rreqs, history_cache=False)
-    pooled, out_pool = _run_repeat(bundle, params, rreqs, history_cache=True)
+    eng_full = _repeat_engine(bundle, params, history_cache=False)
+    eng_pool = _repeat_engine(bundle, params, history_cache=True,
+                              pool_budget_bytes=V2_BUDGET_BYTES)
+    full, out_full, pooled, out_pool = _ab_interleaved(eng_full, eng_pool,
+                                                       rreqs)
+    eng_full.shutdown()
     bitwise_frac = np.mean([np.array_equal(a, b)
                             for a, b in zip(out_full, out_pool)])
     pool_max_diff = max(
@@ -182,6 +335,96 @@ def main(csv=True):
         print(f"serving/repeat_pooled,{pooled['p50_latency_ms'] * 1e3:.1f},"
               f"tput={pooled['throughput_items_per_s']:.0f}")
 
+    print("\n=== PDA v2: device-resident, byte-budgeted pool vs PR 2-style "
+          "host pool (hot repeat-user path) ===")
+    eng_v1 = _repeat_engine(bundle, params, history_cache=True,
+                            pool_placement="host", kv_dedup=False)
+    v1_style, out_v1, v2, out_v2 = _ab_interleaved(eng_v1, eng_pool, rreqs)
+    eng_v1.shutdown()
+    v2_speedup = (v2["throughput_items_per_s"]
+                  / max(v1_style["throughput_items_per_s"], 1e-9))
+    v2_max_diff = max(
+        float(np.abs(a.astype(np.float32) - b.astype(np.float32)).max())
+        for a, b in zip(out_v1, out_v2))
+    # KV-row dedup exercised explicitly: auto-dedup resolves OFF on the CPU
+    # backend (stacking is a local memcpy; the executor gather would be
+    # pure overhead) and ON for accelerators, where each deduped row is a
+    # skipped host->HBM transfer.  Recorded, not wall-clock-gated on CPU.
+    eng_dd = _repeat_engine(bundle, params, history_cache=True,
+                            kv_dedup=True)
+    run_workload_async(eng_dd, rreqs)
+    m0 = eng_dd.metrics()
+    rdd = run_workload_async(eng_dd, rreqs)
+    rdd.pop("outputs")
+    forced = dict(rdd, **_pool_delta(m0, eng_dd.metrics()))
+    row_bytes = forced["pool_bytes"] // max(len(eng_dd.history_pool), 1)
+    forced["transfer_bytes_saved_per_pass"] = \
+        forced["dedup_rows_saved"] * row_bytes
+    eng_dd.shutdown()
+    print(f"{'config':<28}{'items/s':>10}{'p50 ms':>9}{'p99 ms':>9}"
+          f"{'dedup':>7}")
+    for name, r in (("v1-style (host, no dedup)", v1_style),
+                    ("PDA v2 (device + budget)", v2),
+                    ("PDA v2 + forced dedup", forced)):
+        print(f"{name:<28}{r['throughput_items_per_s']:>10.0f}"
+              f"{r['p50_latency_ms']:>9.1f}{r['p99_latency_ms']:>9.1f}"
+              f"{r['dedup_rows_saved']:>7}")
+    print(f"-> PDA v2: throughput x{v2_speedup:.2f} vs v1-style pool "
+          f"(CPU backend: placements coincide, so this is a parity guard; "
+          f"the dedup row saves {forced['dedup_rows_saved']} restacks "
+          f"= {forced['transfer_bytes_saved_per_pass'] / 1e6:.1f} MB of "
+          f"per-pass H2D on an accelerator); max |diff| {v2_max_diff:.2e}")
+    if csv:
+        print(f"serving/pool_v1_style,{v1_style['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={v1_style['throughput_items_per_s']:.0f}")
+        print(f"serving/pool_v2,{v2['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={v2['throughput_items_per_s']:.0f}")
+
+    print("\n=== Suffix extension: stale-sweep (tail-append) traffic, "
+          "full re-encode vs incremental ===")
+    reenc, out_re, ext, out_ext = _run_stale_sweeps_interleaved(bundle,
+                                                                params)
+    ext_speedup = (ext["throughput_items_per_s"]
+                   / max(reenc["throughput_items_per_s"], 1e-9))
+    ext_max_diff = max(
+        float(np.abs(a.astype(np.float32) - b.astype(np.float32)).max())
+        for a, b in zip(out_re, out_ext))
+    print(f"{'config':<26}{'items/s':>10}{'p50 ms':>9}{'p99 ms':>9}"
+          f"{'stale':>7}{'ext':>5}")
+    for name, r in (("full re-encode", reenc),
+                    ("suffix extension", ext)):
+        print(f"{name:<26}{r['throughput_items_per_s']:>10.0f}"
+              f"{r['p50_latency_ms']:>9.1f}{r['p99_latency_ms']:>9.1f}"
+              f"{r['pool_stale']:>7}{r['pool_extensions']:>5}")
+    print(f"-> suffix extension: throughput x{ext_speedup:.2f} on stale "
+          f"hits; max |diff| vs re-encode {ext_max_diff:.2e}")
+    if csv:
+        print(f"serving/stale_reencode,{reenc['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={reenc['throughput_items_per_s']:.0f}")
+        print(f"serving/stale_extend,{ext['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={ext['throughput_items_per_s']:.0f}")
+
+    print("\n=== Quantized pool: int8 entries vs native "
+          "(hot repeat-user path) ===")
+    eng_q8 = _repeat_engine(bundle, params, history_cache=True,
+                            pool_dtype="int8")
+    v2_again, _, q8, out_q8 = _ab_interleaved(eng_pool, eng_q8, rreqs)
+    eng_pool.shutdown()
+    eng_q8.shutdown()
+    q8_speedup = (q8["throughput_items_per_s"]
+                  / max(v2_again["throughput_items_per_s"], 1e-9))
+    q8_drift = max(
+        float(np.abs(a.astype(np.float32) - b.astype(np.float32)).max())
+        for a, b in zip(out_v2, out_q8))
+    bytes_ratio = q8["pool_bytes"] / max(v2["pool_bytes"], 1)
+    print(f"int8 pool: {q8['throughput_items_per_s']:.0f} items/s "
+          f"(x{q8_speedup:.2f} vs native), bytes/entry ratio "
+          f"{bytes_ratio:.2f}, score drift {q8_drift:.2e} "
+          f"(~{1 / max(bytes_ratio, 1e-9):.1f}x users per byte budget)")
+    if csv:
+        print(f"serving/pool_int8,{q8['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={q8['throughput_items_per_s']:.0f}")
+
     report = {
         "workload": {"distribution": "jittered", "counts": list(COUNTS),
                      "n_requests": N_REQUESTS, "history": HISTORY,
@@ -193,14 +436,45 @@ def main(csv=True):
         "bitwise_identical": bool(bitwise_base),
         "bitwise_vs_sequential_self": bool(bitwise_seq),
         "repeat_user": {
-            "workload": {"distribution": "jittered", "counts": list(COUNTS),
+            "workload": {"distribution": "jittered",
+                         "counts": list(REPEAT_COUNTS),
                          "n_requests": N_REQUESTS, "history": REPEAT_HISTORY,
-                         "n_users": REPEAT_USERS, "pool_slots": POOL_SLOTS},
+                         "n_users": REPEAT_USERS, "pool_slots": POOL_SLOTS,
+                         "max_batch": REPEAT_MAX_BATCH},
             "full_pass": full,
             "history_pool": pooled,
             "speedup_items_per_s": pool_speedup,
             "max_abs_diff_vs_full": pool_max_diff,
             "bitwise_fraction": float(bitwise_frac),
+        },
+        "pda_v2": {
+            "v1_style_pool": v1_style,
+            "v2_pool": v2,
+            "forced_dedup": forced,
+            "speedup_items_per_s": v2_speedup,
+            "max_abs_diff_vs_v1": v2_max_diff,
+        },
+        "suffix_extension": {
+            "workload": {"n_sweeps": 16, "n_users": REPEAT_USERS,
+                         "history": STALE_HISTORY, "tail_append": 4},
+            "full_reencode": reenc,
+            "incremental": ext,
+            "speedup_items_per_s": ext_speedup,
+            "max_abs_diff_vs_reencode": ext_max_diff,
+        },
+        "quantized_pool": {
+            "int8": q8,
+            "items_per_s_vs_native": q8_speedup,
+            "bytes_ratio_vs_native": bytes_ratio,
+            "max_score_drift_vs_native": q8_drift,
+        },
+        "gates": {
+            "coalesced_bitwise": True,
+            "pool_tolerance": 2e-3,
+            "pool_speedup_min": 1.5,
+            "pda_v2_speedup_min": 0.9,
+            "extension_speedup_min": 1.1,
+            "int8_drift_max": 5e-2,
         },
     }
     path = os.path.abspath(OUT_PATH)
@@ -218,6 +492,25 @@ def main(csv=True):
         raise AssertionError(
             f"history pool speedup x{pool_speedup:.2f} < 1.5 on the "
             f"repeat-user profile — perf gate failed")
+    if v2_max_diff > 2e-3 or ext_max_diff > 2e-3:
+        raise AssertionError(
+            f"PDA v2 / suffix-extension scores diverged (v2 "
+            f"{v2_max_diff:.2e}, ext {ext_max_diff:.2e} vs 2e-3 gate)")
+    if v2_speedup < 0.9:
+        raise AssertionError(
+            f"PDA v2 x{v2_speedup:.2f} vs the v1-style pool — parity "
+            f"guard failed (v2 machinery must be free on CPU)")
+    if forced["dedup_rows_saved"] < 1:
+        raise AssertionError(
+            "forced-dedup run saved no KV-row restacks — dedup machinery "
+            "is not engaging on multi-chunk traffic")
+    if ext_speedup < 1.1:
+        raise AssertionError(
+            f"suffix extension x{ext_speedup:.2f} < 1.1 vs full re-encode "
+            f"on stale sweeps — perf gate failed")
+    if q8_drift > 5e-2:
+        raise AssertionError(
+            f"int8 pool score drift {q8_drift:.2e} exceeds the 5e-2 bound")
     return report
 
 

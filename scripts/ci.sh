@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: the repo's own test suite plus an end-to-end serving
-# smoke run.  Run from the repo root:  bash scripts/ci.sh
+# Tier-1 CI gate: the repo's own test suite, a docs-reference check, an
+# end-to-end serving smoke run, and a PDA v2 (quantized + incremental
+# history pool) serve smoke.  Run from the repo root:  bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,7 +10,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== docs: reference check =="
+python scripts/check_docs.py
+
 echo "== smoke: examples/serve_e2e.py =="
 python examples/serve_e2e.py
+
+echo "== smoke: quantized + incremental history-KV pool =="
+python -m repro.launch.serve --engine flame --history-cache \
+    --incremental-history --pool-dtype int8 --pool-budget-mb 64 \
+    --pool-slots 64 --users 4 --requests 12 --history 64 \
+    --buckets 16,8 --counts 8,16 --d-model 64
 
 echo "CI OK"

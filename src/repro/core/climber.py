@@ -88,15 +88,23 @@ def _tau(p):
 
 def _history_block_inputs(params, batch: Dict, cfg) -> list:
     """Embed the history and reorganize it into per-block input sequences:
-    [context side token, sub-sequence + positional embeddings]."""
+    [sub-sequence + positional embeddings, context side token].
+
+    The side token rides at the END of each block's history prefix (not the
+    front): under the causal prefix mask the history items then never attend
+    to it, so their per-layer K/V depend *only* on the item ids — the
+    property PDA v2's incremental extension exploits (a side-feature-only
+    change re-encodes one token per block instead of the whole prefix).
+    The side token itself still sees every history item, and candidates see
+    history + side + self, so side information reaches every score."""
     hist = jnp.take(params["embed"]["embedding"], batch["history"], axis=0)
     b, n, d = hist.shape
     side = jnp.einsum("bf,fd->bd", batch["side"].astype(hist.dtype),
                       params["side_proj"])[:, None]
     nb = cfg.climber.num_blocks
     sub = hist.reshape(b, nb, n // nb, d)
-    return [jnp.concatenate([side, sub[:, i] + params["pos_embed"][None, :n // nb]],
-                            axis=1)
+    return [jnp.concatenate([sub[:, i] + params["pos_embed"][None, :n // nb],
+                             side], axis=1)
             for i in range(nb)]
 
 
@@ -199,13 +207,82 @@ def encode_history(params, batch: Dict, cfg: ModelConfig, *,
 
     Per block ``b{i}``: {"k", "v"} with shape [B, L, n_hist_block, Hkv, D]
     (batch axis leading, so serving can stack pool entries from different
-    requests along axis 0).  n_hist_block = n // num_blocks + 1 — the
-    context side token rides at position 0 of every block sequence, so the
-    cached K/V fold the side features in."""
+    requests along axis 0).  n_hist_block = n // num_blocks + 1: positions
+    ``0..w-1`` are the block's history items (K/V depending only on the
+    item ids) and position ``w`` is the context side token folding the side
+    features in (see :func:`_history_block_inputs`); ``w = n //
+    num_blocks``.  :func:`extend_history` can therefore refresh a cached
+    entry by re-encoding only the suffix that actually changed."""
     kv = {}
     for i, xb in enumerate(_history_block_inputs(params, batch, cfg)):
         k, v = _block_encode_kv(params["blocks"][f"b{i}"], xb, cfg, impl)
         kv[f"b{i}"] = {"k": jnp.moveaxis(k, 1, 0), "v": jnp.moveaxis(v, 1, 0)}
+    return kv
+
+
+def _block_extend_kv(bp, x_suf, k_pref, v_pref, cfg, impl: str):
+    """Suffix-only causal pass for one block against cached prefix K/V.
+
+    ``x_suf`` [B,S_suf,d] holds the block inputs from position ``P``
+    onward (changed history items + the side token); ``k_pref``/``v_pref``
+    [L,B,P,Hkv,D] are the trusted rows of a cached encode.  Returns the
+    per-layer K/V of the suffix positions — bitwise what a full
+    :func:`_block_encode_kv` would produce for those rows (reference
+    impl), because causal attention at position >= P sees exactly
+    ``concat(prefix, suffix)``."""
+    b, s_suf, d = x_suf.shape
+    p0 = k_pref.shape[2]
+    positions = jnp.broadcast_to(p0 + jnp.arange(s_suf), (b, s_suf))
+
+    def layer(x, inp):
+        p, kh, vh = inp
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        o = sumi.extend_attention(q, kh, vh, k, v, impl=impl,
+                                  temperature=_tau(p))
+        x = x + A.project_out(p["attn"], o)
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), (k, v)
+
+    from repro.models.transformer import scan_or_unroll
+    _, kv = scan_or_unroll(layer, x_suf, (bp, k_pref, v_pref))
+    return kv                                  # (k, v), each [L,B,S_suf,Hkv,D]
+
+
+def extend_history(params, history_kv, batch: Dict, cfg: ModelConfig, *,
+                   prefix_len: int, impl: str = "reference"):
+    """Incremental suffix extension of a cached HistoryKV (PDA v2).
+
+    Trusts the first ``prefix_len`` positions of the model's history window
+    to be unchanged since ``history_kv`` was encoded, and re-encodes only
+    the remainder: per block, the history items at window positions >=
+    ``prefix_len`` plus the side token (which always re-encodes — side
+    features average the *full* upstream history, so any history change
+    moves them).  ``prefix_len == n`` is the dominant serving case: a
+    tail-append beyond the model window re-encodes exactly one token per
+    block instead of ``n/N_b + 1``.
+
+    Returns a full HistoryKV pytree (cached prefix rows + fresh suffix
+    rows), bitwise-identical to ``encode_history(params, batch)`` under the
+    reference/chunked impls whenever the trust assumption holds."""
+    n = batch["history"].shape[1]
+    nb = cfg.climber.num_blocks
+    w = n // nb
+    if not 0 <= prefix_len <= n:
+        raise ValueError(f"prefix_len must be in [0, {n}], got {prefix_len}")
+    kv = {}
+    for i, xb in enumerate(_history_block_inputs(params, batch, cfg)):
+        p_i = min(max(prefix_len - i * w, 0), w)
+        old = history_kv[f"b{i}"]
+        k_all = jnp.moveaxis(old["k"], 1, 0)       # [L,B,w+1,Hkv,D]
+        v_all = jnp.moveaxis(old["v"], 1, 0)
+        k_new, v_new = _block_extend_kv(
+            params["blocks"][f"b{i}"], xb[:, p_i:],
+            k_all[:, :, :p_i], v_all[:, :, :p_i], cfg, impl)
+        k_full = jnp.concatenate([k_all[:, :, :p_i], k_new], axis=2)
+        v_full = jnp.concatenate([v_all[:, :, :p_i], v_new], axis=2)
+        kv[f"b{i}"] = {"k": jnp.moveaxis(k_full, 1, 0),
+                       "v": jnp.moveaxis(v_full, 1, 0)}
     return kv
 
 
@@ -282,6 +359,13 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
         return jax.nn.sigmoid(
             score_candidates(params, history_kv, candidates, cfg, impl=impl))
 
+    def extend_history_fn(params, history_kv, batch, *, prefix_len: int,
+                          impl: str = "reference"):
+        """Serving entry: suffix-only re-encode of a cached HistoryKV whose
+        first ``prefix_len`` window positions are unchanged."""
+        return extend_history(params, history_kv, batch, cfg,
+                              prefix_len=prefix_len, impl=impl)
+
     def history_kv_specs_fn(params, n_history: int, batch: int = 1):
         return history_kv_specs(params, cfg, n_history, batch)
 
@@ -316,4 +400,5 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
                        input_specs, input_logical, cache_init,
                        encode_history=encode_history_fn,
                        score_candidates=score_candidates_fn,
-                       history_kv_specs=history_kv_specs_fn)
+                       history_kv_specs=history_kv_specs_fn,
+                       extend_history=extend_history_fn)

@@ -26,9 +26,10 @@ import queue
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -208,6 +209,7 @@ class CoalescePolicy:
 class _PendingChunk:
     args: Tuple[np.ndarray, ...]      # host arrays, each with leading axis 1
     future: "Future"                  # concurrent.futures.Future per chunk
+    dedup_token: Optional[Hashable] = None   # stable identity of lead args
 
 
 class CoalescingOrchestrator:
@@ -234,12 +236,35 @@ class CoalescingOrchestrator:
     Per (kind, bucket) there are ``n_streams`` worker threads, each owning
     one executor (the CUDA-stream analogue).  A worker that pops the first
     pending chunk keeps collecting until ``max_batch`` rows are filled or
-    ``window_s`` elapses, stacks the host args along the batch axis (ONE
+    ``window_s`` elapses, stacks the args along the batch axis (ONE
     device transfer per argument per dispatch — the PDA packed-transfer
     insight applied at dispatch granularity), runs the executor once, and
     scatters result rows back to the per-chunk futures.  Rows are
     independent under XLA, so coalesced scores are bitwise-identical to
-    solo dispatches (asserted in tests)."""
+    solo dispatches (asserted in tests).
+
+    PDA v2 device-residency hooks:
+
+    * **Device-aware stacking** — a chunk argument that is already a JAX
+      device array (a device-resident pool entry) is stacked with
+      ``jnp.concatenate`` on device instead of round-tripping through host
+      numpy; host numpy args keep the v1 one-transfer-per-arg path.
+    * **Device-resident outputs** — kinds listed in ``device_output_kinds``
+      (the history encode/extend families) keep their outputs on device:
+      rows are scattered as device slices, so an encoded entry flows
+      dispatcher -> pool -> next dispatch without ever visiting host
+      memory.
+    * **KV-row dedup** — ``dedup_kinds`` maps a kind to the number of
+      leading args that are identity-deduped per dispatch: chunks whose
+      leading args are the *same objects* (the chunks of one multi-chunk
+      request) or that carry the same ``dedup_token`` through ``submit``
+      (co-batched requests hitting one pool entry — quantized pools
+      dequantize to fresh arrays per lookup, so object identity alone
+      would miss them) are stacked **once**, and the executor receives an
+      extra ``[B] int32`` row-index argument (inserted after the deduped
+      args) to gather each row's view.  The executor must be built for
+      that signature.  Saved restacks are reported as
+      ``dedup_rows_saved``."""
 
     _DEFAULT_KIND = "default"
 
@@ -248,7 +273,9 @@ class CoalescingOrchestrator:
                  pad_slice_fn: Callable = None, gather_fn: Callable = None,
                  policy: CoalescePolicy = CoalescePolicy(),
                  n_streams: int = 2,
-                 families: Optional[Dict[str, Sequence[int]]] = None):
+                 families: Optional[Dict[str, Sequence[int]]] = None,
+                 dedup_kinds: Optional[Dict[str, int]] = None,
+                 device_output_kinds: Sequence[str] = ()):
         self._legacy = families is None
         if families is None:
             # adapt the single-family callbacks to the kinds signatures once
@@ -270,9 +297,12 @@ class CoalescingOrchestrator:
         self.pad_slice = pad_slice_fn
         self.gather = gather_fn
 
+        self._dedup: Dict[str, int] = dict(dedup_kinds or {})
+        self._device_output = frozenset(device_output_kinds)
         self.chunk_count = 0
         self.dispatch_count = 0
         self.rows_dispatched = 0       # real (non-padding) rows
+        self.dedup_rows_saved = 0      # restacks avoided by KV-row dedup
         self.kind_chunks: Dict[str, int] = {k: 0 for k in self.families}
         self.kind_dispatches: Dict[str, int] = {k: 0 for k in self.families}
         self._stat_lock = threading.Lock()
@@ -301,10 +331,12 @@ class CoalescingOrchestrator:
             th.start()
 
     # ---- submission ----
-    def submit(self, request, m: int, kind: Optional[str] = None):
+    def submit(self, request, m: int, kind: Optional[str] = None,
+               dedup_token: Optional[Hashable] = None):
         """Non-blocking: split into chunks, enqueue each onto its
         (kind, bucket) coalescing queue; returns a lazy future gathering the
-        chunk rows."""
+        chunk rows.  ``dedup_token``, when given, is a stable identity for
+        the chunk's dedupable leading args (see the class docstring)."""
         if kind is None:
             kind = next(iter(self.families))
         plan = split_request(m, self.families[kind])
@@ -318,7 +350,8 @@ class CoalescingOrchestrator:
             futs.append(f)
             cond = self._cond[(kind, c.bucket)]
             with cond:
-                self._pending[(kind, c.bucket)].append(_PendingChunk(args, f))
+                self._pending[(kind, c.bucket)].append(
+                    _PendingChunk(args, f, dedup_token))
                 cond.notify()
 
         def resolve():
@@ -327,8 +360,9 @@ class CoalescingOrchestrator:
 
         return _Lazy(resolve)
 
-    def score(self, request, m: int, kind: Optional[str] = None):
-        return self.submit(request, m, kind).result()
+    def score(self, request, m: int, kind: Optional[str] = None,
+              dedup_token: Optional[Hashable] = None):
+        return self.submit(request, m, kind, dedup_token).result()
 
     # ---- dispatcher ----
     def _worker(self, kind: str, bucket: int, ex: Executor):
@@ -357,23 +391,62 @@ class CoalescingOrchestrator:
                         cond.wait(timeout=left)
             self._dispatch(kind, ex, batch)
 
+    @staticmethod
+    def _stack_rows(rows: List, batch: int):
+        """Stack per-chunk rows (leading axis 1) along the batch axis, padded
+        with zero rows to the compiled batch size.  Device arrays stack via
+        jnp (no host round-trip); host numpy keeps the v1 single-transfer
+        path."""
+        xp = jnp if isinstance(rows[0], jax.Array) else np
+        if len(rows) < batch:
+            rows = list(rows) + [xp.zeros_like(rows[0])] * (batch - len(rows))
+        return xp.concatenate(rows, axis=0)
+
     def _dispatch(self, kind: str, ex: Executor,
                   batch: List[_PendingChunk]):
         n = len(batch)
         try:
+            B = self.policy.batch
             stacked = []
-            for j in range(len(batch[0].args)):
-                rows = [c.args[j] for c in batch]
-                if n < self.policy.batch:
-                    rows += [np.zeros_like(rows[0])] * (self.policy.batch - n)
-                stacked.append(np.concatenate(rows, axis=0))
+            n_lead = self._dedup.get(kind, 0)
+            n_uniq = n
+            if n_lead:
+                # identity-dedup the leading args: chunks carrying the SAME
+                # arg objects (one request split across chunks, or requests
+                # sharing a pool entry) stack each unique row once; the
+                # executor gathers per-row views through the idx argument
+                slot_of: Dict[tuple, int] = {}
+                uniq: List[tuple] = []
+                idx = np.zeros(B, np.int32)
+                for i, c in enumerate(batch):
+                    ident = c.dedup_token if c.dedup_token is not None \
+                        else tuple(id(a) for a in c.args[:n_lead])
+                    slot = slot_of.get(ident)
+                    if slot is None:
+                        slot = len(uniq)
+                        slot_of[ident] = slot
+                        uniq.append(c.args[:n_lead])
+                    idx[i] = slot
+                n_uniq = len(uniq)
+                for j in range(n_lead):
+                    stacked.append(self._stack_rows([u[j] for u in uniq], B))
+                stacked.append(idx)
+                rests = [c.args[n_lead:] for c in batch]
+            else:
+                rests = [c.args for c in batch]
+            for j in range(len(rests[0])):
+                stacked.append(self._stack_rows([r[j] for r in rests], B))
             out = ex(*stacked)
             jax.block_until_ready(out)
-            host = jax.tree.map(np.asarray, out)   # pytree-valued outputs OK
+            if kind in self._device_output:
+                host = out        # stays device-resident (pool entries)
+            else:
+                host = jax.tree.map(np.asarray, out)   # pytree outputs OK
             with self._stat_lock:
                 self.dispatch_count += 1
                 self.kind_dispatches[kind] += 1
                 self.rows_dispatched += n
+                self.dedup_rows_saved += n - n_uniq
             for i, c in enumerate(batch):
                 c.future.set_result(
                     jax.tree.map(lambda a: a[i:i + 1], host))
@@ -392,6 +465,7 @@ class CoalescingOrchestrator:
                 "rows_dispatched": self.rows_dispatched,
                 "avg_fill": self.rows_dispatched / d,
                 "batch_axis": self.policy.batch,
+                "dedup_rows_saved": self.dedup_rows_saved,
             }
             if not self._legacy:
                 for kind in self.families:

@@ -58,6 +58,27 @@ def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
                        q_offset=n_history)
 
 
+def extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
+                     impl: str = "reference", temperature=None):
+    """Causal suffix attention against cached prefix K/V (incremental
+    history extension, the MTServe "extend a cached prefix" step).
+
+    ``q``/``k_suffix``/``v_suffix`` are [B,S_suf,...] projections of the
+    history positions being (re-)encoded; ``k_prefix``/``v_prefix``
+    [B,P,...] come from a cached ``encode_history`` pass whose first ``P``
+    positions are trusted unchanged.  Query row i sits at absolute position
+    ``P + i`` and attends causally over the concatenated KV axis — exactly
+    the rows a full re-encode would attend to, so the output is bit-for-bit
+    the suffix slice of a full history encode under the reference impl
+    (chunked routes there at serving scales)."""
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    p0 = k_prefix.shape[1]
+    k = jnp.concatenate([k_prefix, k_suffix], axis=1)
+    v = jnp.concatenate([v_prefix, v_suffix], axis=1)
+    return A.attention(q, k, v, "causal", impl=impl, q_offset=p0)
+
+
 def sumi_mask(n_history: int, n_candidates: int) -> jnp.ndarray:
     """Dense boolean mask (for tests / the unfused baseline)."""
     s = n_history + n_candidates

@@ -103,7 +103,9 @@ def _element_mask(mode: str, rows, cols, *, window: int, n_history: int,
     if mode == "full":
         return ok
     if mode == "causal":
-        return ok & (cols <= rows)
+        # q_offset > 0 (incremental history extension): suffix query row i
+        # sits at absolute KV position q_offset + i
+        return ok & (cols <= rows + q_offset)
     if mode == "sliding":
         return ok & (cols <= rows) & (rows - cols < window)
     if mode == "sumi":
@@ -175,12 +177,13 @@ def flash_attention_kernel(q, k, v, *, mode: str, window: int = 0,
     convention: this kernel applies 1/sqrt(D_real) via the ``scale`` closure
     in ops.py — here q is scaled already, so scale=1.
     """
-    if q_offset and mode != "sumi":
+    if q_offset and mode not in ("sumi", "causal"):
         # block selection honors the offset for every mode, but the
-        # causal/sliding element masks still use local row positions —
-        # fail loudly rather than return silently-masked zeros
+        # sliding element mask still uses local row positions — fail
+        # loudly rather than return silently-masked zeros
         raise NotImplementedError(
-            f"q_offset is only supported for mode='sumi', got {mode!r}")
+            f"q_offset is only supported for mode in ('sumi', 'causal'), "
+            f"got {mode!r}")
     if q_offset and bq > bk:
         # the offset self range of a q block spans <= 2 KV blocks only for
         # bq <= bk (ops.py always passes square blocks); wider q blocks

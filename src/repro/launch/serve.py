@@ -74,7 +74,13 @@ def serve_rec(args):
                   window_s=args.window_ms * 1e-3,
                   n_workers=args.concurrency,
                   history_cache=args.history_cache,
-                  pool_slots=args.pool_slots)
+                  pool_slots=args.pool_slots,
+                  pool_budget_bytes=(int(args.pool_budget_mb * 2**20)
+                                     if args.pool_budget_mb else None),
+                  pool_dtype=args.pool_dtype,
+                  pool_placement=args.pool_placement,
+                  pool_spill_bytes=int(args.pool_spill_mb * 2**20),
+                  incremental_history=args.incremental_history)
     else:
         kw.update(n_workers=args.concurrency)
     eng = create_engine(args.engine, bundle, params, **kw)
@@ -85,7 +91,12 @@ def serve_rec(args):
               f"batch axis {eng.dso.policy.batch}, "
               f"coalesce={'on' if eng.dso.policy.enabled else 'off'})")
         if args.history_cache:
-            print(f"[serve] history-KV pool: {args.pool_slots} slots")
+            budget = (f"{args.pool_budget_mb:g} MB budget"
+                      if args.pool_budget_mb else "no byte budget")
+            print(f"[serve] history-KV pool: {args.pool_slots} slots, "
+                  f"{budget}, dtype {args.pool_dtype}, "
+                  f"placement {args.pool_placement}, incremental="
+                  f"{'on' if args.incremental_history else 'off'}")
 
     tc = TrafficConfig(
         candidate_counts=tuple(int(c) for c in args.counts.split(",")),
@@ -122,6 +133,26 @@ def main():
                          "serve candidate-only executors on pool hits")
     ap.add_argument("--pool-slots", type=int, default=256,
                     help="history-KV pool capacity (entries, LRU-evicted)")
+    ap.add_argument("--pool-budget-mb", type=float, default=0.0,
+                    help="history-KV pool byte budget in MB (0 = entry "
+                         "bound only); LRU-evicts by bytes_used")
+    ap.add_argument("--pool-dtype", default="native",
+                    choices=["native", "bf16", "int8"],
+                    help="stored precision of pool entries (int8 uses "
+                         "per-head scales; ~2x users per byte budget vs "
+                         "the bf16-native entries, ~4x vs f32)")
+    ap.add_argument("--pool-placement", default="device",
+                    choices=["device", "host"],
+                    help="device keeps entries as JAX device arrays (no "
+                         "host round-trip per dispatch); host is the "
+                         "legacy PR 2 behavior")
+    ap.add_argument("--pool-spill-mb", type=float, default=0.0,
+                    help="host-RAM second-tier budget in MB absorbing "
+                         "pool evictions (0 = no spill tier)")
+    ap.add_argument("--incremental-history", action="store_true",
+                    help="on stale pool hits sharing a window prefix with "
+                         "the cached entry, re-encode only the suffix + "
+                         "side token against the cached prefix K/V")
     ap.add_argument("--users", type=int, default=0,
                     help="repeat-user traffic: draw requests from this many "
                          "users with stable histories (0 = unique users)")

@@ -21,7 +21,7 @@ Implementations
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -132,27 +132,61 @@ def reference_attention(q, k, v, mode: str, *, window: int = 0,
 # chunked flash-style attention (pure jnp, no O(S^2) memory)
 # ---------------------------------------------------------------------------
 
+def _visible_kv_blocks(mode: str, qi: int, *, q_chunk: int, k_chunk: int,
+                       nk: int, sk: int, n_history: int,
+                       q_offset: int) -> List[int]:
+    """KV chunk indices a q chunk can see under a static mask (exact block
+    skip, mirroring the pallas kernel's grid trimming).
+
+    ``causal`` (and ``sumi`` with ``q_offset == 0``, whose candidate rows
+    attend only at-or-below their own position): chunks up to the one holding
+    the q chunk's last diagonal element.  ``sumi`` with ``q_offset > 0``
+    (every query is a candidate): the history chunks plus the chunk(s)
+    holding the queries' own keys — per-candidate work is O(n_history +
+    q_chunk), independent of where the candidate block sits.
+    """
+    hi = min(q_offset + (qi + 1) * q_chunk, sk)        # exclusive col bound
+    n_vis = min(nk, max(1, -(-hi // k_chunk)))
+    if mode == "sumi" and q_offset:
+        nhb = min(nk, -(-min(n_history, sk) // k_chunk)) if n_history else 0
+        d0 = min(nk - 1, (q_offset + qi * q_chunk) // k_chunk)
+        return list(range(nhb)) + [j for j in range(d0, n_vis) if j >= nhb]
+    return list(range(n_vis))
+
+
 def chunked_attention(q, k, v, mode: str, *, window: int = 0, n_history: int = 0,
                       q_chunk: int = 1024, k_chunk: int = 1024,
                       q_offset: int = 0):
     """Online-softmax attention over KV chunks.
 
-    Shapes as in reference_attention.  For ``sliding`` only the in-window KV
-    slice is touched per q chunk (compute scales with S*window).  For other
-    modes all KV chunks are visited with masking (full S^2 matmul FLOPs; the
-    Pallas kernel and the exact-causal §Perf variant avoid that).
+    Shapes as in reference_attention.  KV chunks that a q chunk provably
+    cannot see under the static mask are skipped outright, so FLOPs match
+    the mask support rather than the dense S^2 rectangle:
+
+      ``sliding``  only the in-window KV slice per q chunk (S*window);
+      ``causal``   chunks at-or-below the diagonal (~S^2/2, exact skip);
+      ``sumi``     ditto — candidate rows never look above their own
+                   position, and the cached-candidate path (``q_offset`` >
+                   0) touches history chunks + the self diagonal only;
+      ``full``     every chunk (no structure to exploit).
+
+    Skipped chunks are numerically inert in the online softmax (their masked
+    scores contribute exact zeros), so outputs are identical to the
+    visit-everything formulation.
 
     ``q_offset`` shifts the query positions against the KV positions — the
-    cached-history serving path scores M candidate queries against
-    ``n_history`` cached K/V rows plus their own, so q row i sits at absolute
-    position ``n_history + i``.
+    cached-history serving paths run suffix/candidate queries against cached
+    K/V rows plus their own, so q row i sits at absolute position
+    ``q_offset + i``.  Supported for ``sumi`` (candidate scoring) and
+    ``causal`` (incremental history extension).
     """
-    if q_offset and mode != "sumi":
+    if q_offset and mode not in ("sumi", "causal"):
         # the sliding fast path slices KV around un-offset q positions —
         # fail loudly rather than window the wrong region (mirrors the
         # pallas kernel's guard)
         raise NotImplementedError(
-            f"q_offset is only supported for mode='sumi', got {mode!r}")
+            f"q_offset is only supported for mode in ('sumi', 'causal'), "
+            f"got {mode!r}")
     b, sq, h, d = q.shape
     sk = k.shape[1]
     hkv = k.shape[2]
@@ -176,7 +210,10 @@ def chunked_attention(q, k, v, mode: str, *, window: int = 0, n_history: int = 0
     ks = k.reshape(b, nk, k_chunk, hkv, d)
     vs = v.reshape(b, nk, k_chunk, hkv, d)
 
-    def q_block(qi, q_blk):
+    def q_block(qi, q_blk, ids, k_sel, v_sel):
+        """Online softmax of one q chunk over the selected KV chunks.
+        ``qi`` may be a Python int (per-chunk block lists) or traced (the
+        uniform-visibility scan path)."""
         q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
         qf = q_blk.astype(jnp.float32).reshape(b, q_chunk, hkv, g, d) * scale
 
@@ -201,17 +238,38 @@ def chunked_attention(q, k, v, mode: str, *, window: int = 0, n_history: int = 0
         l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
         (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
-            (jnp.arange(nk), jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)),
+            kv_step, (m0, l0, a0), (ids, k_sel, v_sel),
             unroll=flags.unroll_scans())
         o = acc / jnp.maximum(l[..., None], 1e-30)
         return jnp.moveaxis(o, 3, 1).reshape(b, q_chunk, h, d)  # bhgqd->bqhgd
 
-    q_blocks = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 1, 0)
-    _, out = jax.lax.scan(
-        lambda _, args: (None, q_block(*args)), None,
-        (jnp.arange(nq), q_blocks), unroll=flags.unroll_scans())
-    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, d)
+    if mode in ("causal", "sumi"):
+        # python loop over q chunks: the visible-KV count varies per chunk,
+        # so each iteration scans its own (static) block list — trace size
+        # grows with nq, FLOPs shrink to the mask support
+        def one(qi: int):
+            ids = jnp.asarray(
+                _visible_kv_blocks(mode, qi, q_chunk=q_chunk,
+                                   k_chunk=k_chunk, nk=nk, sk=sk,
+                                   n_history=n_history, q_offset=q_offset),
+                jnp.int32)
+            k_sel = jnp.moveaxis(jnp.take(ks, ids, axis=1), 1, 0)
+            v_sel = jnp.moveaxis(jnp.take(vs, ids, axis=1), 1, 0)
+            return q_block(qi, q[:, qi * q_chunk:(qi + 1) * q_chunk],
+                           ids, k_sel, v_sel)
+        out = jnp.concatenate([one(qi) for qi in range(nq)], axis=1)
+    else:
+        # full mode sees every KV chunk from every q chunk: one outer scan
+        # keeps trace size O(1) in nq (no per-chunk specialization to gain)
+        ids = jnp.arange(nk, dtype=jnp.int32)
+        k_all = jnp.moveaxis(ks, 1, 0)
+        v_all = jnp.moveaxis(vs, 1, 0)
+        q_blocks = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 1, 0)
+        _, out = jax.lax.scan(
+            lambda _, args: (None, q_block(args[0], args[1],
+                                           ids, k_all, v_all)),
+            None, (jnp.arange(nq), q_blocks), unroll=flags.unroll_scans())
+        out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, d)
     return out[:, :sq].astype(q.dtype)
 
 

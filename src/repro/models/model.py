@@ -43,6 +43,9 @@ class ModelBundle:
     encode_history: Optional[Callable] = None   # (params, batch) -> HistoryKV
     score_candidates: Optional[Callable] = None  # (params, kv, cand) -> scores
     history_kv_specs: Optional[Callable] = None  # (params, n_hist, b) -> specs
+    # incremental suffix extension: re-encode only the changed window suffix
+    # + side token against a cached HistoryKV (PDA v2 stale-hit path)
+    extend_history: Optional[Callable] = None   # (params, kv, batch, *, prefix_len) -> HistoryKV
 
 
 def cross_entropy(logits, targets, mask):

@@ -128,6 +128,7 @@ class ServeMetrics:
         self.first_t = 0.0
         self.last_t = 0.0
         self.latencies: list = []
+        self.gauges: Dict[str, float] = {}
 
     def record(self, n_items: int, latency_s: float):
         now = time.perf_counter()
@@ -139,6 +140,13 @@ class ServeMetrics:
             self.items += n_items
             self.latencies.append(latency_s)
 
+    def set_gauge(self, name: str, value: float):
+        """Point-in-time engine gauge surfaced in ``summary()`` — e.g. the
+        history-KV pool's byte accounting (``pool_bytes_used`` vs its
+        configured budget), updated by the engine as entries come and go."""
+        with self._lock:
+            self.gauges[name] = float(value)
+
     def summary(self) -> Dict[str, float]:
         with self._lock:
             lat = np.array(self.latencies) if self.latencies else np.zeros(1)
@@ -149,6 +157,7 @@ class ServeMetrics:
                 "mean_latency_ms": float(lat.mean() * 1e3),
                 "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
                 "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+                **self.gauges,
             }
 
 

@@ -21,7 +21,27 @@ and differs only in the execute stage:
 
 Engines self-register ("flame" / "implicit" / "text"); construct them via
 ``repro.serving.api.create_engine``.  See DESIGN.md for the request
-lifecycle diagram.
+lifecycle diagram and docs/ARCHITECTURE.md for the end-to-end narrative.
+
+Executor-family contract (FlameEngine <-> CoalescingOrchestrator)
+-----------------------------------------------------------------
+Executors are AOT-compiled per ``(kind, bucket)``:
+
+  ("full",   M-bucket)   monolithic SUMI pass (pool off)
+  ("cached", M-bucket)   candidate-only scoring against pooled history K/V;
+                         with ``kv_dedup`` the signature carries unique KV
+                         rows + a [B] gather index
+  ("encode", n_history)  history encode repopulating the pool on a miss
+  ("extend", prefix_len) PDA v2 incremental path: re-encode only the window
+                         suffix + side token against a stale entry's cached
+                         prefix K/V (bucket = trusted prefix length)
+
+``_pad_slice(request, chunk, kind)`` produces one chunk's host/device args
+(leading axis 1); ``_gather(rows, chunks, m, kind)`` reassembles per-request
+outputs.  Pool fingerprint/staleness semantics live in
+``serving/kv_cache.py``; the history window is fingerprinted over the FULL
+upstream array (side features average all of it), and stale entries become
+extension bases instead of pure losses when ``incremental_history`` is on.
 """
 from __future__ import annotations
 
@@ -238,7 +258,40 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     skips the history encode entirely; a miss routes one batched
     ``encode`` dispatch first and parks the result for the next request
     from that user.  Scores are numerically identical to the full pass
-    (bitwise under the reference/chunked impls)."""
+    (bitwise under the reference/chunked impls).
+
+    PDA v2 pool knobs (all riding on ``history_cache=True``):
+
+    ``pool_budget_bytes`` / ``pool_slots``
+        byte and/or entry bound on the pool (LRU-evicted; bytes are the
+        real HBM constraint — entries scale with ``n_history``).
+    ``pool_dtype``
+        stored precision: ``native`` | ``bf16`` | ``int8`` (per-head
+        scales; ~4x users-per-budget vs f32 at a bounded score drift).
+    ``pool_placement`` / ``pool_spill_bytes``
+        ``device`` keeps entries as JAX device arrays that flow
+        dispatcher -> pool -> dispatch without host round-trips (``host``
+        reproduces the PR 2 behavior for A/B); a nonzero spill budget adds
+        a host-RAM second tier that absorbs evictions.
+    ``incremental_history`` / ``extend_buckets``
+        stale hits whose cached entry encoded a window sharing a prefix
+        with the new history re-encode ONLY the changed suffix + side
+        token against the cached prefix K/V (``extend`` executor family;
+        buckets are trusted-prefix lengths, default the full window — the
+        tail-append case that re-encodes one token per block).  Note:
+        under a lossy ``pool_dtype`` each extension re-quantizes the
+        dequantized prefix, so drift can accumulate over a long-lived
+        user's repeated extensions (bounded per step by the dtype's error;
+        periodic forced re-encode is a ROADMAP follow-up).
+    ``kv_dedup``
+        identity-dedup of KV rows in the cached-scoring dispatcher: a
+        multi-chunk request (or co-batched requests hitting one pool
+        entry) stacks each user's KV rows once per dispatch, not once per
+        chunk.  Default ``None`` = auto: ON for accelerator backends
+        (the saved cost is the per-chunk host->HBM transfer; the
+        executor-side row gather is an HBM-local copy, ~30x cheaper) and
+        OFF for the CPU backend (stacking is a plain memcpy there, so the
+        gather would be pure overhead — measured ~15% on 2 cores)."""
 
     def __init__(self, bundle: ModelBundle, params, *, n_history: int,
                  buckets: Sequence[int] = (512, 256, 128),
@@ -250,7 +303,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  window_s: float = 0.002,
                  max_pending: int = 64, n_workers: int = 4,
                  impl: str = "chunked",
-                 history_cache: bool = False, pool_slots: int = 256):
+                 history_cache: bool = False, pool_slots: int = 256,
+                 pool_budget_bytes: Optional[int] = None,
+                 pool_dtype: str = "native",
+                 pool_placement: str = "device",
+                 pool_spill_bytes: int = 0,
+                 incremental_history: bool = False,
+                 extend_buckets: Optional[Sequence[int]] = None,
+                 kv_dedup: Optional[bool] = None):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
@@ -260,15 +320,28 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             feature_mode, store, cache_capacity, cache_ttl_s)
 
         self.history_pool: Optional[HistoryKVPool] = None
+        self._extend_buckets: tuple = ()
         if history_cache:
             if bundle.encode_history is None or bundle.score_candidates is None:
                 raise ValueError(
                     "history_cache=True needs a bundle with the split "
                     "encode_history/score_candidates serving surface")
-            self.history_pool = HistoryKVPool(pool_slots)
+            if incremental_history:
+                if bundle.extend_history is None:
+                    raise ValueError(
+                        "incremental_history=True needs a bundle with the "
+                        "extend_history serving surface")
+                self._extend_buckets = tuple(sorted(
+                    set(extend_buckets or (n_history,)), reverse=True))
+            self.history_pool = HistoryKVPool(
+                pool_slots, budget_bytes=pool_budget_bytes, dtype=pool_dtype,
+                placement=pool_placement, spill_bytes=pool_spill_bytes)
             kv_specs = bundle.history_kv_specs(params, n_history, batch=1)
             leaves, self._kv_treedef = jax.tree.flatten(kv_specs)
             self._kv_row_specs = leaves          # per-request rows (batch=1)
+            if kv_dedup is None:                 # auto: see class docstring
+                kv_dedup = jax.default_backend() != "cpu"
+            self._kv_dedup = kv_dedup
             self._encode_inflight: Dict[tuple, Future] = {}
             self._encode_lock = threading.Lock()
             self._key_memo: Dict[int, tuple] = {}   # request_id -> (key, fp)
@@ -277,6 +350,9 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             (batch, n_history), jnp.int32)
         side_spec = lambda batch: jax.ShapeDtypeStruct(  # noqa: E731
             (batch, N_SIDE_FEATURES), jnp.float32)
+        kv_row_shapes = lambda batch: tuple(  # noqa: E731
+            jax.ShapeDtypeStruct((batch,) + s.shape[1:], s.dtype)
+            for s in self._kv_row_specs)
 
         def build_fn(kind: str, bucket: int, batch: int):
             if kind == "full":
@@ -295,33 +371,72 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                         self.params, {"history": history, "side": side},
                         impl=self.impl)
                 shapes = (hist_spec(batch), side_spec(batch))
-            elif kind == "cached":
+            elif kind == "extend":
+                # bucket = trusted prefix length: re-encode window positions
+                # >= bucket (plus the side token) against the cached prefix
                 def fn(*args):
-                    *kv_leaves, candidates = args
+                    *kv_leaves, history, side = args
                     kv = jax.tree.unflatten(self._kv_treedef, list(kv_leaves))
-                    return bundle.score_candidates(
-                        self.params, kv, jnp.maximum(candidates, 0),
-                        impl=self.impl)
-                shapes = tuple(
-                    jax.ShapeDtypeStruct((batch,) + s.shape[1:], s.dtype)
-                    for s in self._kv_row_specs) + (
-                    jax.ShapeDtypeStruct((batch, bucket), jnp.int32),)
+                    return bundle.extend_history(
+                        self.params, kv, {"history": history, "side": side},
+                        prefix_len=bucket, impl=self.impl)
+                shapes = kv_row_shapes(batch) + (hist_spec(batch),
+                                                 side_spec(batch))
+            elif kind == "cached":
+                if self._kv_dedup:
+                    # deduped signature: unique KV rows + per-row gather idx
+                    def fn(*args):
+                        *kv_leaves, idx, candidates = args
+                        kv = jax.tree.unflatten(
+                            self._kv_treedef,
+                            [jnp.take(a, idx, axis=0) for a in kv_leaves])
+                        return bundle.score_candidates(
+                            self.params, kv, jnp.maximum(candidates, 0),
+                            impl=self.impl)
+                    shapes = kv_row_shapes(batch) + (
+                        jax.ShapeDtypeStruct((batch,), jnp.int32),
+                        jax.ShapeDtypeStruct((batch, bucket), jnp.int32))
+                else:
+                    def fn(*args):
+                        *kv_leaves, candidates = args
+                        kv = jax.tree.unflatten(self._kv_treedef,
+                                                list(kv_leaves))
+                        return bundle.score_candidates(
+                            self.params, kv, jnp.maximum(candidates, 0),
+                            impl=self.impl)
+                    shapes = kv_row_shapes(batch) + (
+                        jax.ShapeDtypeStruct((batch, bucket), jnp.int32),)
             else:
                 raise ValueError(kind)
             return jax.jit(fn).lower(*shapes).compile()
 
         # the bucket key gains a hit/miss dimension: candidate-only
         # ("cached") executors serve pool traffic, "encode" repopulates the
-        # pool on miss, "full" is the monolithic path when the pool is off
+        # pool on miss, "extend" refreshes a stale entry from its cached
+        # prefix, "full" is the monolithic path when the pool is off
+        dedup_kinds = None
+        device_output_kinds: tuple = ()
         if history_cache:
             families = {"cached": tuple(buckets), "encode": (n_history,)}
+            if self._extend_buckets:
+                families["extend"] = self._extend_buckets
+            if kv_dedup:
+                dedup_kinds = {"cached": len(self._kv_row_specs)}
+            if pool_placement == "device" and jax.default_backend() != "cpu":
+                # encode/extend outputs feed the pool: keep them on device.
+                # On the CPU backend host and device memory coincide, so the
+                # numpy scatter path is the same placement without the
+                # per-row device-slice dispatch overhead.
+                device_output_kinds = ("encode", "extend")
         else:
             families = {"full": tuple(buckets)}
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
                                     window_s=window_s)
         self.dso = DSO.CoalescingOrchestrator(
             build_fn, pad_slice_fn=self._pad_slice, gather_fn=self._gather,
-            policy=policy, n_streams=n_streams, families=families)
+            policy=policy, n_streams=n_streams, families=families,
+            dedup_kinds=dedup_kinds,
+            device_output_kinds=device_output_kinds)
         super().__init__(max_pending=max_pending, n_workers=n_workers,
                          name="flame")
 
@@ -341,7 +456,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             key, fp = self._pool_key(request)
             # stash for _execute so the O(n_history) hash runs once
             self._key_memo[request.request_id] = (key, fp)
-            if self.history_pool.peek(key, fp) is not None:
+            if self.history_pool.contains(key, fp):
                 return      # pool hit ahead: side features never consumed
         super()._admit_hook(request)
 
@@ -359,6 +474,9 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         if kind == "encode":
             history, side = request
             return history, side
+        if kind == "extend":
+            kv_leaves, history, side = request
+            return tuple(kv_leaves) + (history, side)
         if kind == "full":
             history, candidates, side = request
             return history, self._slice_candidates(candidates, chunk), side
@@ -367,7 +485,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
 
     def _gather(self, rows, chunks: List[DSO.Chunk], m: int,
                 kind: str = "full"):
-        if kind == "encode":
+        if kind in ("encode", "extend"):
             return rows[0]                      # one chunk: the KV pytree
         parts = [r[:, :c.valid] for r, c in zip(rows, chunks)]
         return np.concatenate(parts, axis=1)
@@ -381,18 +499,30 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         return hashlib.blake2b(np.ascontiguousarray(history).tobytes(),
                                digest_size=16).hexdigest()
 
+    @staticmethod
+    def _shared_prefix(cached: Optional[np.ndarray], new: np.ndarray) -> int:
+        """Length of the common leading run of two history windows (-1 when
+        no basis window is available)."""
+        if cached is None or cached.shape != new.shape:
+            return -1
+        neq = np.nonzero(np.asarray(cached) != np.asarray(new))[0]
+        return int(neq[0]) if neq.size else int(new.shape[0])
+
     def _lookup_or_encode(self, req: ServeRequest, hist: np.ndarray,
                           memo: Optional[tuple] = None
-                          ) -> Tuple[tuple, bool, float]:
-        """Returns (kv_leaves, hit, features_s); encodes + populates the
+                          ) -> Tuple[tuple, str, float]:
+        """Returns (kv_leaves, path, features_s) with path one of ``hit`` /
+        ``encode`` / ``extend`` / ``wait``; encodes (or, on an extendable
+        stale hit, suffix-extends the dropped entry) and repopulates the
         pool on miss.  Concurrent misses for one (key, fingerprint) are
         single-flighted: the first worker encodes, co-arriving session
         requests wait on its future instead of dispatching duplicate
         O(n_history) encodes."""
         key, fp = memo if memo is not None else self._pool_key(req)
-        kv = self.history_pool.get(key, fp)
-        if kv is not None:
-            return kv, True, 0.0
+        kv, status, basis = self.history_pool.lookup(
+            key, fp, want_basis=bool(self._extend_buckets))
+        if status == "hit":
+            return kv, "hit", 0.0
         with self._encode_lock:
             fut = self._encode_inflight.get((key, fp))
             leader = fut is None
@@ -402,22 +532,41 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 # before electing ourselves and re-encoding
                 kv = self.history_pool.peek(key, fp)
                 if kv is not None:
-                    return kv, False, 0.0
+                    return kv, "wait", 0.0
                 fut = Future()
                 self._encode_inflight[(key, fp)] = fut
         if not leader:
-            return fut.result(), False, 0.0
+            return fut.result(), "wait", 0.0
         try:
             t0 = time.perf_counter()
             side = self._side_features(req.history)
             t1 = time.perf_counter()
-            kv_tree = self.dso.score((hist, side), self.n_history,
-                                     kind="encode")
-            # copy: dispatcher rows are views into the (max_batch, ...)
-            # stacked batch array — pooling the view would pin the whole
-            # padded parent and make pool_bytes under-report
-            kv = tuple(np.array(a) for a in jax.tree.leaves(kv_tree))
-            self.history_pool.put(key, fp, kv)
+            kv_tree, path = None, "encode"
+            if basis is not None and self._extend_buckets:
+                # stale hit sharing a window prefix with the dropped entry:
+                # re-encode only the suffix + side token against its K/V
+                shared = self._shared_prefix(basis.hist_window, hist[0])
+                bucket = max((b for b in self._extend_buckets if b <= shared),
+                             default=None)
+                if bucket is not None:
+                    basis_leaves = tuple(jax.tree.leaves(basis.kv))
+                    kv_tree = self.dso.score((basis_leaves, hist, side),
+                                             bucket, kind="extend")
+                    path = "extend"
+                    self.history_pool.count_extension()
+            if kv_tree is None:
+                kv_tree = self.dso.score((hist, side), self.n_history,
+                                         kind="encode")
+            # device-resident rows arrive as fresh device buffers (XLA
+            # slices of the stacked dispatch output); host rows are numpy
+            # VIEWS into the (max_batch, ...) stacked parent — copy those so
+            # pooling them doesn't pin the padded parent or make pool_bytes
+            # under-report
+            kv = tuple(np.array(a) if isinstance(a, np.ndarray) else a
+                       for a in jax.tree.leaves(kv_tree))
+            self.history_pool.put(key, fp, kv, hist_window=hist[0])
+            self._metrics.set_gauge("pool_bytes_used",
+                                    self.history_pool.bytes_used)
             fut.set_result(kv)
         except BaseException as e:
             fut.set_exception(e)
@@ -425,7 +574,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         finally:
             with self._encode_lock:
                 self._encode_inflight.pop((key, fp), None)
-        return kv, False, t1 - t0
+        return kv, path, t1 - t0
 
     def _execute(self, req: ServeRequest):
         memo = (self._key_memo.pop(req.request_id, None)
@@ -440,13 +589,28 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             out = self.dso.score((hist, cand, side), req.m, kind="full")
             t2 = time.perf_counter()
             return out[0], {"features_s": t1 - t0, "execute_s": t2 - t1}
-        kv, hit, features_s = self._lookup_or_encode(req, hist, memo)
+        key_fp = memo if memo is not None else self._pool_key(req)
+        kv, path, features_s = self._lookup_or_encode(req, hist, key_fp)
         t1 = time.perf_counter()
-        out = self.dso.score((kv, cand), req.m, kind="cached")
+        # On a HIT the (key, fingerprint) pair is a stable content identity
+        # for the loaded rows (every hit dequantizes the same payload), so
+        # co-batched requests for one user dedup even when a quantized pool
+        # dequantizes to fresh arrays per lookup.  Miss paths carry the
+        # leader's PRE-quantization KV — under a lossy pool dtype that is a
+        # different representation than a hit's, so they fall back to
+        # object identity (which still dedups one request's own chunks and
+        # single-flight followers sharing the leader's tuple).
+        token = None
+        if self._kv_dedup and path == "hit":
+            token = ("kv",) + key_fp[0] + (key_fp[1],)
+        out = self.dso.score((kv, cand), req.m, kind="cached",
+                             dedup_token=token)
         t2 = time.perf_counter()
+        build_s = (t1 - t0) - features_s
         return out[0], {"features_s": features_s,
-                        "encode_s": (t1 - t0) - features_s if not hit else 0.0,
-                        "pool_hit": 1.0 if hit else 0.0,
+                        "encode_s": build_s if path == "encode" else 0.0,
+                        "extend_s": build_s if path == "extend" else 0.0,
+                        "pool_hit": 1.0 if path == "hit" else 0.0,
                         "execute_s": t2 - t1}
 
     def _extra_metrics(self):

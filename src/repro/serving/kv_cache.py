@@ -6,13 +6,47 @@ Two families live here:
                      architectures (continuous-batching-lite): one pooled
                      cache pytree, per-slot lengths, prefill-insert/release.
 
-``HistoryKVPool``    per-user LRU pool of cached *history-side* SUMI K/V for
-                     GR serving (the MTServe / "One Pool, Two Caches"
-                     hierarchical-cache idea).  The SUMI mask makes the
-                     history prefix self-contained, so its per-layer K/V
+``HistoryKVPool``    byte-budgeted, optionally quantized, two-tier LRU pool
+                     of cached *history-side* SUMI K/V for GR serving — the
+                     PDA v2 realization of the MTServe / "One Pool, Two
+                     Caches" hierarchical-cache idea.  The SUMI mask makes
+                     the history prefix self-contained, so its per-layer K/V
                      depend only on the user history; FlameEngine encodes it
                      once, parks it here, and repeat/session-re-rank traffic
                      runs candidate-only executors against the pooled entry.
+
+Pool contract (PDA v2)
+----------------------
+*Keys and staleness.*  Entries are keyed by a stable user identity (or a
+content hash of the history) and carry a **fingerprint** — a hash of the
+full upstream history array.  A key hit whose fingerprint differs means the
+user's history advanced since the encode: the entry is *stale* and must not
+be scored against.  ``lookup`` drops it but can hand the dropped entry back
+as an **extension basis** (K/V + the history window it encoded) so the
+engine can re-encode only the changed suffix instead of the whole window.
+
+*Capacity.*  ``slots`` bounds the entry count, ``budget_bytes`` bounds the
+primary tier's stored bytes (entries vary in size with ``n_history``; the
+paper-scale entry is ~6.5 MB/user, so bytes — not counts — are the real HBM
+constraint).  Eviction is strictly LRU; both limits may be combined.  An
+entry that alone exceeds ``budget_bytes`` is *rejected* (counted in
+``rejects``) rather than admitted, so ``bytes_used <= budget_bytes`` is a
+hard invariant.
+
+*Placement.*  ``placement="device"`` keeps stored leaves as JAX device
+arrays (HBM-resident next to the weights — dispatches consume them without
+a host round-trip); ``placement="host"`` stores host numpy (the PR 2
+behavior, kept for A/B benchmarking).  ``spill_bytes > 0`` enables a
+host-RAM second tier: primary-tier evictions demote there instead of
+dropping, and a later hit promotes back (counted as ``spill_hits``) —
+"One Pool, Two Caches" within one process.
+
+*Quantization.*  ``dtype`` selects the stored precision: ``"native"``
+(compute dtype), ``"bf16"``, or ``"int8"`` with a per-(layer, head)
+absmax scale.  Dequantization happens at lookup (on device under device
+placement), so executor input signatures never change; int8 roughly
+quadruples users-per-budget vs f32 at a bounded score drift (asserted in
+tests/test_pda_v2.py, measured in BENCH_serving.json).
 """
 from __future__ import annotations
 
@@ -69,61 +103,302 @@ class KVCacheManager:
 
 
 # ---------------------------------------------------------------------------
+# quantization hooks (shared by pool entries; per-(layer, head) scaling)
+# ---------------------------------------------------------------------------
+
+POOL_DTYPES = ("native", "bf16", "int8")
+
+
+@dataclasses.dataclass
+class _QuantLeaf:
+    """One quantized KV leaf: values + (for int8) per-(layer, head) scale.
+
+    KV leaves are [B, L, S, Hkv, D]; the int8 scale reduces over the
+    position and feature axes (S, D) and keeps (B, L, 1, Hkv, 1), so every
+    attention head of every layer owns its own dynamic range.  ``scale is
+    None`` marks a plain bf16 cast.  ``dtype`` is the original compute
+    dtype to dequantize back to (executor input signatures are fixed, so a
+    natively-f32 leaf must come back f32 — a natively-bf16 leaf stored
+    under ``dtype="bf16"`` round-trips losslessly)."""
+
+    q: object          # int8 (or bf16) values, original shape
+    scale: object      # f32 absmax scale, reduced shape; None for bf16
+    dtype: object      # original jnp dtype to dequantize back to
+
+
+def _scale_axes(ndim: int) -> Tuple[int, ...]:
+    if ndim >= 4:
+        return (ndim - 3, ndim - 1)          # (S, D) of [..., S, Hkv, D]
+    return tuple(range(ndim))                # fallback: one global scale
+
+
+def quantize_leaf(a, dtype: str):
+    """Quantize one KV leaf to the pool's stored precision.
+
+    Returns the stored representation: the array itself for ``native``, a
+    bf16 cast for ``bf16``, or a :class:`_QuantLeaf` for ``int8``."""
+    if dtype == "native":
+        return a
+    a = jnp.asarray(a)
+    if dtype == "bf16":
+        return _QuantLeaf(a.astype(jnp.bfloat16), None, a.dtype)
+    if dtype == "int8":
+        af = a.astype(jnp.float32)
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(af), axis=_scale_axes(a.ndim), keepdims=True),
+            1e-8)
+        q = jnp.clip(jnp.round(af / scale * 127.0), -127, 127).astype(jnp.int8)
+        return _QuantLeaf(q, scale, a.dtype)
+    raise ValueError(f"pool dtype must be one of {POOL_DTYPES}, got {dtype!r}")
+
+
+def dequantize_leaf(stored):
+    """Invert :func:`quantize_leaf` back to the original dtype.  Native
+    (unwrapped) leaves pass through untouched (no host/device migration);
+    host-resident quantized leaves dequantize in numpy (cheap elementwise,
+    no JAX dispatch), device-resident ones on device."""
+    if isinstance(stored, _QuantLeaf):
+        xp = np if isinstance(stored.q, np.ndarray) else jnp
+        if stored.scale is None:               # bf16 cast
+            return xp.asarray(stored.q).astype(stored.dtype)
+        return (xp.asarray(stored.q, np.float32)
+                * (xp.asarray(stored.scale) / 127.0)).astype(stored.dtype)
+    return stored
+
+
+def quantize_kv(kv, dtype: str):
+    """Quantize a KV pytree; returns (payload pytree, stored nbytes)."""
+    payload = jax.tree.map(lambda a: quantize_leaf(a, dtype), kv)
+    return payload, payload_bytes(payload)
+
+
+def quantized_nbytes(kv, dtype: str) -> int:
+    """Stored bytes :func:`quantize_kv` would produce, WITHOUT quantizing —
+    shape/dtype arithmetic only, so admission prechecks are free."""
+    total = 0
+    for a in jax.tree.leaves(kv):
+        n = int(np.prod(a.shape))
+        if dtype == "native":
+            total += n * jnp.dtype(a.dtype).itemsize
+        elif dtype == "bf16":
+            total += n * 2
+        elif dtype == "int8":
+            scale_shape = tuple(1 if i in _scale_axes(a.ndim) else s
+                                for i, s in enumerate(a.shape))
+            total += n + int(np.prod(scale_shape)) * 4
+        else:
+            raise ValueError(
+                f"pool dtype must be one of {POOL_DTYPES}, got {dtype!r}")
+    return total
+
+
+def dequantize_kv(payload):
+    """Dequantize a payload pytree back to original-dtype leaves."""
+    return jax.tree.map(
+        dequantize_leaf, payload,
+        is_leaf=lambda x: isinstance(x, _QuantLeaf))
+
+
+def _stored_arrays(payload):
+    out = []
+    for leaf in jax.tree.leaves(
+            payload, is_leaf=lambda x: isinstance(x, _QuantLeaf)):
+        if isinstance(leaf, _QuantLeaf):
+            out.append(leaf.q)
+            if leaf.scale is not None:
+                out.append(leaf.scale)
+        else:
+            out.append(leaf)
+    return out
+
+def payload_bytes(payload) -> int:
+    """Stored bytes of a (possibly quantized) payload pytree."""
+    return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+               for a in _stored_arrays(payload))
+
+
+def _device_move(a):
+    """Pin one array in the serving accelerator's memory.  On the CPU
+    backend host and device memory coincide, so plain numpy is the faster
+    representation of the same placement (no per-op dispatch overhead);
+    with a real accelerator attached this is the HBM residency that spares
+    the per-dispatch H2D copy."""
+    if jax.default_backend() == "cpu":
+        return np.asarray(a)
+    return jnp.asarray(a)
+
+
+def _place(payload, placement: str):
+    """Move every stored array to the tier's memory space."""
+    move = _device_move if placement == "device" else np.asarray
+    return jax.tree.map(
+        lambda s: _QuantLeaf(
+            move(s.q), None if s.scale is None else move(s.scale), s.dtype)
+        if isinstance(s, _QuantLeaf) else move(s),
+        payload, is_leaf=lambda x: isinstance(x, _QuantLeaf))
+
+
+# ---------------------------------------------------------------------------
 # history-KV pool (GR serving)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)           # identity semantics: tier members
 class _PoolEntry:
-    fingerprint: Hashable      # content hash of the history prefix
-    kv: object                 # HistoryKV pytree (or flattened leaves)
-    nbytes: int
+    fingerprint: Hashable          # content hash of the full history array
+    payload: object                # stored (possibly quantized) KV pytree
+    nbytes: int                    # stored bytes (quantized size)
+    hist_window: Optional[np.ndarray]   # model-window ids at encode time
+
+
+@dataclasses.dataclass
+class StaleBasis:
+    """What ``lookup`` hands back for a dropped stale entry so the engine
+    can extend the cached prefix instead of re-encoding from scratch."""
+
+    kv: object                     # dequantized K/V (extension basis)
+    hist_window: Optional[np.ndarray]  # window the basis encoded
 
 
 class HistoryKVPool:
-    """Per-user LRU pool of encoded history K/V.
+    """Byte-budgeted two-tier LRU pool of encoded history K/V (PDA v2).
 
-    ``get(key, fingerprint)`` returns the cached pytree and refreshes the
-    entry's recency, or None on miss.  A key hit whose fingerprint differs
-    (the user's history advanced since the encode) is *stale*: the entry is
-    dropped and the call counts as a miss, so serving re-encodes rather than
-    scoring against outdated state.  ``put`` inserts/overwrites and evicts
-    from the LRU end until at most ``slots`` entries remain.  All methods
-    are thread-safe — pipeline workers hit the pool concurrently.
-    """
+    See the module docstring for the full contract.  Quick API tour:
 
-    def __init__(self, slots: int):
-        if slots < 1:
+    ``lookup(key, fingerprint, want_basis=...)``
+        one counted probe: returns ``(kv, status, basis)`` with status
+        ``"hit"`` (kv is the dequantized entry, recency refreshed),
+        ``"stale"`` (entry dropped; ``basis`` carries its K/V + encoded
+        window when ``want_basis``) or ``"miss"``.  Stale and miss both
+        count as misses, so hit-rate math is unchanged from v1.
+    ``get(key, fingerprint)``
+        v1 sugar over ``lookup``: the kv on hit, else None.
+    ``peek(key, fingerprint)``
+        uncounted re-check for single-flight leader election.
+    ``put(key, fingerprint, kv, hist_window=None)``
+        quantize + admit, then evict LRU-first until both the ``slots`` and
+        ``budget_bytes`` limits hold (evictions demote to the spill tier
+        when enabled); oversized entries are rejected, never admitted.
+    ``count_extension()``
+        engine callback: one stale hit was served by incremental suffix
+        extension rather than a full re-encode (``extensions`` stat).
+
+    All methods are thread-safe — pipeline workers hit the pool
+    concurrently."""
+
+    def __init__(self, slots: Optional[int] = 256, *,
+                 budget_bytes: Optional[int] = None,
+                 dtype: str = "native", placement: str = "device",
+                 spill_bytes: int = 0):
+        if slots is None and budget_bytes is None:
+            raise ValueError("pool needs slots and/or budget_bytes")
+        if slots is not None and slots < 1:
             raise ValueError(f"pool needs >= 1 slot, got {slots}")
+        if budget_bytes is not None and budget_bytes < 1:
+            raise ValueError(f"budget_bytes must be >= 1, got {budget_bytes}")
+        if dtype not in POOL_DTYPES:
+            raise ValueError(f"dtype must be one of {POOL_DTYPES}, got {dtype!r}")
+        if placement not in ("device", "host"):
+            raise ValueError(f"placement must be device|host, got {placement!r}")
         self.slots = slots
+        self.budget_bytes = budget_bytes
+        self.dtype = dtype
+        self.placement = placement
+        self.spill_budget = int(spill_bytes)
         self._entries: "collections.OrderedDict[Hashable, _PoolEntry]" = \
+            collections.OrderedDict()
+        self._spill: "collections.OrderedDict[Hashable, _PoolEntry]" = \
             collections.OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.stale = 0
         self.evictions = 0
+        self.rejects = 0
+        self.extensions = 0
+        self.spill_hits = 0
         self.bytes_used = 0
+        self.spill_bytes_used = 0
 
     @staticmethod
     def entry_bytes(kv) -> int:
-        return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
-                   for a in jax.tree.leaves(kv))
+        """Unquantized (compute-dtype) bytes of a KV pytree."""
+        return payload_bytes(kv)
 
-    def get(self, key: Hashable, fingerprint: Hashable):
+    # ---- lookup side ----
+    def _load(self, e: _PoolEntry):
+        kv = dequantize_kv(e.payload)
+        if self.placement == "host":
+            kv = jax.tree.map(np.asarray, kv)
+        return kv
+
+    def lookup(self, key: Hashable, fingerprint: Hashable, *,
+               want_basis: bool = False):
+        """One counted probe; see the class docstring.  Checks the primary
+        tier, then the spill tier (promoting on a spill hit).  Counter
+        bookkeeping happens under the lock; dequantization runs after
+        releasing it (payloads are immutable once stored), so concurrent
+        workers never serialize on the dequant math."""
         with self._lock:
             e = self._entries.get(key)
-            if e is None:
-                self.misses += 1
-                return None
-            if e.fingerprint != fingerprint:
-                del self._entries[key]          # stale: history advanced
-                self.bytes_used -= e.nbytes
-                self.stale += 1
-                self.misses += 1
-                return None
-            self._entries.move_to_end(key)      # refresh recency
-            self.hits += 1
-            return e.kv
+            if e is not None:
+                if e.fingerprint == fingerprint:
+                    self._entries.move_to_end(key)
+                    self.hits += 1
+                    status = "hit"
+                else:
+                    del self._entries[key]      # stale: history advanced
+                    self.bytes_used -= e.nbytes
+                    self.stale += 1
+                    self.misses += 1
+                    status = "stale"
+            else:
+                e = self._spill.pop(key, None)
+                if e is not None:
+                    self.spill_bytes_used -= e.nbytes
+                    if e.fingerprint == fingerprint:
+                        self.hits += 1
+                        self.spill_hits += 1
+                        status = "promote"
+                    else:
+                        self.stale += 1
+                        self.misses += 1
+                        status = "stale"
+                else:
+                    self.misses += 1
+                    return None, "miss", None
+        if status == "promote":
+            # re-place toward the primary tier OUTSIDE the lock (a
+            # paper-scale promotion is a multi-MB H2D copy), then admit.
+            # While in flight the entry sits in neither tier; a concurrent
+            # same-key miss may encode and put() meanwhile (promotions are
+            # not single-flighted), so only admit if the key is still
+            # absent — the racing entry is at least as fresh, and this
+            # request is still correctly served from the promoted copy.
+            e.payload = _place(e.payload, self.placement)
+            demoted: List[_PoolEntry] = []
+            with self._lock:
+                if key not in self._entries:
+                    demoted = self._admit(key, e)
+            self._finish_demotions(demoted)
+            return self._load(e), "hit", None
+        if status == "hit":
+            return self._load(e), "hit", None
+        basis = StaleBasis(self._load(e), e.hist_window) \
+            if want_basis else None
+        return None, "stale", basis
+
+    def get(self, key: Hashable, fingerprint: Hashable):
+        """v1 surface: the cached pytree on a fresh hit, else None."""
+        kv, _, _ = self.lookup(key, fingerprint)
+        return kv
+
+    def contains(self, key: Hashable, fingerprint: Hashable) -> bool:
+        """Uncounted O(1) existence probe (either tier, no recency touch,
+        no dequantization) — the engine's admit-time prefetch short-circuit
+        only needs to know whether a fresh entry exists."""
+        with self._lock:
+            e = self._entries.get(key) or self._spill.get(key)
+            return e is not None and e.fingerprint == fingerprint
 
     def peek(self, key: Hashable, fingerprint: Hashable):
         """Like ``get`` but without touching hit/miss/stale counters (and
@@ -132,26 +407,94 @@ class HistoryKVPool:
         so each request still counts exactly one lookup."""
         with self._lock:
             e = self._entries.get(key)
-            if e is None or e.fingerprint != fingerprint:
-                return None
-            self._entries.move_to_end(key)
-            return e.kv
+            if e is not None and e.fingerprint == fingerprint:
+                self._entries.move_to_end(key)
+            else:
+                e = self._spill.get(key)
+                if e is None or e.fingerprint != fingerprint:
+                    return None
+        return self._load(e)
 
-    def put(self, key: Hashable, fingerprint: Hashable, kv) -> None:
-        nbytes = self.entry_bytes(kv)
+    # ---- admission side ----
+    def _admit(self, key: Hashable, entry: _PoolEntry) -> List[_PoolEntry]:
+        """Insert into the primary tier and evict until limits hold.
+        Caller holds the lock.  Returns the entries demoted to the spill
+        tier — their payloads still sit in the primary tier's memory space;
+        the caller moves them host-side AFTER releasing the lock (a
+        paper-scale demotion is a multi-MB D2H copy, and lookups must not
+        serialize behind it) via :meth:`_finish_demotions`."""
+        demoted: List[_PoolEntry] = []
+        old = self._entries.pop(key, None)
+        if old is not None:                 # replace, don't leak its bytes
+            self.bytes_used -= old.nbytes
+        self._entries[key] = entry
+        self.bytes_used += entry.nbytes
+        while (self.slots is not None and len(self._entries) > self.slots) \
+                or (self.budget_bytes is not None
+                    and self.bytes_used > self.budget_bytes):
+            k, ev = self._entries.popitem(last=False)   # LRU end
+            self.bytes_used -= ev.nbytes
+            self.evictions += 1
+            if self.spill_budget > 0:
+                stale_sp = self._spill.pop(k, None)   # defensive: keep the
+                if stale_sp is not None:              # byte accounting true
+                    self.spill_bytes_used -= stale_sp.nbytes
+                self._spill[k] = ev
+                self.spill_bytes_used += ev.nbytes
+                demoted.append(ev)
+        while self.spill_bytes_used > self.spill_budget and self._spill:
+            _, ev = self._spill.popitem(last=False)
+            self.spill_bytes_used -= ev.nbytes
+            if ev in demoted:
+                demoted.remove(ev)          # evicted again before placement
+        return demoted
+
+    def _finish_demotions(self, demoted: List[_PoolEntry]):
+        """Host-place payloads of freshly demoted entries, outside the lock.
+        The conversion is only committed if the entry still sits in the
+        spill tier — a concurrent promotion (which re-places the payload
+        toward the primary tier) wins the race either way, since dispatch
+        consumes host and device arrays alike."""
+        for ev in demoted:
+            host_payload = _place(ev.payload, "host")
+            with self._lock:
+                if any(e is ev for e in self._spill.values()):
+                    ev.payload = host_payload
+
+    def put(self, key: Hashable, fingerprint: Hashable, kv,
+            hist_window: Optional[np.ndarray] = None) -> bool:
+        """Quantize + admit; returns False when the entry was rejected for
+        exceeding ``budget_bytes`` on its own."""
+        # size precheck BEFORE quantizing/placing: a rejected entry must
+        # not pay the (multi-MB at paper scale) quantize + transfer cost
+        nbytes = quantized_nbytes(kv, self.dtype)
+        if self.budget_bytes is not None and nbytes > self.budget_bytes:
+            with self._lock:
+                self.rejects += 1
+            return False
+        payload, nbytes = quantize_kv(kv, self.dtype)
+        payload = _place(payload, self.placement)
+        if hist_window is not None:
+            hist_window = np.array(hist_window)     # defensive copy
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:
                 self.bytes_used -= old.nbytes
-            self._entries[key] = _PoolEntry(fingerprint, kv, nbytes)
-            self.bytes_used += nbytes
-            while len(self._entries) > self.slots:
-                _, ev = self._entries.popitem(last=False)   # LRU end
-                self.bytes_used -= ev.nbytes
-                self.evictions += 1
+            sp = self._spill.pop(key, None)
+            if sp is not None:
+                self.spill_bytes_used -= sp.nbytes
+            demoted = self._admit(key, _PoolEntry(fingerprint, payload,
+                                                  nbytes, hist_window))
+        self._finish_demotions(demoted)
+        return True
 
+    def count_extension(self):
+        with self._lock:
+            self.extensions += 1
+
+    # ---- introspection / lifecycle ----
     def keys(self) -> List[Hashable]:
-        """LRU -> MRU order (for tests/introspection)."""
+        """Primary-tier keys, LRU -> MRU order (for tests/introspection)."""
         with self._lock:
             return list(self._entries)
 
@@ -163,18 +506,27 @@ class HistoryKVPool:
         """Drop every entry (engine shutdown); counters survive for metrics."""
         with self._lock:
             self._entries.clear()
+            self._spill.clear()
             self.bytes_used = 0
+            self.spill_bytes_used = 0
 
     def stats(self) -> Dict[str, float]:
         with self._lock:
             total = self.hits + self.misses
             return {
                 "entries": len(self._entries),
-                "slots": self.slots,
+                "slots": self.slots if self.slots is not None else -1,
+                "budget_bytes": (self.budget_bytes
+                                 if self.budget_bytes is not None else -1),
                 "hits": self.hits,
                 "misses": self.misses,
                 "stale": self.stale,
                 "evictions": self.evictions,
+                "rejects": self.rejects,
+                "extensions": self.extensions,
                 "hit_rate": self.hits / total if total else 0.0,
                 "bytes": self.bytes_used,
+                "spill_entries": len(self._spill),
+                "spill_bytes": self.spill_bytes_used,
+                "spill_hits": self.spill_hits,
             }
