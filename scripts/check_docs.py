@@ -54,9 +54,11 @@ def check(doc: str) -> list:
             continue                      # glob pattern, not a single file
         # try: relative to the doc, repo root, src/ and src/repro/ (the
         # narrative docs use `serving/kv_cache.py`-style module shorthand),
-        # and launch/ for bare entrypoint names
+        # kernels/ for the kernel packages (`fused_score/kernel.py`), and
+        # launch/ for bare entrypoint names
         roots = (base, ROOT, os.path.join(ROOT, "src"),
                  os.path.join(ROOT, "src", "repro"),
+                 os.path.join(ROOT, "src", "repro", "kernels"),
                  os.path.join(ROOT, "src", "repro", "launch"))
         if not any(os.path.exists(os.path.normpath(os.path.join(r, ref)))
                    for r in roots):

@@ -22,4 +22,13 @@ python -m repro.launch.serve --engine flame --history-cache \
     --pool-slots 64 --users 4 --requests 12 --history 64 \
     --buckets 16,8 --counts 8,16 --d-model 64
 
+echo "== smoke: FKE fused serving (impl=fused, int8 pool, drift cap) =="
+python -m repro.launch.serve --engine flame --impl fused --history-cache \
+    --incremental-history --extend-refresh-limit 4 --pool-dtype int8 \
+    --pool-slots 64 --users 4 --requests 12 --history 64 \
+    --buckets 16,8 --counts 8,16 --d-model 64
+
+echo "== bench gate: FKE >= 1.3x chunked on the repeat-user profile =="
+python -m benchmarks.bench_serving --profile fke
+
 echo "CI OK"

@@ -129,6 +129,20 @@ def _fuse_and_head(params, h, cfg):
     return logits
 
 
+def _layer_tail(p, x, o, cfg, impl: str):
+    """Everything after attention in one layer step: out-projection +
+    residual + norm + FFN + residual.  ``impl="fused"`` routes the FKE
+    epilogue (reuses the ``kernels/fused_ffn`` Pallas kernel on TPU; the
+    identical framework composition elsewhere)."""
+    if impl == "fused":
+        from repro.kernels.fused_score import ops as fs_ops
+        return fs_ops.block_epilogue(x, o, p["attn"], p["norm2"],
+                                     p["ffn"], cfg)
+    x = x + A.project_out(p["attn"], o)
+    h2 = L.apply_norm(cfg, p["norm2"], x)
+    return x + ffn_apply(p["ffn"], h2, cfg, impl=impl)
+
+
 def _block_forward(bp, x, n_history: int, cfg, impl: str):
     """x [B,S,d] through one stacked transformer block under the SUMI mask.
 
@@ -145,9 +159,7 @@ def _block_forward(bp, x, n_history: int, cfg, impl: str):
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
         o = sumi.sumi_attention(q, k, v, n_history, impl=impl,
                                 temperature=_tau(p))
-        x = x + A.project_out(p["attn"], o)
-        h2 = L.apply_norm(cfg, p["norm2"], x)
-        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
+        return _layer_tail(p, x, o, cfg, impl), None
 
     from repro.models.transformer import scan_or_unroll
     x, _ = scan_or_unroll(layer, x, bp)
@@ -168,36 +180,48 @@ def _block_encode_kv(bp, x, cfg, impl: str):
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
         # n_history == s: the SUMI mask degenerates to causal here
         o = sumi.sumi_attention(q, k, v, s, impl=impl, temperature=_tau(p))
-        x = x + A.project_out(p["attn"], o)
-        h2 = L.apply_norm(cfg, p["norm2"], x)
-        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), (k, v)
+        return _layer_tail(p, x, o, cfg, impl), (k, v)
 
     from repro.models.transformer import scan_or_unroll
     _, kv = scan_or_unroll(layer, x, bp)
     return kv                                  # (k, v), each [L,B,s,Hkv,D]
 
 
-def _block_score(bp, cand, k_hist, v_hist, cfg, impl: str):
+def _block_score(bp, cand, k_hist, v_hist, cfg, impl: str, *,
+                 k_scale=None, v_scale=None, row_index=None):
     """Candidate-only pass for one block against cached history K/V.
 
-    ``cand`` [B,M,d]; ``k_hist``/``v_hist`` [L,B,n_hist,Hkv,D].  Candidates
-    all sit at RoPE position ``n_hist`` exactly as in the monolithic pass."""
+    ``cand`` [B,M,d]; ``k_hist``/``v_hist`` [L,U,n_hist,Hkv,D].  Candidates
+    all sit at RoPE position ``n_hist`` exactly as in the monolithic pass.
+
+    FKE operands: the history K/V may arrive in the pool's stored
+    precision with per-(layer, row, head) ``k_scale``/``v_scale``
+    ([L,U,1,Hkv,1]) and a ``row_index`` [B] mapping batch rows onto the
+    ``U`` unique pool rows (KV-row dedup).  ``impl="fused"`` consumes them
+    in-kernel; other impls materialize the dequantized gather first (see
+    ``sumi.cached_candidate_attention``)."""
     b, m, d = cand.shape
     n_hist = k_hist.shape[2]
     positions = jnp.broadcast_to(jnp.asarray(n_hist), (b, m))
+    has_scale = k_scale is not None
 
     def layer(x, inp):
-        p, kh, vh = inp
+        if has_scale:
+            p, kh, vh, khs, vhs = inp
+        else:
+            (p, kh, vh), khs, vhs = inp, None, None
         h = L.apply_norm(cfg, p["norm1"], x)
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
-        o = sumi.cached_candidate_attention(q, kh, vh, k, v, impl=impl,
-                                            temperature=_tau(p))
-        x = x + A.project_out(p["attn"], o)
-        h2 = L.apply_norm(cfg, p["norm2"], x)
-        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), None
+        o = sumi.cached_candidate_attention(
+            q, kh, vh, k, v, impl=impl, temperature=_tau(p),
+            k_scale=khs, v_scale=vhs, row_index=row_index)
+        return _layer_tail(p, x, o, cfg, impl), None
 
     from repro.models.transformer import scan_or_unroll
-    x, _ = scan_or_unroll(layer, cand, (bp, k_hist, v_hist))
+    inp = (bp, k_hist, v_hist)
+    if has_scale:
+        inp = inp + (k_scale, v_scale)
+    x, _ = scan_or_unroll(layer, cand, inp)
     return x
 
 
@@ -240,9 +264,7 @@ def _block_extend_kv(bp, x_suf, k_pref, v_pref, cfg, impl: str):
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
         o = sumi.extend_attention(q, kh, vh, k, v, impl=impl,
                                   temperature=_tau(p))
-        x = x + A.project_out(p["attn"], o)
-        h2 = L.apply_norm(cfg, p["norm2"], x)
-        return x + ffn_apply(p["ffn"], h2, cfg, impl=impl), (k, v)
+        return _layer_tail(p, x, o, cfg, impl), (k, v)
 
     from repro.models.transformer import scan_or_unroll
     _, kv = scan_or_unroll(layer, x_suf, (bp, k_pref, v_pref))
@@ -286,21 +308,39 @@ def extend_history(params, history_kv, batch: Dict, cfg: ModelConfig, *,
     return kv
 
 
+def _split_stored(entry):
+    """A HistoryKV leaf is either a plain [B,L,S,Hkv,D] array or a
+    ``(values, scale)`` raw pool view (``serving/kv_cache.py::
+    raw_kv_view``); returns (values, scale-or-None) in [L,B,...] layout."""
+    values, scale = entry if isinstance(entry, tuple) else (entry, None)
+    values = jnp.moveaxis(values, 1, 0)
+    if scale is not None:
+        scale = jnp.moveaxis(scale, 1, 0)
+    return values, scale
+
+
 def score_candidates(params, history_kv, candidates, cfg: ModelConfig, *,
-                     impl: str = "reference"):
+                     impl: str = "reference", row_index=None):
     """Candidate-only forward against cached history K/V.
 
-    ``candidates`` [B,M] ids; ``history_kv`` from :func:`encode_history`.
-    Returns task logits [B,M,T] — numerically identical to the candidate
-    slice of :func:`climber_forward` (bitwise under the reference impl)."""
+    ``candidates`` [B,M] ids; ``history_kv`` from :func:`encode_history` —
+    either dequantized arrays or raw pool views (``(values, scale)``
+    tuples in the pool's stored precision), with an optional ``row_index``
+    [B] mapping batch rows onto unique pool rows (KV-row dedup).  Returns
+    task logits [B,M,T] — numerically identical to the candidate slice of
+    :func:`climber_forward` (bitwise under the reference impl on
+    dequantized operands)."""
     cand = jnp.take(params["embed"]["embedding"], candidates, axis=0)
+    if row_index is not None:
+        row_index = jnp.asarray(row_index, jnp.int32)
     block_outs = []
     for i in range(cfg.climber.num_blocks):
         kv = history_kv[f"b{i}"]
+        kh, khs = _split_stored(kv["k"])
+        vh, vhs = _split_stored(kv["v"])
         block_outs.append(_block_score(
-            params["blocks"][f"b{i}"], cand,
-            jnp.moveaxis(kv["k"], 1, 0), jnp.moveaxis(kv["v"], 1, 0),
-            cfg, impl))
+            params["blocks"][f"b{i}"], cand, kh, vh, cfg, impl,
+            k_scale=khs, v_scale=vhs, row_index=row_index))
     h = jnp.stack(block_outs, axis=2)                   # [B,M,Nb,d]
     return _fuse_and_head(params, h, cfg)
 
@@ -353,11 +393,15 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
         return encode_history(params, batch, cfg, impl=impl)
 
     def score_candidates_fn(params, history_kv, candidates,
-                            impl: str = "reference"):
+                            impl: str = "reference", row_index=None):
         """Serving entry: candidate-only probabilities [B,M,T] against a
-        cached HistoryKV — prefill == score_candidates(encode_history)."""
+        cached HistoryKV — prefill == score_candidates(encode_history).
+        ``history_kv`` may be a raw pool view (stored-precision values +
+        scales) and ``row_index`` a [B] KV-row dedup gather; see
+        :func:`score_candidates`."""
         return jax.nn.sigmoid(
-            score_candidates(params, history_kv, candidates, cfg, impl=impl))
+            score_candidates(params, history_kv, candidates, cfg, impl=impl,
+                             row_index=row_index))
 
     def extend_history_fn(params, history_kv, batch, *, prefix_len: int,
                           impl: str = "reference"):

@@ -263,8 +263,11 @@ class CoalescingOrchestrator:
       would miss them) are stacked **once**, and the executor receives an
       extra ``[B] int32`` row-index argument (inserted after the deduped
       args) to gather each row's view.  The executor must be built for
-      that signature.  Saved restacks are reported as
-      ``dedup_rows_saved``."""
+      that signature; how it consumes the index is its business — the
+      framework executors materialize ``kv[idx]`` inside the jit, while
+      the FKE (``impl="fused"``) executors forward the index into the
+      fused kernel's KV block reads, making the gather free.  Saved
+      restacks are reported as ``dedup_rows_saved``."""
 
     _DEFAULT_KIND = "default"
 

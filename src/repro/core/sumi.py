@@ -35,8 +35,18 @@ def sumi_attention(q, k, v, n_history: int, *, impl: str = "reference",
     return A.attention(q, k, v, "sumi", impl=impl, n_history=n_history)
 
 
+def _dequant_gather(k, v, k_scale, v_scale, row_index, dtype):
+    """Materialize pool-stored operands for the framework (non-fused)
+    impls: dequantize + per-row gather — the exact sequence the FKE
+    oracle defines (one implementation, so the framework impls can never
+    drift from what the fused paths are gated against)."""
+    from repro.kernels.fused_score.ref import _prep
+    return _prep(k, v, k_scale, v_scale, row_index, dtype)
+
+
 def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
-                               impl: str = "reference", temperature=None):
+                               impl: str = "reference", temperature=None,
+                               k_scale=None, v_scale=None, row_index=None):
     """Candidate-only SUMI attention against cached per-layer history K/V.
 
     The SUMI mask makes the history prefix self-contained (history rows are
@@ -48,9 +58,25 @@ def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
     ``n_history + i`` (its own key), which every impl honors via
     ``q_offset``.  Output is bit-for-bit the candidate slice of the
     monolithic SUMI pass under the reference impl (allclose for the
-    block-reordered chunked/pallas impls)."""
+    block-reordered chunked/pallas/fused impls).
+
+    FKE operand extensions: ``k_hist``/``v_hist`` may arrive in the
+    history pool's *stored* precision (int8/bf16) with per-(row, head)
+    ``k_scale``/``v_scale``, and ``row_index`` [B] selects each batch
+    row's pool row (the DSO's KV-row dedup).  ``impl="fused"`` consumes
+    them in-kernel (no dequant / gather / concat materialization); every
+    other impl materializes the framework operands first."""
     if temperature is not None:
         q = q / jnp.asarray(temperature, q.dtype)
+    if impl == "fused":
+        from repro.kernels.fused_score import ops as fs_ops
+        return fs_ops.fused_cached_attention(
+            q, k_hist, v_hist, k_cand, v_cand, k_scale=k_scale,
+            v_scale=v_scale, row_index=row_index)
+    if k_scale is not None or v_scale is not None or row_index is not None \
+            or k_hist.dtype != q.dtype:
+        k_hist, v_hist = _dequant_gather(k_hist, v_hist, k_scale, v_scale,
+                                         row_index, q.dtype)
     n_history = k_hist.shape[1]
     k = jnp.concatenate([k_hist, k_cand], axis=1)
     v = jnp.concatenate([v_hist, v_cand], axis=1)
@@ -59,7 +85,8 @@ def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
 
 
 def extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
-                     impl: str = "reference", temperature=None):
+                     impl: str = "reference", temperature=None,
+                     k_scale=None, v_scale=None, row_index=None):
     """Causal suffix attention against cached prefix K/V (incremental
     history extension, the MTServe "extend a cached prefix" step).
 
@@ -70,9 +97,23 @@ def extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
     ``P + i`` and attends causally over the concatenated KV axis — exactly
     the rows a full re-encode would attend to, so the output is bit-for-bit
     the suffix slice of a full history encode under the reference impl
-    (chunked routes there at serving scales)."""
+    (chunked routes there at serving scales).  The FKE operand extensions
+    (``k_scale``/``v_scale``/``row_index``) follow
+    :func:`cached_candidate_attention`; a zero-length prefix degenerates
+    to plain causal attention and routes to the framework impls."""
     if temperature is not None:
         q = q / jnp.asarray(temperature, q.dtype)
+    if impl == "fused" and k_prefix.shape[1] > 0:
+        from repro.kernels.fused_score import ops as fs_ops
+        return fs_ops.fused_extend_attention(
+            q, k_prefix, v_prefix, k_suffix, v_suffix, k_scale=k_scale,
+            v_scale=v_scale, row_index=row_index)
+    if k_scale is not None or v_scale is not None or row_index is not None \
+            or k_prefix.dtype != q.dtype:
+        k_prefix, v_prefix = _dequant_gather(k_prefix, v_prefix, k_scale,
+                                             v_scale, row_index, q.dtype)
+    if impl == "fused":
+        impl = "chunked"                     # empty prefix: plain causal
     p0 = k_prefix.shape[1]
     k = jnp.concatenate([k_prefix, k_suffix], axis=1)
     v = jnp.concatenate([v_prefix, v_suffix], axis=1)

@@ -9,7 +9,9 @@ kernel in its own subpackage with the framework triple:
   ref.py     pure-jnp oracle used by the allclose test sweeps
 
 Kernels: flash_attention (causal/sliding/full/SUMI masks with block skipping),
-fused_ffn (norm + W1(+gate) + act + W2, f32 VMEM accumulator), rwkv6_scan
+fused_ffn (norm + W1(+gate) + act + W2, f32 VMEM accumulator), fused_score
+(the FKE cached-candidate scoring engine: two-segment SUMI/extend attention
+reading quantized pool KV and the dedup row index in-kernel), rwkv6_scan
 (chunked data-dependent-decay linear attention for the attention-free arch).
 
 On this CPU container kernels execute under ``interpret=True``; on TPU the

@@ -1,0 +1,3 @@
+from repro.kernels.fused_score.ops import (block_epilogue,  # noqa: F401
+                                           fused_cached_attention,
+                                           fused_extend_attention)

@@ -1,0 +1,186 @@
+"""Fused candidate-scoring attention — Pallas TPU kernel (FKE core).
+
+One kernel computes the serving hot path that the framework previously
+composed from four dispatches (host dequantize → ``kv[idx]`` row gather →
+``concat(hist, cand)`` → masked attention):
+
+  * **two-segment online softmax** — the query block streams over the
+    pooled *history* KV blocks and then its own *candidate* (or suffix)
+    KV block; the concatenation never materializes;
+  * **in-kernel dequantization** — history K/V arrive in the pool's
+    stored precision (int8 / bf16 / native) plus a per-(row, head) absmax
+    scale; tiles are cast on the MXU input path and the scale is folded
+    into the score / accumulator multiplies, so the dequantized history
+    never touches HBM;
+  * **index-folded dedup gather** — a scalar-prefetched ``row_index [B]``
+    drives the KV BlockSpec index map: batch row ``b`` reads the blocks of
+    pool row ``row_index[b]`` directly, making the DSO's KV-row dedup free
+    on every backend (no gathered copy, just redirected DMAs).
+
+Two masking modes share the machinery:
+
+  ``cached``   SUMI candidate scoring: every query row sees the whole
+               history plus exactly its own key (diagonal self block);
+               ``steps = hist_steps + 1``.
+  ``extend``   incremental history extension: suffix queries at absolute
+               position ``prefix_len + i`` see the whole prefix plus the
+               causal triangle of the suffix; ``steps = hist_steps + nq``
+               with above-diagonal suffix blocks skipped via ``pl.when``.
+
+The per-(row, head) scales ride in scalar-prefetch (SMEM) next to the
+``row_index``; accumulators (m, l, acc) live in VMEM scratch across the
+sequential innermost grid axis, exactly like ``kernels/flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fused_kernel(idx_ref, ks_ref, vs_ref, q_ref, kh_ref, vh_ref,
+                  kc_ref, vc_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  mode: str, h: int, g: int, bq: int, bk: int, sq: int,
+                  s_hist: int, hist_steps: int, steps: int):
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    row = idx_ref[bh // h]                   # pool row of this batch row
+    kvh = (bh % h) // g                      # kv head of this q head
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _online_update(s, msk, v, v_scale):
+        s = jnp.where(msk, s, NEG_INF)
+        m_prev = m_ref[...]                                  # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        if v_scale is not None:
+            pv = pv * v_scale
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj < hist_steps)
+    def _history_step():
+        # pooled-history block: dequantize the tile in registers; the
+        # per-(row, head) scale is constant over (S, D), so it folds into
+        # the score and accumulator multiplies
+        q = q_ref[0, 0].astype(jnp.float32)                  # [bq, D]
+        k = kh_ref[0, 0].astype(jnp.float32)                 # [bk, D]
+        v = vh_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s * ks_ref[row, kvh]
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        _online_update(s, (rows < sq) & (cols < s_hist), v, vs_ref[row, kvh])
+
+    if mode == "cached":
+        self_guard = kj == hist_steps
+    else:                                    # extend: causal suffix blocks
+        self_guard = (kj >= hist_steps) & (kj - hist_steps <= qi)
+
+    @pl.when(self_guard)
+    def _self_step():
+        # fresh candidate / suffix block, full precision, no scale
+        cj = qi if mode == "cached" else kj - hist_steps
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = kc_ref[0, 0].astype(jnp.float32)                 # [bq, D]
+        v = vc_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 0)
+        cols = cj * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 1)
+        ok = (rows < sq) & (cols < sq)
+        if mode == "cached":
+            msk = ok & (rows == cols)        # self key only (SUMI)
+        else:
+            msk = ok & (cols <= rows)        # causal within the suffix
+        _online_update(s, msk, v, None)
+
+    @pl.when(kj == steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
+                       k_cand, v_cand, *, mode: str, sq: int, s_hist: int,
+                       bq: int = 128, bk: int = 128,
+                       interpret: bool = True):
+    """q [B,H,Mp,D] (pre-scaled); k_hist/v_hist [U,Hkv,Sp,D] stored dtype;
+    k_scale/v_scale [U,Hkv] f32 multipliers (1.0 for unquantized);
+    k_cand/v_cand [B,Hkv,Mp,D]; row_index [B] int32 pool-row gather.
+
+    ``sq``/``s_hist`` are the unpadded query/history lengths; Mp/Sp/D are
+    pre-padded to block and 128-lane multiples by ops.py (``s_hist >= 1``
+    — an empty history segment is the caller's degenerate case).
+    """
+    if mode not in ("cached", "extend"):
+        raise ValueError(mode)
+    b, h, mp, d = q.shape
+    hkv = k_hist.shape[1]
+    g = h // hkv
+    sp = k_hist.shape[2]
+    nq = mp // bq
+    hist_steps = sp // bk
+    self_steps = 1 if mode == "cached" else nq
+    steps = hist_steps + self_steps
+
+    kernel = functools.partial(
+        _fused_kernel, mode=mode, h=h, g=g, bq=bq, bk=bk, sq=sq,
+        s_hist=s_hist, hist_steps=hist_steps, steps=steps)
+
+    grid = (b * h, nq, steps)
+
+    def q_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
+        return (bh // h, bh % h, qi, 0)
+
+    def kh_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
+        # the dedup gather, folded into the block read: batch row b pulls
+        # the blocks of pool row idx_ref[b] (clamped for self steps, whose
+        # loaded block is unused)
+        return (idx_ref[bh // h], (bh % h) // g,
+                jnp.minimum(kj, hist_steps - 1), 0)
+
+    def kc_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
+        if mode == "cached":
+            cj = qi
+        else:
+            cj = jnp.clip(kj - hist_steps, 0, nq - 1)
+        return (bh // h, (bh % h) // g, cj, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,               # row_index, k_scale, v_scale
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, bk, d), kh_map),
+            pl.BlockSpec((1, 1, bk, d), kh_map),
+            pl.BlockSpec((1, 1, bq, d), kc_map),
+            pl.BlockSpec((1, 1, bq, d), kc_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),    # l (running denom)
+            pltpu.VMEM((bq, d), jnp.float32),    # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(row_index, k_scale, v_scale, q, k_hist, v_hist, k_cand, v_cand)

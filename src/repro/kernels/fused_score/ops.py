@@ -1,0 +1,255 @@
+"""Public wrappers for the fused candidate-scoring engine (FKE).
+
+Entry points (model layout, [B,S,H,D]):
+
+  ``fused_cached_attention``  candidate-only SUMI scoring against pooled
+                              history K/V (quantized operands + dedup
+                              ``row_index`` welcome)
+  ``fused_extend_attention``  causal suffix extension against pooled
+                              prefix K/V
+  ``block_epilogue``          out-projection + residual + norm + FFN for
+                              one transformer-block layer step, reusing
+                              ``kernels/fused_ffn`` on TPU
+
+Each attention op has two execution paths behind one signature:
+
+  ``path="kernel"``  the Pallas kernel (``kernel.py``): real TPU target,
+                     interpret-mode on CPU for the parity suite;
+  ``path="jnp"``     an XLA-fused two-segment formulation of the *same*
+                     restructured computation — no ``concat(hist, cand)``
+                     materialization, no dense SUMI mask (the history
+                     segment is fully visible and the self segment is the
+                     diagonal, so masking disappears algebraically), the
+                     dequant scale folded into the score/accumulator
+                     multiplies, and the dedup gather applied to the
+                     *stored* (int8/bf16) values rather than dequantized
+                     f32 rows.  This is what makes ``impl="fused"`` a real
+                     speedup on the CPU backend, where interpret-mode
+                     Pallas would be pure overhead;
+  ``path="auto"``    kernel on TPU, jnp elsewhere.
+
+Both paths are gated against ``ref.py`` (the dequantize → gather → concat
+→ reference-attention oracle) in ``tests/test_fke.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.fused_score.kernel import fused_score_kernel
+from repro.kernels.fused_score.ref import dequantize_values
+
+
+def _auto_path() -> str:
+    return "kernel" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _norm_scale(scale, u: int, hkv: int):
+    """Pool scales arrive [U,1,Hkv,1] (per-layer slice of the per-(layer,
+    head) absmax); normalize to [U,Hkv] with the int8 /127 folded in."""
+    if scale is None:
+        return None
+    return (jnp.asarray(scale, jnp.float32) / 127.0).reshape(u, hkv)
+
+
+# ---------------------------------------------------------------------------
+# fused jnp fast path
+# ---------------------------------------------------------------------------
+
+def _segment_scores(qf, k_seg, scale):
+    """qf [B,M,Hkv,g,D] (f32, pre-scaled) x k_seg [B,S,Hkv,D] (stored
+    dtype) -> scores [B,Hkv,g,M,S] with the dequant scale folded in."""
+    s = jnp.einsum("bmhgd,bshd->bhgms", qf, k_seg.astype(jnp.float32))
+    if scale is not None:
+        s = s * scale[:, :, None, None, None]        # [B,Hkv] broadcast
+    return s
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
+               row_index, mode: str):
+    """Two-segment online-merged attention, no concat / no dense mask.
+
+    ``cached``: history segment fully visible, self segment = one key per
+    query (an O(M·D) einsum instead of the O(M²·D) masked block).
+    ``extend``: prefix segment fully visible, suffix segment causal.
+    """
+    b, m, h, d = q.shape
+    hkv = k_cand.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d) / np.sqrt(d)
+    if row_index is not None:
+        # the dedup gather runs on the STORED values (int8: 4x fewer
+        # bytes than the dequantized rows the framework path gathered)
+        k_hist = jnp.take(k_hist, row_index, axis=0)
+        v_hist = jnp.take(v_hist, row_index, axis=0)
+        if k_scale is not None:
+            k_scale = jnp.take(k_scale, row_index, axis=0)
+        if v_scale is not None:
+            v_scale = jnp.take(v_scale, row_index, axis=0)
+    s_hist = _segment_scores(qf, k_hist, k_scale)    # [b,hkv,g,m,S]
+
+    if mode == "cached":
+        # self segment: query i sees exactly key i — the diagonal einsum
+        s_self = jnp.einsum("bmhgd,bmhd->bhgm", qf,
+                            k_cand.astype(jnp.float32))
+        m_all = jnp.maximum(s_hist.max(axis=-1), s_self)
+        p_hist = jnp.exp(s_hist - m_all[..., None])
+        p_self = jnp.exp(s_self - m_all)
+        l = p_hist.sum(axis=-1) + p_self
+        o = jnp.einsum("bhgms,bshd->bmhgd", p_hist,
+                       v_hist.astype(jnp.float32))
+        if v_scale is not None:
+            o = o * v_scale[:, None, :, None, None]
+        o = o + jnp.einsum("bhgm,bmhd->bmhgd", p_self,
+                           v_cand.astype(jnp.float32))
+    else:                                            # extend (causal)
+        s_suf = jnp.einsum("bmhgd,bshd->bhgms", qf,
+                           k_cand.astype(jnp.float32))
+        causal = (jnp.arange(m)[None, :] <= jnp.arange(m)[:, None])
+        s_suf = jnp.where(causal[None, None, None], s_suf, -1e30)
+        m_all = jnp.maximum(s_hist.max(axis=-1), s_suf.max(axis=-1))
+        p_hist = jnp.exp(s_hist - m_all[..., None])
+        p_suf = jnp.exp(s_suf - m_all[..., None])
+        p_suf = jnp.where(causal[None, None, None], p_suf, 0.0)
+        l = p_hist.sum(axis=-1) + p_suf.sum(axis=-1)
+        o = jnp.einsum("bhgms,bshd->bmhgd", p_hist,
+                       v_hist.astype(jnp.float32))
+        if v_scale is not None:
+            o = o * v_scale[:, None, :, None, None]
+        o = o + jnp.einsum("bhgms,bshd->bmhgd", p_suf,
+                           v_cand.astype(jnp.float32))
+    l = jnp.moveaxis(jnp.maximum(l, 1e-30), 3, 1)    # [b,m,hkv,g]
+    return (o / l[..., None]).reshape(b, m, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# kernel path plumbing
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bq", "bk",
+                                             "interpret"))
+def _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
+                       row_index, mode: str, bq: int, bk: int,
+                       interpret: bool):
+    b, m, h, d = q.shape
+    u, s_hist, hkv, _ = k_hist.shape
+    bq = min(bq, max(8, 1 << (m - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (s_hist - 1).bit_length()))
+    scale = 1.0 / np.sqrt(d)
+    # model layout [B,S,H,D] -> kernel layout [B,H,S,D], pad S to block
+    # multiples and D to the 128-lane width
+    qp = _pad_to(_pad_to(jnp.swapaxes(q * scale, 1, 2), 2, bq), 3, 128)
+    khp = _pad_to(_pad_to(jnp.swapaxes(k_hist, 1, 2), 2, bk), 3, 128)
+    vhp = _pad_to(_pad_to(jnp.swapaxes(v_hist, 1, 2), 2, bk), 3, 128)
+    kcp = _pad_to(_pad_to(jnp.swapaxes(k_cand, 1, 2), 2, bq), 3, 128)
+    vcp = _pad_to(_pad_to(jnp.swapaxes(v_cand, 1, 2), 2, bq), 3, 128)
+    ones = jnp.ones((u, hkv), jnp.float32)
+    ks = ones if k_scale is None else k_scale
+    vs = ones if v_scale is None else v_scale
+    idx = jnp.arange(b, dtype=jnp.int32) if row_index is None \
+        else row_index.astype(jnp.int32)
+    out = fused_score_kernel(idx, ks, vs, qp.astype(q.dtype), khp, vhp,
+                             kcp, vcp, mode=mode, sq=m, s_hist=s_hist,
+                             bq=bq, bk=bk, interpret=interpret)
+    return jnp.swapaxes(out[:, :, :m, :d], 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _fused_attention(q, k_hist, v_hist, k_cand, v_cand, *, mode: str,
+                     k_scale=None, v_scale=None, row_index=None,
+                     temperature=None, path: str = "auto",
+                     interpret=None):
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    u, hkv = k_hist.shape[0], k_hist.shape[2]
+    ks = _norm_scale(k_scale, u, hkv)
+    vs = _norm_scale(v_scale, u, hkv)
+    if k_hist.shape[1] == 0:
+        raise ValueError("fused attention needs a non-empty history/prefix "
+                         "segment (degenerate cases route to the framework "
+                         "impls in core/sumi.py)")
+    if path == "auto":
+        path = _auto_path()
+    if path == "kernel":
+        if interpret is None:
+            interpret = default_interpret()
+        return _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand,
+                                  ks, vs, row_index, mode, 128, 128,
+                                  interpret)
+    if path != "jnp":
+        raise ValueError(f"path must be auto|kernel|jnp, got {path!r}")
+    return _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, ks, vs,
+                      row_index, mode)
+
+
+def fused_cached_attention(q, k_hist, v_hist, k_cand, v_cand, *,
+                           k_scale=None, v_scale=None, row_index=None,
+                           temperature=None, path: str = "auto",
+                           interpret=None):
+    """Candidate-only SUMI attention against pooled history K/V.
+
+    ``q``/``k_cand``/``v_cand`` [B,M,H(kv),D] fresh candidate projections;
+    ``k_hist``/``v_hist`` [U,S,Hkv,D] pool-stored values (int8/bf16/
+    native) with optional [U,1,Hkv,1] ``k_scale``/``v_scale`` and a [B]
+    ``row_index`` selecting each batch row's pool row (KV-row dedup)."""
+    return _fused_attention(q, k_hist, v_hist, k_cand, v_cand,
+                            mode="cached", k_scale=k_scale, v_scale=v_scale,
+                            row_index=row_index, temperature=temperature,
+                            path=path, interpret=interpret)
+
+
+def fused_extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
+                           k_scale=None, v_scale=None, row_index=None,
+                           temperature=None, path: str = "auto",
+                           interpret=None):
+    """Causal suffix attention against pooled prefix K/V (incremental
+    history extension).  Same operand conventions as
+    :func:`fused_cached_attention`; query row i sits at absolute position
+    ``P + i`` and the suffix segment is causal within itself."""
+    return _fused_attention(q, k_prefix, v_prefix, k_suffix, v_suffix,
+                            mode="extend", k_scale=k_scale, v_scale=v_scale,
+                            row_index=row_index, temperature=temperature,
+                            path=path, interpret=interpret)
+
+
+def block_epilogue(x, o, attn_params, norm_params, ffn_params, cfg, *,
+                   path: str = "auto", interpret=None):
+    """Per-layer epilogue of one fused block step: out-projection +
+    residual + norm + FFN + residual.
+
+    On TPU (``path="auto"``) the norm + FFN chain reuses the
+    ``kernels/fused_ffn`` Pallas kernel (norm folded into the first
+    matmul, f32 VMEM accumulator); elsewhere it is the exact framework
+    composition, so the jnp fused path stays bitwise-aligned with the
+    chunked impl's epilogue."""
+    from repro.models import layers as L
+    from repro.models.ffn import ffn_apply
+
+    x = x + jnp.einsum("bshk,hkd->bsd", o, attn_params["wo"])
+    if path == "auto":
+        path = _auto_path()
+    if path == "kernel" and cfg.norm == "rmsnorm":
+        from repro.kernels.fused_ffn import ops as ffn_ops
+        return x + ffn_ops.fused_ffn(x, ffn_params,
+                                     activation=cfg.activation,
+                                     norm_scale=norm_params["scale"],
+                                     interpret=interpret)
+    h2 = L.apply_norm(cfg, norm_params, x)
+    return x + ffn_apply(ffn_params, h2, cfg, impl="xla")

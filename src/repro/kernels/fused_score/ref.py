@@ -1,0 +1,80 @@
+"""Pure-jnp fp32 oracle for the fused candidate-scoring kernel (FKE).
+
+The oracle spells out exactly what the fused paths must compute, as the
+framework-composed chain the engine ran before the FKE existed:
+
+  1. dequantize the pooled history K/V (same formula as
+     ``serving/kv_cache.py::dequantize_leaf`` — a quantized operand is
+     ``values * scale / 127`` cast back to the compute dtype);
+  2. gather each batch row's KV view through the dedup ``row_index``;
+  3. concatenate history and candidate K/V along the position axis;
+  4. run materialized-score reference attention (SUMI with
+     ``q_offset = n_history`` for cached-candidate scoring, causal with
+     ``q_offset = prefix_len`` for incremental suffix extension).
+
+Because steps 1–4 literally reuse the framework reference ops, the oracle
+is **bitwise-identical** to ``sumi.cached_candidate_attention`` /
+``sumi.extend_attention`` under ``impl="reference"`` on dequantized
+operands; the Pallas kernel and the fused jnp fast path are gated against
+it at bf16-style tolerances (they reassociate the scale multiply and skip
+intermediate roundings).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import attention as A
+
+
+def dequantize_values(values, scale, dtype):
+    """Invert pool quantization on a raw (values, scale) operand pair.
+
+    Mirrors ``serving/kv_cache.py::dequantize_leaf`` bitwise: ``scale is
+    None`` marks a plain cast (bf16 storage or a no-op for native), int8
+    values dequantize through the per-(layer, head) absmax scale."""
+    if scale is None:
+        return jnp.asarray(values).astype(dtype)
+    return (jnp.asarray(values, jnp.float32)
+            * (jnp.asarray(scale) / 127.0)).astype(dtype)
+
+
+def _prep(k, v, k_scale, v_scale, row_index, dtype):
+    """Steps 1–2: dequantize + gather the per-row KV views."""
+    k = dequantize_values(k, k_scale, dtype)
+    v = dequantize_values(v, v_scale, dtype)
+    if row_index is not None:
+        k = jnp.take(k, row_index, axis=0)
+        v = jnp.take(v, row_index, axis=0)
+    return k, v
+
+
+def cached_reference(q, k_hist, v_hist, k_cand, v_cand, *,
+                     k_scale=None, v_scale=None, row_index=None,
+                     kv_dtype=None, temperature=None):
+    """Cached-candidate SUMI oracle.  ``q``/``k_cand``/``v_cand``
+    [B,M,H(kv),D]; ``k_hist``/``v_hist`` [U,S,Hkv,D] stored values with
+    optional [U,1,Hkv,1] scales and a [B] ``row_index`` gather."""
+    dtype = kv_dtype or q.dtype
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    kh, vh = _prep(k_hist, v_hist, k_scale, v_scale, row_index, dtype)
+    n_history = kh.shape[1]
+    k = jnp.concatenate([kh, k_cand.astype(dtype)], axis=1)
+    v = jnp.concatenate([vh, v_cand.astype(dtype)], axis=1)
+    return A.reference_attention(q, k, v, "sumi", n_history=n_history,
+                                 q_offset=n_history)
+
+
+def extend_reference(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
+                     k_scale=None, v_scale=None, row_index=None,
+                     kv_dtype=None, temperature=None):
+    """Incremental-extension (causal) oracle: suffix queries at absolute
+    position ``prefix_len + i`` over ``concat(prefix, suffix)`` KV."""
+    dtype = kv_dtype or q.dtype
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    kp, vp = _prep(k_prefix, v_prefix, k_scale, v_scale, row_index, dtype)
+    p0 = kp.shape[1]
+    k = jnp.concatenate([kp, k_suffix.astype(dtype)], axis=1)
+    v = jnp.concatenate([vp, v_suffix.astype(dtype)], axis=1)
+    return A.reference_attention(q, k, v, "causal", q_offset=p0)

@@ -80,7 +80,12 @@ def serve_rec(args):
                   pool_dtype=args.pool_dtype,
                   pool_placement=args.pool_placement,
                   pool_spill_bytes=int(args.pool_spill_mb * 2**20),
-                  incremental_history=args.incremental_history)
+                  incremental_history=args.incremental_history,
+                  extend_buckets=(tuple(int(b) for b in
+                                        args.extend_buckets.split(",")
+                                        if b.strip())
+                                  if args.extend_buckets.strip() else None),
+                  extend_refresh_limit=args.extend_refresh_limit)
     else:
         kw.update(n_workers=args.concurrency)
     eng = create_engine(args.engine, bundle, params, **kw)
@@ -125,9 +130,12 @@ def main():
     ap.add_argument("--feature-mode", default="sync",
                     choices=["off", "sync", "async"])
     ap.add_argument("--impl", default="chunked",
-                    choices=["reference", "chunked", "pallas"],
+                    choices=["reference", "chunked", "pallas", "fused"],
                     help="attention impl for the model forward (chunked "
-                         "avoids O(S^2) score materialization on CPU)")
+                         "avoids O(S^2) score materialization on CPU; "
+                         "fused is the FKE candidate-scoring engine — "
+                         "cached scoring reads quantized pool KV and the "
+                         "dedup row index in-kernel)")
     ap.add_argument("--history-cache", action="store_true",
                     help="split the SUMI forward: pool per-user history KV, "
                          "serve candidate-only executors on pool hits")
@@ -153,6 +161,16 @@ def main():
                     help="on stale pool hits sharing a window prefix with "
                          "the cached entry, re-encode only the suffix + "
                          "side token against the cached prefix K/V")
+    ap.add_argument("--extend-buckets", default="",
+                    help="comma list of trusted-prefix lengths for the "
+                         "extend executor family (empty = the default "
+                         "ladder n,3n/4,n/2; prefixes below n/2 re-encode "
+                         "— the crossover policy)")
+    ap.add_argument("--extend-refresh-limit", type=int, default=0,
+                    help="force a full re-encode after this many "
+                         "incremental extensions of one pool entry (bounds "
+                         "requantization drift under --pool-dtype int8; "
+                         "0 = uncapped)")
     ap.add_argument("--users", type=int, default=0,
                     help="repeat-user traffic: draw requests from this many "
                          "users with stable histories (0 = unique users)")

@@ -16,7 +16,13 @@ Implementations
 ``chunked``    flash-style online softmax over KV chunks in pure jnp; used by
                the dry-run (no O(S^2) temporaries).  Sliding mode slices only
                the in-window KV chunks, so FLOPs scale with S*W, not S^2.
-``pallas``     the FKE Pallas kernel (kernels/flash_attention) — TPU target.
+``pallas``     the mask-aware flash-attention Pallas kernel
+               (kernels/flash_attention) — TPU target.
+``fused``      the FKE candidate-scoring engine (kernels/fused_score): the
+               cached-candidate SUMI path runs a two-segment fused kernel
+               that can read quantized pool KV and the DSO's dedup row
+               index directly; other mask/offset combinations fall back to
+               ``chunked``.
 """
 from __future__ import annotations
 
@@ -397,7 +403,26 @@ def context_parallel_attention(q, k, v, mode: str, *, window: int, mesh,
 
 def attention(q, k, v, mode: str, *, impl: str = "chunked", window: int = 0,
               n_history: int = 0, temperature=None, q_offset: int = 0):
-    """Dispatch wrapper used by the transformer stack."""
+    """Dispatch wrapper used by the transformer stack.
+
+    ``impl="fused"`` is the FKE candidate-scoring engine
+    (kernels/fused_score): the cached-candidate SUMI case (``q_offset > 0``
+    — every query is a candidate against ``n_history`` cached rows plus its
+    own key) splits the KV axis at ``n_history`` and runs the two-segment
+    fused path without re-materializing the concatenation; other (mode,
+    offset) combinations have no fused kernel and fall back to ``chunked``
+    (the serving entry points in core/sumi.py call the fused ops directly
+    with separate operands, so this route only serves callers that already
+    concatenated)."""
+    if impl == "fused":
+        if mode == "sumi" and q_offset and q_offset == n_history \
+                and k.shape[1] == n_history + q.shape[1]:
+            from repro.kernels.fused_score import ops as fs_ops
+            return fs_ops.fused_cached_attention(
+                q, k[:, :n_history], v[:, :n_history],
+                k[:, n_history:], v[:, n_history:],
+                temperature=temperature)
+        impl = "chunked"
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
         return fa_ops.flash_attention(q, k, v, mode, window=window,

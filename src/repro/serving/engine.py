@@ -30,7 +30,10 @@ Executors are AOT-compiled per ``(kind, bucket)``:
   ("full",   M-bucket)   monolithic SUMI pass (pool off)
   ("cached", M-bucket)   candidate-only scoring against pooled history K/V;
                          with ``kv_dedup`` the signature carries unique KV
-                         rows + a [B] gather index
+                         rows + a [B] gather index; under ``impl="fused"``
+                         the rows are the pool's RAW (quantized) leaves and
+                         both dequant and gather happen in-kernel
+                         (kernels/fused_score)
   ("encode", n_history)  history encode repopulating the pool on a miss
   ("extend", prefix_len) PDA v2 incremental path: re-encode only the window
                          suffix + side token against a stale entry's cached
@@ -64,7 +67,8 @@ from repro.models.model import ModelBundle
 from repro.serving.api import (AdmissionQueueFull, ResponseFuture,
                                ServeMetrics, ServeRequest, ServeResponse,
                                register_engine)
-from repro.serving.kv_cache import HistoryKVPool, KVCacheManager
+from repro.serving.kv_cache import (HistoryKVPool, KVCacheManager,
+                                    quantize_kv, raw_kv_specs, raw_kv_view)
 
 _STOP = object()
 
@@ -291,7 +295,28 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         (the saved cost is the per-chunk host->HBM transfer; the
         executor-side row gather is an HBM-local copy, ~30x cheaper) and
         OFF for the CPU backend (stacking is a plain memcpy there, so the
-        gather would be pure overhead — measured ~15% on 2 cores)."""
+        gather would be pure overhead — measured ~15% on 2 cores) —
+        EXCEPT under ``impl="fused"``, where it is ON everywhere: the FKE
+        folds the gather into the kernel's KV block reads, so dedup is
+        free on every backend.
+    ``extend_buckets`` / ``extend_refresh_limit``
+        trusted-prefix lengths for the extend executor family (default:
+        the (n, 3n/4, n/2) ladder) and the extension-drift cap — after
+        this many incremental extensions of one entry (each of which
+        re-quantizes under a lossy ``pool_dtype``) the next stale hit
+        re-encodes in full (``pool_refresh_reencodes`` metric; 0 = off).
+        Prefixes below half the window always re-encode (the
+        re-encode-vs-extend crossover: the extension would redo most of
+        the window while layering another requantization).
+
+    FKE (``impl="fused"``): the ``cached`` executor family is compiled
+    against the pool's RAW stored representation (int8/bf16 values + per-
+    (layer, head) scales, ``serving/kv_cache.py::raw_kv_specs``) plus the
+    dedup row index, and ``kernels/fused_score`` dequantizes tiles and
+    resolves the row gather in-kernel — a pool hit dispatches without the
+    host-side dequantize or the ``kv[idx]`` materialization the framework
+    impls pay.  Hit and miss paths share the stored representation, so
+    repeat scores are bitwise-stable."""
 
     def __init__(self, bundle: ModelBundle, params, *, n_history: int,
                  buckets: Sequence[int] = (512, 256, 128),
@@ -310,17 +335,21 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  pool_spill_bytes: int = 0,
                  incremental_history: bool = False,
                  extend_buckets: Optional[Sequence[int]] = None,
+                 extend_refresh_limit: int = 0,
+                 extend_crossover: float = 0.5,
                  kv_dedup: Optional[bool] = None):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
         self.n_history = n_history
         self.impl = impl
+        self._fused = impl == "fused"
         self.store, self.features = _make_features(
             feature_mode, store, cache_capacity, cache_ttl_s)
 
         self.history_pool: Optional[HistoryKVPool] = None
         self._extend_buckets: tuple = ()
+        self._extend_refresh_limit = int(extend_refresh_limit)
         if history_cache:
             if bundle.encode_history is None or bundle.score_candidates is None:
                 raise ValueError(
@@ -331,16 +360,56 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     raise ValueError(
                         "incremental_history=True needs a bundle with the "
                         "extend_history serving surface")
+                explicit_buckets = extend_buckets is not None
+                if extend_buckets is None:
+                    # default trusted-prefix ladder (n, 3n/4, n/2): the
+                    # dominant tail-append case extends from the full
+                    # window, mid-window edits from the nearest rung
+                    extend_buckets = (n_history, 3 * n_history // 4,
+                                      n_history // 2)
+                # re-encode-vs-extend crossover: an extension re-encodes
+                # the (window - bucket) suffix, so once the trusted prefix
+                # drops below ``extend_crossover`` of the window the
+                # extension does most of a full re-encode's work anyway
+                # (while layering another requantization).  Buckets below
+                # the threshold are dropped HERE so no AOT executor is
+                # ever compiled for a rung the dispatch policy would never
+                # route to (executor builds dominate engine startup).
+                min_prefix = int(extend_crossover * n_history)
                 self._extend_buckets = tuple(sorted(
-                    set(extend_buckets or (n_history,)), reverse=True))
+                    {b for b in extend_buckets if b >= max(min_prefix, 1)},
+                    reverse=True))
+                if explicit_buckets and not self._extend_buckets:
+                    # every user-supplied rung fell below the crossover:
+                    # silently serving full re-encodes would contradict
+                    # the explicit incremental request — fail loudly
+                    raise ValueError(
+                        f"extend_buckets {tuple(extend_buckets)} all fall "
+                        f"below the re-encode-vs-extend crossover "
+                        f"({min_prefix} = {extend_crossover:g} * "
+                        f"n_history); raise the buckets or lower "
+                        f"extend_crossover")
             self.history_pool = HistoryKVPool(
                 pool_slots, budget_bytes=pool_budget_bytes, dtype=pool_dtype,
                 placement=pool_placement, spill_bytes=pool_spill_bytes)
             kv_specs = bundle.history_kv_specs(params, n_history, batch=1)
             leaves, self._kv_treedef = jax.tree.flatten(kv_specs)
             self._kv_row_specs = leaves          # per-request rows (batch=1)
-            if kv_dedup is None:                 # auto: see class docstring
-                kv_dedup = jax.default_backend() != "cpu"
+            # the FKE ("fused") scoring executors consume the pool's RAW
+            # representation — stored-precision values + per-(layer, head)
+            # scales, dequantized in-kernel — so their compiled signature
+            # quantizes the row specs instead of the engine dequantizing
+            # every hit on the host
+            cached_specs = raw_kv_specs(kv_specs, pool_dtype) \
+                if self._fused else kv_specs
+            cleaves, self._cached_treedef = jax.tree.flatten(cached_specs)
+            self._cached_row_specs = cleaves
+            if kv_dedup is None:
+                # auto: ON for accelerator backends (each deduped row is a
+                # skipped H2D transfer) and, under the fused impl, on EVERY
+                # backend — the row gather is folded into the kernel's KV
+                # block reads, so dedup costs nothing even on CPU
+                kv_dedup = jax.default_backend() != "cpu" or self._fused
             self._kv_dedup = kv_dedup
             self._encode_inflight: Dict[tuple, Future] = {}
             self._encode_lock = threading.Lock()
@@ -350,9 +419,13 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             (batch, n_history), jnp.int32)
         side_spec = lambda batch: jax.ShapeDtypeStruct(  # noqa: E731
             (batch, N_SIDE_FEATURES), jnp.float32)
-        kv_row_shapes = lambda batch: tuple(  # noqa: E731
+        _batched = lambda specs, batch: tuple(  # noqa: E731
             jax.ShapeDtypeStruct((batch,) + s.shape[1:], s.dtype)
-            for s in self._kv_row_specs)
+            for s in specs)
+        kv_row_shapes = lambda batch: _batched(  # noqa: E731
+            self._kv_row_specs, batch)
+        cached_row_shapes = lambda batch: _batched(  # noqa: E731
+            self._cached_row_specs, batch)
 
         def build_fn(kind: str, bucket: int, batch: int):
             if kind == "full":
@@ -387,24 +460,33 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     # deduped signature: unique KV rows + per-row gather idx
                     def fn(*args):
                         *kv_leaves, idx, candidates = args
+                        if self._fused:
+                            # FKE: the raw (stored-precision) rows and the
+                            # gather index flow straight into the kernel —
+                            # no host dequant, no kv[idx] materialization
+                            kv = jax.tree.unflatten(self._cached_treedef,
+                                                    list(kv_leaves))
+                            return bundle.score_candidates(
+                                self.params, kv, jnp.maximum(candidates, 0),
+                                impl=self.impl, row_index=idx)
                         kv = jax.tree.unflatten(
-                            self._kv_treedef,
+                            self._cached_treedef,
                             [jnp.take(a, idx, axis=0) for a in kv_leaves])
                         return bundle.score_candidates(
                             self.params, kv, jnp.maximum(candidates, 0),
                             impl=self.impl)
-                    shapes = kv_row_shapes(batch) + (
+                    shapes = cached_row_shapes(batch) + (
                         jax.ShapeDtypeStruct((batch,), jnp.int32),
                         jax.ShapeDtypeStruct((batch, bucket), jnp.int32))
                 else:
                     def fn(*args):
                         *kv_leaves, candidates = args
-                        kv = jax.tree.unflatten(self._kv_treedef,
+                        kv = jax.tree.unflatten(self._cached_treedef,
                                                 list(kv_leaves))
                         return bundle.score_candidates(
                             self.params, kv, jnp.maximum(candidates, 0),
                             impl=self.impl)
-                    shapes = kv_row_shapes(batch) + (
+                    shapes = cached_row_shapes(batch) + (
                         jax.ShapeDtypeStruct((batch, bucket), jnp.int32),)
             else:
                 raise ValueError(kind)
@@ -421,7 +503,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             if self._extend_buckets:
                 families["extend"] = self._extend_buckets
             if kv_dedup:
-                dedup_kinds = {"cached": len(self._kv_row_specs)}
+                dedup_kinds = {"cached": len(self._cached_row_specs)}
             if pool_placement == "device" and jax.default_backend() != "cpu":
                 # encode/extend outputs feed the pool: keep them on device.
                 # On the CPU backend host and device memory coincide, so the
@@ -508,6 +590,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         neq = np.nonzero(np.asarray(cached) != np.asarray(new))[0]
         return int(neq[0]) if neq.size else int(new.shape[0])
 
+    def _cached_rows(self, kv) -> tuple:
+        """Flatten a pool lookup result into the cached-executor arg order.
+        Under the fused impl the result is a raw view — (values, scale)
+        tuples over the stored arrays — whose flatten order matches the
+        compiled raw-spec signature; otherwise it is the dequantized leaf
+        tuple unchanged."""
+        return tuple(jax.tree.leaves(kv))
+
     def _lookup_or_encode(self, req: ServeRequest, hist: np.ndarray,
                           memo: Optional[tuple] = None
                           ) -> Tuple[tuple, str, float]:
@@ -520,9 +610,10 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         O(n_history) encodes."""
         key, fp = memo if memo is not None else self._pool_key(req)
         kv, status, basis = self.history_pool.lookup(
-            key, fp, want_basis=bool(self._extend_buckets))
+            key, fp, want_basis=bool(self._extend_buckets),
+            raw=self._fused)
         if status == "hit":
-            return kv, "hit", 0.0
+            return self._cached_rows(kv), "hit", 0.0
         with self._encode_lock:
             fut = self._encode_inflight.get((key, fp))
             leader = fut is None
@@ -530,9 +621,9 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 # a racing leader may have put + deregistered between our
                 # counted miss and taking this lock — re-check (uncounted)
                 # before electing ourselves and re-encoding
-                kv = self.history_pool.peek(key, fp)
+                kv = self.history_pool.peek(key, fp, raw=self._fused)
                 if kv is not None:
-                    return kv, "wait", 0.0
+                    return self._cached_rows(kv), "wait", 0.0
                 fut = Future()
                 self._encode_inflight[(key, fp)] = fut
         if not leader:
@@ -541,18 +632,25 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             t0 = time.perf_counter()
             side = self._side_features(req.history)
             t1 = time.perf_counter()
-            kv_tree, path = None, "encode"
+            kv_tree, path, refreshes = None, "encode", 0
             if basis is not None and self._extend_buckets:
                 # stale hit sharing a window prefix with the dropped entry:
                 # re-encode only the suffix + side token against its K/V
                 shared = self._shared_prefix(basis.hist_window, hist[0])
                 bucket = max((b for b in self._extend_buckets if b <= shared),
                              default=None)
+                if bucket is not None and self._extend_refresh_limit and \
+                        basis.refreshes >= self._extend_refresh_limit:
+                    # extension-drift cap: this entry has been extended
+                    # (re-quantized) K times since its last full encode
+                    bucket = None
+                    self.history_pool.count_refresh_reencode()
                 if bucket is not None:
                     basis_leaves = tuple(jax.tree.leaves(basis.kv))
                     kv_tree = self.dso.score((basis_leaves, hist, side),
                                              bucket, kind="extend")
                     path = "extend"
+                    refreshes = basis.refreshes + 1
                     self.history_pool.count_extension()
             if kv_tree is None:
                 kv_tree = self.dso.score((hist, side), self.n_history,
@@ -564,9 +662,20 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             # under-report
             kv = tuple(np.array(a) if isinstance(a, np.ndarray) else a
                        for a in jax.tree.leaves(kv_tree))
-            self.history_pool.put(key, fp, kv, hist_window=hist[0])
+            self.history_pool.put(key, fp, kv, hist_window=hist[0],
+                                  refreshes=refreshes)
             self._metrics.set_gauge("pool_bytes_used",
                                     self.history_pool.bytes_used)
+            if self._fused:
+                # the fused executors speak the pool's raw (quantized)
+                # representation: read the entry back as stored — a racing
+                # eviction falls back to a local quantize of the same rows,
+                # so hit- and miss-path scores share one representation
+                raw = self.history_pool.peek(key, fp, raw=True)
+                if raw is None:
+                    raw = raw_kv_view(quantize_kv(kv,
+                                                  self.history_pool.dtype)[0])
+                kv = self._cached_rows(raw)
             fut.set_result(kv)
         except BaseException as e:
             fut.set_exception(e)
@@ -595,13 +704,18 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         # On a HIT the (key, fingerprint) pair is a stable content identity
         # for the loaded rows (every hit dequantizes the same payload), so
         # co-batched requests for one user dedup even when a quantized pool
-        # dequantizes to fresh arrays per lookup.  Miss paths carry the
-        # leader's PRE-quantization KV — under a lossy pool dtype that is a
-        # different representation than a hit's, so they fall back to
-        # object identity (which still dedups one request's own chunks and
-        # single-flight followers sharing the leader's tuple).
+        # dequantizes to fresh arrays per lookup.  Under the framework
+        # impls, miss paths carry the leader's PRE-quantization KV — under
+        # a lossy pool dtype that is a different representation than a
+        # hit's, so they fall back to object identity (which still dedups
+        # one request's own chunks and single-flight followers sharing the
+        # leader's tuple).  Under the FUSED impl every path reads the
+        # stored (quantized) representation — the miss leader reads the
+        # entry back raw after put — so hit, wait, encode and extend rows
+        # all share one content identity and dedup across co-batched
+        # requests unconditionally.
         token = None
-        if self._kv_dedup and path == "hit":
+        if self._kv_dedup and (self._fused or path == "hit"):
             token = ("kv",) + key_fp[0] + (key_fp[1],)
         out = self.dso.score((kv, cand), req.m, kind="cached",
                              dedup_token=token)

@@ -199,6 +199,38 @@ def dequantize_kv(payload):
         is_leaf=lambda x: isinstance(x, _QuantLeaf))
 
 
+def raw_kv_view(payload):
+    """Zero-copy *raw* view of a stored payload for quantization-aware
+    executors (the FKE path): every quantized leaf becomes a ``(values,
+    scale)`` tuple over THE stored arrays (scale ``None`` for a plain bf16
+    cast — dropped by ``jax.tree.flatten``), native leaves pass through.
+    The executor dequantizes tiles in-kernel, so a lookup never
+    materializes the dequantized entry on the host.  Callers must treat
+    the arrays as immutable — they alias pool storage."""
+    return jax.tree.map(
+        lambda s: (s.q, s.scale) if isinstance(s, _QuantLeaf) else s,
+        payload, is_leaf=lambda x: isinstance(x, _QuantLeaf))
+
+
+def raw_kv_specs(kv_specs, dtype: str):
+    """ShapeDtypeStruct pytree matching :func:`raw_kv_view` output for a
+    pool storing ``dtype`` — what a quantization-aware AOT executor is
+    compiled against (shape/dtype arithmetic only)."""
+    def one(spec):
+        if dtype == "native":
+            return spec
+        if dtype == "bf16":
+            return (jax.ShapeDtypeStruct(spec.shape, jnp.bfloat16), None)
+        if dtype == "int8":
+            scale_shape = tuple(1 if i in _scale_axes(len(spec.shape)) else s
+                                for i, s in enumerate(spec.shape))
+            return (jax.ShapeDtypeStruct(spec.shape, jnp.int8),
+                    jax.ShapeDtypeStruct(scale_shape, jnp.float32))
+        raise ValueError(f"pool dtype must be one of {POOL_DTYPES}, "
+                         f"got {dtype!r}")
+    return jax.tree.map(one, kv_specs)
+
+
 def _stored_arrays(payload):
     out = []
     for leaf in jax.tree.leaves(
@@ -248,6 +280,7 @@ class _PoolEntry:
     payload: object                # stored (possibly quantized) KV pytree
     nbytes: int                    # stored bytes (quantized size)
     hist_window: Optional[np.ndarray]   # model-window ids at encode time
+    refreshes: int = 0             # incremental extensions since full encode
 
 
 @dataclasses.dataclass
@@ -257,6 +290,7 @@ class StaleBasis:
 
     kv: object                     # dequantized K/V (extension basis)
     hist_window: Optional[np.ndarray]  # window the basis encoded
+    refreshes: int = 0             # extensions already layered on this basis
 
 
 class HistoryKVPool:
@@ -264,23 +298,29 @@ class HistoryKVPool:
 
     See the module docstring for the full contract.  Quick API tour:
 
-    ``lookup(key, fingerprint, want_basis=...)``
+    ``lookup(key, fingerprint, want_basis=..., raw=...)``
         one counted probe: returns ``(kv, status, basis)`` with status
         ``"hit"`` (kv is the dequantized entry, recency refreshed),
         ``"stale"`` (entry dropped; ``basis`` carries its K/V + encoded
-        window when ``want_basis``) or ``"miss"``.  Stale and miss both
-        count as misses, so hit-rate math is unchanged from v1.
+        window + extension refresh count when ``want_basis``) or
+        ``"miss"``.  Stale and miss both count as misses, so hit-rate
+        math is unchanged from v1.  ``raw=True`` (the FKE executors)
+        skips dequantization: hits return :func:`raw_kv_view` of the
+        stored payload — (values, scale) over the stored arrays, no copy.
     ``get(key, fingerprint)``
         v1 sugar over ``lookup``: the kv on hit, else None.
     ``peek(key, fingerprint)``
         uncounted re-check for single-flight leader election.
-    ``put(key, fingerprint, kv, hist_window=None)``
+    ``put(key, fingerprint, kv, hist_window=None, refreshes=0)``
         quantize + admit, then evict LRU-first until both the ``slots`` and
         ``budget_bytes`` limits hold (evictions demote to the spill tier
         when enabled); oversized entries are rejected, never admitted.
-    ``count_extension()``
-        engine callback: one stale hit was served by incremental suffix
-        extension rather than a full re-encode (``extensions`` stat).
+        ``refreshes`` counts incremental extensions layered on the entry
+        since its last full encode (the engine's drift cap).
+    ``count_extension()`` / ``count_refresh_reencode()``
+        engine callbacks: one stale hit was served by incremental suffix
+        extension (``extensions`` stat) / the extension-drift cap forced a
+        full re-encode instead (``refresh_reencodes`` stat).
 
     All methods are thread-safe — pipeline workers hit the pool
     concurrently."""
@@ -315,6 +355,7 @@ class HistoryKVPool:
         self.evictions = 0
         self.rejects = 0
         self.extensions = 0
+        self.refresh_reencodes = 0
         self.spill_hits = 0
         self.bytes_used = 0
         self.spill_bytes_used = 0
@@ -325,14 +366,19 @@ class HistoryKVPool:
         return payload_bytes(kv)
 
     # ---- lookup side ----
-    def _load(self, e: _PoolEntry):
+    def _load(self, e: _PoolEntry, raw: bool = False):
+        if raw:
+            # quantization-aware executor path: hand back the stored
+            # arrays themselves ((values, scale) tuples for quantized
+            # leaves) — no dequantization, no copy
+            return raw_kv_view(e.payload)
         kv = dequantize_kv(e.payload)
         if self.placement == "host":
             kv = jax.tree.map(np.asarray, kv)
         return kv
 
     def lookup(self, key: Hashable, fingerprint: Hashable, *,
-               want_basis: bool = False):
+               want_basis: bool = False, raw: bool = False):
         """One counted probe; see the class docstring.  Checks the primary
         tier, then the spill tier (promoting on a spill hit).  Counter
         bookkeeping happens under the lock; dequantization runs after
@@ -380,10 +426,10 @@ class HistoryKVPool:
                 if key not in self._entries:
                     demoted = self._admit(key, e)
             self._finish_demotions(demoted)
-            return self._load(e), "hit", None
+            return self._load(e, raw), "hit", None
         if status == "hit":
-            return self._load(e), "hit", None
-        basis = StaleBasis(self._load(e), e.hist_window) \
+            return self._load(e, raw), "hit", None
+        basis = StaleBasis(self._load(e), e.hist_window, e.refreshes) \
             if want_basis else None
         return None, "stale", basis
 
@@ -400,7 +446,8 @@ class HistoryKVPool:
             e = self._entries.get(key) or self._spill.get(key)
             return e is not None and e.fingerprint == fingerprint
 
-    def peek(self, key: Hashable, fingerprint: Hashable):
+    def peek(self, key: Hashable, fingerprint: Hashable, *,
+             raw: bool = False):
         """Like ``get`` but without touching hit/miss/stale counters (and
         without dropping stale entries) — used by the engine's single-flight
         leader election to re-check the pool after the initial counted miss,
@@ -413,7 +460,7 @@ class HistoryKVPool:
                 e = self._spill.get(key)
                 if e is None or e.fingerprint != fingerprint:
                     return None
-        return self._load(e)
+        return self._load(e, raw)
 
     # ---- admission side ----
     def _admit(self, key: Hashable, entry: _PoolEntry) -> List[_PoolEntry]:
@@ -462,9 +509,13 @@ class HistoryKVPool:
                     ev.payload = host_payload
 
     def put(self, key: Hashable, fingerprint: Hashable, kv,
-            hist_window: Optional[np.ndarray] = None) -> bool:
+            hist_window: Optional[np.ndarray] = None,
+            refreshes: int = 0) -> bool:
         """Quantize + admit; returns False when the entry was rejected for
-        exceeding ``budget_bytes`` on its own."""
+        exceeding ``budget_bytes`` on its own.  ``refreshes`` records how
+        many incremental extensions are layered on this entry since its
+        last full encode (the engine's extension-drift cap reads it back
+        through :class:`StaleBasis`)."""
         # size precheck BEFORE quantizing/placing: a rejected entry must
         # not pay the (multi-MB at paper scale) quantize + transfer cost
         nbytes = quantized_nbytes(kv, self.dtype)
@@ -484,13 +535,21 @@ class HistoryKVPool:
             if sp is not None:
                 self.spill_bytes_used -= sp.nbytes
             demoted = self._admit(key, _PoolEntry(fingerprint, payload,
-                                                  nbytes, hist_window))
+                                                  nbytes, hist_window,
+                                                  refreshes))
         self._finish_demotions(demoted)
         return True
 
     def count_extension(self):
         with self._lock:
             self.extensions += 1
+
+    def count_refresh_reencode(self):
+        """Engine callback: a stale hit had an extendable basis, but the
+        extension-drift cap (``--extend-refresh-limit``) forced a full
+        re-encode instead."""
+        with self._lock:
+            self.refresh_reencodes += 1
 
     # ---- introspection / lifecycle ----
     def keys(self) -> List[Hashable]:
@@ -524,6 +583,7 @@ class HistoryKVPool:
                 "evictions": self.evictions,
                 "rejects": self.rejects,
                 "extensions": self.extensions,
+                "refresh_reencodes": self.refresh_reencodes,
                 "hit_rate": self.hits / total if total else 0.0,
                 "bytes": self.bytes_used,
                 "spill_entries": len(self._spill),
