@@ -40,6 +40,15 @@ the dedup row index in-kernel, so a hit skips the host dequantize AND the
 backend because the gather is free.  Run standalone with
 ``python -m benchmarks.bench_serving --profile fke`` (the CI gate).
 
+Profile 7 (dso_nonuniform): DSO v2 segment-packed ragged dispatch vs the
+PR-4 coalescing dispatcher under non-uniform candidate traffic (zipf +
+lognormal over tiny counts — nearly every request is one partial tail
+chunk).  The packed engine fills shared rows with candidate segments from
+many requests (each steered to its own user's pooled KV by the per-
+candidate seg index), so ``padded_fraction`` collapses and items/s rises
+with no score change beyond the cross-executable tolerance.  Run
+standalone with ``--profile dso_nonuniform`` (a CI gate).
+
 All profiles run against a warmed PDA cache (hot steady state) so the
 measurement reflects dispatch economics, not feature-fetch cost.
 
@@ -117,6 +126,25 @@ FKE_ROUNDS = 5
 FKE_SPEEDUP_MIN = 1.3
 FKE_TOL = 1e-2      # chunked dequantizes, fused folds the scale in-kernel:
                     # same stored rows, reassociated math (~3e-3 measured)
+# dso_nonuniform profile: DSO v2 segment packing vs PR-4 coalescing under
+# non-uniform candidate traffic (paper Fig 10 / Table 5's regime).  Counts
+# are tiny and skewed (zipf mostly draws the smallest; lognormal is the
+# heavy-tailed continuous variant) against a single 32-bucket, so nearly
+# every request is ONE partial tail chunk padded up to its covering bucket
+# (padded_fraction ~0.7-0.8) — the packer fills shared rows with segments
+# from many requests instead, and pack_rows (max_batch/4 = 2) compiles a
+# quarter of the unpacked row capacity: the same chunk fill rides a (2,
+# 32) executor instead of an (8, 32) one.  Users <= the batch axis so one
+# packed dispatch can stack every user's KV; one stream per bucket so a
+# single collector sees the whole pending queue.
+DSO_HISTORY = 192
+DSO_BUCKETS = (32,)
+DSO_COUNTS = (3, 5, 9, 15)
+DSO_STREAMS = 1
+DSO_ROUNDS = 7
+DSO_SPEEDUP_MIN = 1.2   # packed >= 1.2x items/s (median per-round, zipf)
+DSO_PAD_RATIO_MIN = 2.0  # unpacked padded_fraction >= 2x the packed one
+DSO_TOL = 2e-3           # cross-AOT-executable tolerance (see profile 2)
 # the v2 engine carries an explicit byte budget (active accounting; sized
 # far above the working set so the hot path is budget-checked, not evicted)
 V2_BUDGET_BYTES = 64 << 20
@@ -389,6 +417,115 @@ def run_fke_profile(bundle, params, csv=True):
     }
 
 
+def _cached_padded_fraction(m0: dict, m1: dict) -> float:
+    """Padded fraction of the cached-scoring dispatches between two metric
+    snapshots: 1 - real candidates / dispatched candidate slots."""
+    slots = m1.get("dso_cand_slots_cached", 0) - m0.get(
+        "dso_cand_slots_cached", 0)
+    valid = m1.get("dso_cand_valid_cached", 0) - m0.get(
+        "dso_cand_valid_cached", 0)
+    return 1.0 - valid / slots if slots else 0.0
+
+
+def run_dso_nonuniform_profile(bundle, params, csv=True):
+    """Profile 7: DSO v2 segment packing + deadline-aware flushing vs PR-4
+    coalescing on non-uniform (zipf + lognormal) candidate traffic over a
+    hot history pool.  Gates (zipf side): packed >= 1.2x items/s median
+    per-round, padded_fraction reduced >= 2x, scores within the cross-
+    executable tolerance."""
+    print("\n=== DSO v2: segment-packed ragged dispatch vs PR-4 coalescing "
+          f"(history {DSO_HISTORY}, counts {DSO_COUNTS}, bucket "
+          f"{DSO_BUCKETS}, hot pool) ===")
+
+    def dso_engine(pack):
+        eng = create_engine(
+            "flame", bundle, params, n_history=DSO_HISTORY,
+            buckets=DSO_BUCKETS, n_streams=DSO_STREAMS, feature_mode="sync",
+            store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+            coalesce=True, max_batch=REPEAT_MAX_BATCH, window_s=0.008,
+            n_workers=N_WORKERS, history_cache=True,
+            pool_slots=POOL_SLOTS, impl="fused", pack_tails=pack)
+        eng.features.query(list(range(N_ITEMS)))
+        return eng
+
+    report = {"workload": {"counts": list(DSO_COUNTS),
+                           "n_requests": N_REQUESTS, "history": DSO_HISTORY,
+                           "n_users": REPEAT_USERS, "impl": "fused",
+                           "max_batch": REPEAT_MAX_BATCH,
+                           "buckets": list(DSO_BUCKETS)},
+              "gates": {"dso_pack_speedup_min": DSO_SPEEDUP_MIN,
+                        "dso_pad_ratio_min": DSO_PAD_RATIO_MIN,
+                        "dso_tolerance": DSO_TOL}}
+    for dist in ("zipf", "lognormal"):
+        tc = TrafficConfig(candidate_counts=DSO_COUNTS, distribution=dist,
+                           n_requests=N_REQUESTS, n_history=DSO_HISTORY,
+                           seed=31, n_users=REPEAT_USERS)
+        reqs = generate_traffic(tc, n_items=N_ITEMS)
+        eng_un, eng_pk = dso_engine(False), dso_engine(True)
+        m0 = [eng_un.metrics(), eng_pk.metrics()]
+        unpacked, out_un, packed, out_pk, ratios = _ab_interleaved_ratios(
+            eng_un, eng_pk, reqs, rounds=DSO_ROUNDS)
+        pf_un = _cached_padded_fraction(m0[0], eng_un.metrics())
+        pf_pk = _cached_padded_fraction(m0[1], eng_pk.metrics())
+        eng_un.shutdown()
+        eng_pk.shutdown()
+        speedup = float(np.median(ratios))
+        speedup_agg = (packed["throughput_items_per_s"]
+                       / max(unpacked["throughput_items_per_s"], 1e-9))
+        max_diff = max(
+            float(np.abs(a.astype(np.float32) - b.astype(np.float32)).max())
+            for a, b in zip(out_un, out_pk))
+        bitwise_frac = float(np.mean([np.array_equal(a, b)
+                                      for a, b in zip(out_un, out_pk)]))
+        print(f"-- {dist} traffic --")
+        print(f"{'config':<28}{'items/s':>10}{'p50 ms':>9}{'p99 ms':>9}"
+              f"{'padded':>8}")
+        for name, r, pf in (("unpacked (PR-4 coalescing)", unpacked, pf_un),
+                            ("packed (DSO v2)", packed, pf_pk)):
+            print(f"{name:<28}{r['throughput_items_per_s']:>10.0f}"
+                  f"{r['p50_latency_ms']:>9.1f}{r['p99_latency_ms']:>9.1f}"
+                  f"{pf:>8.2f}")
+        print(f"-> packing ({dist}): throughput x{speedup:.2f} median "
+              f"per-round (x{speedup_agg:.2f} aggregate); padded_fraction "
+              f"{pf_un:.2f} -> {pf_pk:.2f} "
+              f"({pf_un / max(pf_pk, 1e-9):.1f}x less padding); max |diff| "
+              f"{max_diff:.2e}, bitwise on {bitwise_frac:.0%} of requests")
+        if csv:
+            print(f"serving/dso_{dist}_unpacked,"
+                  f"{unpacked['p50_latency_ms'] * 1e3:.1f},"
+                  f"tput={unpacked['throughput_items_per_s']:.0f}")
+            print(f"serving/dso_{dist}_packed,"
+                  f"{packed['p50_latency_ms'] * 1e3:.1f},"
+                  f"tput={packed['throughput_items_per_s']:.0f}")
+        report[dist] = {
+            "unpacked": dict(unpacked, padded_fraction=pf_un),
+            "packed": dict(packed, padded_fraction=pf_pk),
+            "speedup_items_per_s": speedup_agg,
+            "speedup_median_per_round": speedup,
+            "per_round_ratios": [float(r) for r in ratios],
+            "padded_fraction_ratio": pf_un / max(pf_pk, 1e-9),
+            "max_abs_diff_vs_unpacked": max_diff,
+            "bitwise_fraction": bitwise_frac,
+        }
+        if max_diff > DSO_TOL:
+            raise AssertionError(
+                f"packed scores diverged from unpacked by {max_diff:.2e} "
+                f"(> {DSO_TOL}) on {dist} traffic — correctness gate failed")
+        if dist == "zipf":
+            if speedup < DSO_SPEEDUP_MIN:
+                raise AssertionError(
+                    f"DSO v2 packing x{speedup:.2f} < {DSO_SPEEDUP_MIN} "
+                    f"median per-round vs PR-4 coalescing on zipf traffic "
+                    f"(per-round {[round(r, 2) for r in ratios]}) — perf "
+                    f"gate failed")
+            if pf_un < DSO_PAD_RATIO_MIN * pf_pk:
+                raise AssertionError(
+                    f"padded_fraction only {pf_un:.2f} -> {pf_pk:.2f} on "
+                    f"zipf traffic (< {DSO_PAD_RATIO_MIN}x reduction) — "
+                    f"packing is not reclaiming the tail padding")
+    return report
+
+
 def _merge_report(section: str, payload: dict):
     """Update one section of BENCH_serving.json in place (standalone
     profile runs must not clobber the other profiles' trajectory)."""
@@ -407,6 +544,10 @@ def main(csv=True, profile: str = "all"):
     cfg, bundle, params = make_climber(d_model=64, layers=2, blocks=2)
     if profile == "fke":
         _merge_report("fke", run_fke_profile(bundle, params, csv))
+        return
+    if profile == "dso_nonuniform":
+        _merge_report("dso_nonuniform",
+                      run_dso_nonuniform_profile(bundle, params, csv))
         return
     tc = TrafficConfig(candidate_counts=COUNTS, distribution="jittered",
                        n_requests=N_REQUESTS, n_history=HISTORY, seed=11)
@@ -568,6 +709,7 @@ def main(csv=True, profile: str = "all"):
               f"tput={q8['throughput_items_per_s']:.0f}")
 
     fke = run_fke_profile(bundle, params, csv)
+    dso_nonuniform = run_dso_nonuniform_profile(bundle, params, csv)
 
     report = {
         "workload": {"distribution": "jittered", "counts": list(COUNTS),
@@ -613,6 +755,7 @@ def main(csv=True, profile: str = "all"):
             "max_score_drift_vs_native": q8_drift,
         },
         "fke": fke,
+        "dso_nonuniform": dso_nonuniform,
         "gates": {
             "coalesced_bitwise": True,
             "pool_tolerance": 2e-3,
@@ -621,6 +764,8 @@ def main(csv=True, profile: str = "all"):
             "extension_speedup_min": 1.1,
             "int8_drift_max": 5e-2,
             "fke_speedup_min": FKE_SPEEDUP_MIN,
+            "dso_pack_speedup_min": DSO_SPEEDUP_MIN,
+            "dso_pad_ratio_min": DSO_PAD_RATIO_MIN,
         },
     }
     path = os.path.abspath(OUT_PATH)
@@ -662,8 +807,10 @@ def main(csv=True, profile: str = "all"):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--profile", default="all", choices=["all", "fke"],
-                    help="'fke' runs only the fused-engine A/B + gates "
-                         "(the CI gate) and merges its section into "
-                         "BENCH_serving.json")
+    ap.add_argument("--profile", default="all",
+                    choices=["all", "fke", "dso_nonuniform"],
+                    help="'fke' runs only the fused-engine A/B + gates; "
+                         "'dso_nonuniform' runs only the segment-packing "
+                         "vs PR-4-coalescing A/B + gates (both CI gates); "
+                         "each merges its section into BENCH_serving.json")
     main(profile=ap.parse_args().profile)

@@ -28,7 +28,16 @@ python -m repro.launch.serve --engine flame --impl fused --history-cache \
     --pool-slots 64 --users 4 --requests 12 --history 64 \
     --buckets 16,8 --counts 8,16 --d-model 64
 
+echo "== smoke: DSO v2 segment packing + deadline-aware flushing =="
+python -m repro.launch.serve --engine flame --impl fused --history-cache \
+    --pack-tails --deadline-ms 250 --distribution lognormal \
+    --pool-slots 64 --users 4 --requests 12 --history 64 \
+    --buckets 16 --counts 3,5,9,15 --d-model 64
+
 echo "== bench gate: FKE >= 1.3x chunked on the repeat-user profile =="
 python -m benchmarks.bench_serving --profile fke
+
+echo "== bench gate: DSO v2 packing >= 1.2x coalescing on zipf traffic =="
+python -m benchmarks.bench_serving --profile dso_nonuniform
 
 echo "CI OK"

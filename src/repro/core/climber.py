@@ -197,7 +197,9 @@ def _block_score(bp, cand, k_hist, v_hist, cfg, impl: str, *,
     FKE operands: the history K/V may arrive in the pool's stored
     precision with per-(layer, row, head) ``k_scale``/``v_scale``
     ([L,U,1,Hkv,1]) and a ``row_index`` [B] mapping batch rows onto the
-    ``U`` unique pool rows (KV-row dedup).  ``impl="fused"`` consumes them
+    ``U`` unique pool rows (KV-row dedup) — or [B, M] mapping every
+    CANDIDATE onto its own pool row (DSO v2 segment packing: one row may
+    carry segments of several users).  ``impl="fused"`` consumes them
     in-kernel; other impls materialize the dequantized gather first (see
     ``sumi.cached_candidate_attention``)."""
     b, m, d = cand.shape
@@ -271,6 +273,22 @@ def _block_extend_kv(bp, x_suf, k_pref, v_pref, cfg, impl: str):
     return kv                                  # (k, v), each [L,B,S_suf,Hkv,D]
 
 
+def _dequant_stored_entry(entry, dtype):
+    """A pool entry leaf is either a plain array or a raw ``(values,
+    scale)`` view in the pool's stored precision (``scale is None`` marks
+    a plain bf16 cast — see ``serving/kv_cache.py::raw_kv_view``).
+    Dequantize IN-GRAPH to the compute dtype: the fused extend executors
+    are compiled against raw pool specs, so the stale entry ships to the
+    device in its stored (int8: 4x smaller) representation and this is
+    the only dequantization it ever sees — same formula as the pool's
+    host-side ``dequantize_leaf``, so the result is bitwise identical."""
+    if isinstance(entry, tuple):
+        from repro.kernels.fused_score.ref import dequantize_values
+        values, scale = entry
+        return dequantize_values(values, scale, dtype)
+    return entry
+
+
 def extend_history(params, history_kv, batch: Dict, cfg: ModelConfig, *,
                    prefix_len: int, impl: str = "reference"):
     """Incremental suffix extension of a cached HistoryKV (PDA v2).
@@ -286,7 +304,12 @@ def extend_history(params, history_kv, batch: Dict, cfg: ModelConfig, *,
 
     Returns a full HistoryKV pytree (cached prefix rows + fresh suffix
     rows), bitwise-identical to ``encode_history(params, batch)`` under the
-    reference/chunked impls whenever the trust assumption holds."""
+    reference/chunked impls whenever the trust assumption holds.
+
+    ``history_kv`` leaves may be raw ``(values, scale)`` pool views in the
+    pool's stored precision — the quantized-extend-basis path: the stale
+    entry is dequantized here, inside the compiled executor, instead of on
+    the host before dispatch."""
     n = batch["history"].shape[1]
     nb = cfg.climber.num_blocks
     w = n // nb
@@ -296,8 +319,8 @@ def extend_history(params, history_kv, batch: Dict, cfg: ModelConfig, *,
     for i, xb in enumerate(_history_block_inputs(params, batch, cfg)):
         p_i = min(max(prefix_len - i * w, 0), w)
         old = history_kv[f"b{i}"]
-        k_all = jnp.moveaxis(old["k"], 1, 0)       # [L,B,w+1,Hkv,D]
-        v_all = jnp.moveaxis(old["v"], 1, 0)
+        k_all = jnp.moveaxis(_dequant_stored_entry(old["k"], xb.dtype), 1, 0)
+        v_all = jnp.moveaxis(_dequant_stored_entry(old["v"], xb.dtype), 1, 0)
         k_new, v_new = _block_extend_kv(
             params["blocks"][f"b{i}"], xb[:, p_i:],
             k_all[:, :, :p_i], v_all[:, :, :p_i], cfg, impl)

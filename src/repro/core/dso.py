@@ -17,11 +17,36 @@ Routing: an upstream request with M candidates is split greedily into bucket
 chunks in descending bucket order; the final partial chunk is padded up to
 the smallest covering bucket (the paper's "split by batch size in descending
 order").
+
+DSO v2 (segment packing + deadline-aware flushing)
+--------------------------------------------------
+Under non-uniform candidate traffic the greedy split leaves every request's
+tail chunk partially filled, and the v1 dispatcher paid that padding on
+every dispatch (``padded_fraction`` routinely 20-40% on zipf traffic).  Two
+mechanisms reclaim it:
+
+* **Segment packing** (:class:`SegmentPacker`): partial tail chunks from
+  *different requests* are packed into one ``(1, bucket)`` row as
+  independent segments.  Candidates never attend to each other under the
+  SUMI mask, so a row may carry candidates of several users as long as each
+  candidate scores against its own user's history KV — the executor
+  receives a per-candidate ``[B, bucket]`` KV slot index (the per-q-block
+  generalization of the per-row dedup ``row_index``) steering every segment
+  to its user's pooled rows.  Packing is bitwise-clean by construction and
+  subsumes KV-row dedup: same-user segments share one stacked KV slot.
+* **Deadline-aware flushing**: pending chunks are ordered earliest-deadline
+  -first (deadline-less chunks sort last; ties break on the request's
+  remaining work, then FIFO), and the collect loop sizes its wait against a
+  per-(kind, bucket) EWMA cost model — it flushes as soon as waiting any
+  longer would make the earliest collected deadline unmeetable, instead of
+  always sleeping the full flat window.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
+import itertools
+import math
 import queue
 import threading
 import time
@@ -178,7 +203,7 @@ class _Lazy:
 
 
 # ---------------------------------------------------------------------------
-# cross-request chunk coalescing (API v2)
+# cross-request chunk coalescing (API v2) + segment packing (DSO v2)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -187,22 +212,45 @@ class CoalescePolicy:
 
     ``max_batch`` is both the fill target and the executors' compiled batch
     axis; ``window_s`` bounds how long the first chunk of a batch waits for
-    co-riders before dispatching partially filled."""
+    co-riders before dispatching partially filled.  Chunks that carry a
+    deadline (DSO v2) may flush *earlier* than the window: the collect loop
+    stops waiting once ``now + estimated_dispatch_cost`` would overrun the
+    earliest collected deadline (per-(kind, bucket) EWMA cost model).
+
+    ``pack_rows`` sizes the PACKED executors' row axis independently of
+    ``max_batch`` (which still sizes the stacked unique-KV axis, i.e. how
+    many distinct users one packed dispatch can steer to): packed rows are
+    dense, so a fraction of the unpacked row capacity carries the same
+    candidate throughput at a fraction of the executor cost.  ``None``
+    defaults to ``max_batch``."""
 
     enabled: bool = True
     max_batch: int = 4
     window_s: float = 0.002
+    pack_rows: Optional[int] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.window_s < 0:
             raise ValueError(f"window_s must be >= 0, got {self.window_s}")
+        if self.pack_rows is not None and self.pack_rows < 1:
+            raise ValueError(f"pack_rows must be >= 1, got {self.pack_rows}")
 
     @property
     def batch(self) -> int:
         """Compiled batch-axis size: coalescing off degrades to (1, bucket)."""
         return self.max_batch if self.enabled else 1
+
+    @property
+    def rows(self) -> int:
+        """Compiled row-axis size of PACKED executors."""
+        if not self.enabled:
+            return 1
+        return self.pack_rows if self.pack_rows is not None else self.batch
+
+
+_SEQ = itertools.count()
 
 
 @dataclasses.dataclass
@@ -210,6 +258,79 @@ class _PendingChunk:
     args: Tuple[np.ndarray, ...]      # host arrays, each with leading axis 1
     future: "Future"                  # concurrent.futures.Future per chunk
     dedup_token: Optional[Hashable] = None   # stable identity of lead args
+    valid: int = 0                    # real candidates in this chunk
+    deadline: Optional[float] = None  # absolute perf_counter deadline
+    remaining: int = 0                # request work left incl. this chunk
+    seq: int = dataclasses.field(default_factory=lambda: next(_SEQ))
+    enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
+
+    def _key(self):
+        # EDF first; deadline-less chunks sort last.  Ties break on the
+        # owning request's remaining work (shortest-remaining-work), then
+        # FIFO sequence for determinism.
+        return (self.deadline if self.deadline is not None else math.inf,
+                self.remaining, self.seq)
+
+    def __lt__(self, other: "_PendingChunk") -> bool:
+        return self._key() < other._key()
+
+
+class SegmentPacker:
+    """First-fit packer of tail-chunk segments into shared executor rows.
+
+    One packer instance plans ONE packed dispatch: up to ``max_rows`` rows
+    of ``bucket`` candidate slots, fed at most ``max_kv`` distinct KV
+    identities (the compiled leading axis of the stacked unique-KV
+    operands).  ``try_add(valid, ident)`` places a segment of ``valid``
+    candidates belonging to KV identity ``ident`` into the first row with
+    room (never splitting a segment across rows — a segment IS one
+    request's chunk, so no segment ever crosses a request boundary by
+    construction) and returns its ``(row, offset, kv_slot)`` placement, or
+    ``None`` when the segment doesn't fit this dispatch."""
+
+    def __init__(self, bucket: int, max_rows: int, max_kv: int):
+        assert bucket >= 1 and max_rows >= 1 and max_kv >= 1
+        self.bucket = bucket
+        self.max_rows = max_rows
+        self.max_kv = max_kv
+        self.fills: List[int] = []            # candidate slots used per row
+        self.placements: List[Tuple[int, int, int]] = []  # (row, off, slot)
+        self.slot_of: Dict[Hashable, int] = {}
+        self.n_slots = 0
+
+    def try_add(self, valid: int, ident: Hashable
+                ) -> Optional[Tuple[int, int, int]]:
+        if not 1 <= valid <= self.bucket:
+            raise ValueError(f"segment of {valid} candidates does not fit a "
+                             f"{self.bucket}-slot row")
+        slot = self.slot_of.get(ident)
+        if slot is None and self.n_slots >= self.max_kv:
+            return None
+        row = next((i for i, f in enumerate(self.fills)
+                    if f + valid <= self.bucket), None)
+        if row is None:
+            if len(self.fills) >= self.max_rows:
+                return None
+            row = len(self.fills)
+            self.fills.append(0)
+        if slot is None:
+            slot = self.n_slots
+            self.slot_of[ident] = slot
+            self.n_slots += 1
+        off = self.fills[row]
+        self.fills[row] += valid
+        place = (row, off, slot)
+        self.placements.append(place)
+        return place
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.fills)
+
+    def is_full(self) -> bool:
+        """No further segment (not even a 1-candidate one) can be placed."""
+        return (len(self.fills) == self.max_rows
+                and all(f >= self.bucket for f in self.fills))
 
 
 class CoalescingOrchestrator:
@@ -235,13 +356,17 @@ class CoalescingOrchestrator:
 
     Per (kind, bucket) there are ``n_streams`` worker threads, each owning
     one executor (the CUDA-stream analogue).  A worker that pops the first
-    pending chunk keeps collecting until ``max_batch`` rows are filled or
-    ``window_s`` elapses, stacks the args along the batch axis (ONE
-    device transfer per argument per dispatch — the PDA packed-transfer
-    insight applied at dispatch granularity), runs the executor once, and
-    scatters result rows back to the per-chunk futures.  Rows are
-    independent under XLA, so coalesced scores are bitwise-identical to
-    solo dispatches (asserted in tests).
+    pending chunk keeps collecting until the dispatch is full, the
+    ``window_s`` flush window elapses, or — when collected chunks carry
+    deadlines — waiting longer would overrun the earliest deadline given
+    the (kind, bucket) EWMA dispatch-cost estimate.  Pending chunks pop in
+    EDF order (ties: shortest remaining work, then FIFO).  The collected
+    args are stacked along the batch axis (ONE device transfer per argument
+    per dispatch — the PDA packed-transfer insight applied at dispatch
+    granularity), run through the executor once, and result rows scatter
+    back to the per-chunk futures.  Rows are independent under XLA, so
+    coalesced scores are bitwise-identical to solo dispatches (asserted in
+    tests).
 
     PDA v2 device-residency hooks:
 
@@ -267,9 +392,25 @@ class CoalescingOrchestrator:
       framework executors materialize ``kv[idx]`` inside the jit, while
       the FKE (``impl="fused"``) executors forward the index into the
       fused kernel's KV block reads, making the gather free.  Saved
-      restacks are reported as ``dedup_rows_saved``."""
+      restacks are reported as ``dedup_rows_saved``.
+
+    DSO v2 segment packing:
+
+    * ``packed_kinds`` maps a kind to its number of leading KV args, like
+      ``dedup_kinds`` — but the dispatcher additionally packs partial
+      chunks from different requests into shared rows: ``pad_slice_fn``
+      must return the chunk's candidate slice UNPADDED (``(1, valid)``,
+      last arg), and the executor signature becomes ``(*kv_rows,
+      seg_index [B, bucket] int32, candidates [B, bucket] int32)`` where
+      ``seg_index`` maps every candidate slot to its KV row (padding slots
+      point at row 0 and carry the ``-1`` candidate sentinel).  Each
+      chunk's future resolves to the exact ``[1, valid, ...]`` slice of
+      its segment.  Packing subsumes dedup (same-identity chunks share a
+      KV slot; savings still count into ``dedup_rows_saved``); a kind may
+      not be registered in both maps."""
 
     _DEFAULT_KIND = "default"
+    _COST_EWMA = 0.3          # per-(kind, bucket) dispatch-cost smoothing
 
     def __init__(self, build_fn: Callable,
                  buckets: Optional[Sequence[int]] = None,
@@ -278,7 +419,8 @@ class CoalescingOrchestrator:
                  n_streams: int = 2,
                  families: Optional[Dict[str, Sequence[int]]] = None,
                  dedup_kinds: Optional[Dict[str, int]] = None,
-                 device_output_kinds: Sequence[str] = ()):
+                 device_output_kinds: Sequence[str] = (),
+                 packed_kinds: Optional[Dict[str, int]] = None):
         self._legacy = families is None
         if families is None:
             # adapt the single-family callbacks to the kinds signatures once
@@ -301,18 +443,31 @@ class CoalescingOrchestrator:
         self.gather = gather_fn
 
         self._dedup: Dict[str, int] = dict(dedup_kinds or {})
+        self._packed: Dict[str, int] = dict(packed_kinds or {})
+        overlap = set(self._dedup) & set(self._packed)
+        if overlap:
+            raise ValueError(f"kinds {sorted(overlap)} registered as both "
+                             f"dedup and packed — packing subsumes dedup")
         self._device_output = frozenset(device_output_kinds)
         self.chunk_count = 0
         self.dispatch_count = 0
         self.rows_dispatched = 0       # real (non-padding) rows
-        self.dedup_rows_saved = 0      # restacks avoided by KV-row dedup
+        self.dedup_rows_saved = 0      # restacks avoided by dedup/packing
+        self.packed_rows = 0           # rows carrying >= 1 packed segment
+        self.packed_segments = 0       # segments dispatched via packing
+        self.queue_delay_total_s = 0.0
+        self.queue_delay_count = 0
         self.kind_chunks: Dict[str, int] = {k: 0 for k in self.families}
         self.kind_dispatches: Dict[str, int] = {k: 0 for k in self.families}
+        # per-(kind, bucket) candidate-slot occupancy: slots dispatched vs
+        # real candidates in them — 1 - valid/slots is the padded fraction
+        self.slot_count: Dict[Tuple[str, int], int] = {}
+        self.valid_count: Dict[Tuple[str, int], int] = {}
+        self._cost: Dict[Tuple[str, int], float] = {}   # EWMA dispatch cost
         self._stat_lock = threading.Lock()
         self._stop = False
 
-        self._pending: Dict[Tuple[str, int],
-                            "collections.deque[_PendingChunk]"] = {}
+        self._pending: Dict[Tuple[str, int], List[_PendingChunk]] = {}
         self._cond: Dict[Tuple[str, int], threading.Condition] = {}
         self._threads: List[threading.Thread] = []
         self.build_time_s = 0.0
@@ -320,8 +475,10 @@ class CoalescingOrchestrator:
         t0 = time.perf_counter()
         for kind, bs in self.families.items():
             for b in bs:
-                self._pending[(kind, b)] = collections.deque()
+                self._pending[(kind, b)] = []
                 self._cond[(kind, b)] = threading.Condition()
+                self.slot_count[(kind, b)] = 0
+                self.valid_count[(kind, b)] = 0
                 compiled = build_fn(kind, b, policy.batch)
                 for s in range(n_streams):
                     ex = Executor(b, compiled, eid=len(self._threads))
@@ -335,11 +492,16 @@ class CoalescingOrchestrator:
 
     # ---- submission ----
     def submit(self, request, m: int, kind: Optional[str] = None,
-               dedup_token: Optional[Hashable] = None):
+               dedup_token: Optional[Hashable] = None,
+               deadline: Optional[float] = None):
         """Non-blocking: split into chunks, enqueue each onto its
         (kind, bucket) coalescing queue; returns a lazy future gathering the
         chunk rows.  ``dedup_token``, when given, is a stable identity for
-        the chunk's dedupable leading args (see the class docstring)."""
+        the chunk's dedupable/packable leading args (see the class
+        docstring); ``deadline`` is an absolute ``time.perf_counter``
+        instant the request's dispatch should start by — chunks carrying
+        one pop earliest-deadline-first and flush early when the cost model
+        says waiting longer would miss it."""
         if kind is None:
             kind = next(iter(self.families))
         plan = split_request(m, self.families[kind])
@@ -353,8 +515,10 @@ class CoalescingOrchestrator:
             futs.append(f)
             cond = self._cond[(kind, c.bucket)]
             with cond:
-                self._pending[(kind, c.bucket)].append(
-                    _PendingChunk(args, f, dedup_token))
+                heapq.heappush(
+                    self._pending[(kind, c.bucket)],
+                    _PendingChunk(args, f, dedup_token, valid=c.valid,
+                                  deadline=deadline, remaining=m - c.start))
                 cond.notify()
 
         def resolve():
@@ -364,35 +528,111 @@ class CoalescingOrchestrator:
         return _Lazy(resolve)
 
     def score(self, request, m: int, kind: Optional[str] = None,
-              dedup_token: Optional[Hashable] = None):
-        return self.submit(request, m, kind, dedup_token).result()
+              dedup_token: Optional[Hashable] = None,
+              deadline: Optional[float] = None):
+        return self.submit(request, m, kind, dedup_token, deadline).result()
 
     # ---- dispatcher ----
+    @staticmethod
+    def _ident(c: _PendingChunk, n_lead: int) -> Hashable:
+        return c.dedup_token if c.dedup_token is not None \
+            else tuple(id(a) for a in c.args[:n_lead])
+
+    def _collect(self, kind: str, bucket: int,
+                 pending: List[_PendingChunk], cond: threading.Condition
+                 ) -> Tuple[List[_PendingChunk], Optional[SegmentPacker]]:
+        """Pop the first chunk and keep collecting co-riders (caller holds
+        ``cond``).  The flush decision is deadline/cost-aware: with no
+        deadlines in the collected set this is the v1 window policy (the
+        window opens when collection starts, not at enqueue — a chunk that
+        already sat in the queue past ``window_s`` would otherwise always
+        dispatch solo); once any collected chunk carries a deadline, the
+        wait is additionally capped at ``earliest_deadline - est_cost``."""
+        pol = self.policy
+        n_lead = self._packed.get(kind)
+        packer = SegmentPacker(bucket, pol.rows, pol.batch) \
+            if n_lead is not None else None
+        batch: List[_PendingChunk] = []
+
+        def take() -> bool:
+            """Place the earliest-deadline pending chunk that FITS this
+            dispatch.  For packed kinds a large head segment may not fit
+            the remaining row space while smaller later chunks still do —
+            skipping it costs the head nothing (it couldn't ride this
+            dispatch anyway and leads the next one), and packing the
+            smaller co-riders is exactly what reclaims the padding."""
+            if packer is None:
+                if len(batch) >= pol.batch or not pending:
+                    return False
+                batch.append(heapq.heappop(pending))
+                return True
+            skipped: List[_PendingChunk] = []
+            got = False
+            while pending:
+                c = heapq.heappop(pending)
+                if packer.try_add(c.valid, self._ident(c, n_lead)) \
+                        is not None:
+                    batch.append(c)
+                    got = True
+                    break
+                skipped.append(c)
+            for c in skipped:
+                heapq.heappush(pending, c)
+            return got
+
+        took = take()
+        assert took, "first chunk must always fit an empty dispatch"
+        if pol.enabled and (pol.max_batch > 1 or packer is not None):
+            window_end = time.perf_counter() + pol.window_s
+            while not self._stop:
+                full = packer.is_full() if packer is not None \
+                    else len(batch) >= pol.max_batch
+                if full:
+                    break
+                if pending:
+                    if take():
+                        continue
+                    break        # nothing pending fits: flush what we have
+                if packer is not None and len(batch) >= pol.max_batch:
+                    # the dispatch already carries the v1 fill target's
+                    # worth of chunks in fewer (denser) rows — waiting for
+                    # MORE co-riders would trade latency (and, by Little's
+                    # law, throughput at fixed concurrency) for slot
+                    # capacity the in-flight population can't fill anyway.
+                    # Deeper queues still pack up to the slot capacity
+                    # through the take() loop above without ever waiting.
+                    break
+                now = time.perf_counter()
+                target = window_end
+                dls = [c.deadline for c in batch if c.deadline is not None]
+                if dls:
+                    est = self._cost.get((kind, bucket), 0.0)
+                    target = min(target, min(dls) - est)
+                left = target - now
+                if left <= 0:
+                    break
+                cond.wait(timeout=left)
+        now = time.perf_counter()
+        delay = sum(now - c.enqueue_t for c in batch)
+        with self._stat_lock:
+            self.queue_delay_total_s += delay
+            self.queue_delay_count += len(batch)
+        return batch, packer
+
     def _worker(self, kind: str, bucket: int, ex: Executor):
         key = (kind, bucket)
         cond, pending = self._cond[key], self._pending[key]
-        pol = self.policy
         while True:
             with cond:
                 while not pending and not self._stop:
                     cond.wait()
                 if not pending and self._stop:
                     return
-                batch = [pending.popleft()]
-                if pol.enabled and pol.max_batch > 1:
-                    # window opens when collection starts, not at enqueue —
-                    # a chunk that already sat in the queue past window_s
-                    # would otherwise always dispatch solo
-                    deadline = time.perf_counter() + pol.window_s
-                    while len(batch) < pol.max_batch and not self._stop:
-                        if pending:
-                            batch.append(pending.popleft())
-                            continue
-                        left = deadline - time.perf_counter()
-                        if left <= 0:
-                            break
-                        cond.wait(timeout=left)
-            self._dispatch(kind, ex, batch)
+                batch, packer = self._collect(kind, bucket, pending, cond)
+            if packer is not None:
+                self._dispatch_packed(kind, bucket, ex, batch, packer)
+            else:
+                self._dispatch(kind, bucket, ex, batch)
 
     @staticmethod
     def _stack_rows(rows: List, batch: int):
@@ -405,7 +645,25 @@ class CoalescingOrchestrator:
             rows = list(rows) + [xp.zeros_like(rows[0])] * (batch - len(rows))
         return xp.concatenate(rows, axis=0)
 
-    def _dispatch(self, kind: str, ex: Executor,
+    def _note_dispatch(self, kind: str, bucket: int, n_chunks: int,
+                       rows_used: int, valid: int, saved: int,
+                       cost_s: float, packed: bool):
+        key = (kind, bucket)
+        with self._stat_lock:
+            self.dispatch_count += 1
+            self.kind_dispatches[kind] += 1
+            self.rows_dispatched += n_chunks
+            self.dedup_rows_saved += saved
+            self.slot_count[key] += rows_used * bucket
+            self.valid_count[key] += valid
+            if packed:
+                self.packed_rows += rows_used
+                self.packed_segments += n_chunks
+            old = self._cost.get(key)
+            self._cost[key] = cost_s if old is None else \
+                (1 - self._COST_EWMA) * old + self._COST_EWMA * cost_s
+
+    def _dispatch(self, kind: str, bucket: int, ex: Executor,
                   batch: List[_PendingChunk]):
         n = len(batch)
         try:
@@ -422,8 +680,7 @@ class CoalescingOrchestrator:
                 uniq: List[tuple] = []
                 idx = np.zeros(B, np.int32)
                 for i, c in enumerate(batch):
-                    ident = c.dedup_token if c.dedup_token is not None \
-                        else tuple(id(a) for a in c.args[:n_lead])
+                    ident = self._ident(c, n_lead)
                     slot = slot_of.get(ident)
                     if slot is None:
                         slot = len(uniq)
@@ -439,20 +696,62 @@ class CoalescingOrchestrator:
                 rests = [c.args for c in batch]
             for j in range(len(rests[0])):
                 stacked.append(self._stack_rows([r[j] for r in rests], B))
+            t0 = time.perf_counter()
             out = ex(*stacked)
             jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
             if kind in self._device_output:
                 host = out        # stays device-resident (pool entries)
             else:
                 host = jax.tree.map(np.asarray, out)   # pytree outputs OK
-            with self._stat_lock:
-                self.dispatch_count += 1
-                self.kind_dispatches[kind] += 1
-                self.rows_dispatched += n
-                self.dedup_rows_saved += n - n_uniq
+            self._note_dispatch(kind, bucket, n, rows_used=n,
+                                valid=sum(c.valid for c in batch),
+                                saved=n - n_uniq, cost_s=dt, packed=False)
             for i, c in enumerate(batch):
                 c.future.set_result(
                     jax.tree.map(lambda a: a[i:i + 1], host))
+        except BaseException as e:  # noqa: BLE001 — fail every rider
+            for c in batch:
+                if not c.future.done():
+                    c.future.set_exception(e)
+
+    def _dispatch_packed(self, kind: str, bucket: int, ex: Executor,
+                         batch: List[_PendingChunk], packer: SegmentPacker):
+        """One packed dispatch: stack each unique KV identity once, build
+        the ``[B, bucket]`` seg-index and candidate planes from the packer's
+        placements, run the executor, and scatter each segment's exact
+        ``[1, valid, ...]`` output slice back to its chunk future."""
+        n = len(batch)
+        try:
+            B = self.policy.batch
+            n_lead = self._packed[kind]
+            # stack each unique KV identity once, in slot order
+            uniq_args: List[Optional[tuple]] = [None] * packer.n_slots
+            for c in batch:
+                slot = packer.slot_of[self._ident(c, n_lead)]
+                if uniq_args[slot] is None:
+                    uniq_args[slot] = c.args[:n_lead]
+            stacked = [self._stack_rows([u[j] for u in uniq_args], B)
+                       for j in range(n_lead)]
+            rows = self.policy.rows
+            seg_idx = np.zeros((rows, bucket), np.int32)
+            cands = np.full((rows, bucket), -1, np.int32)
+            for c, (row, off, slot) in zip(batch, packer.placements):
+                cands[row, off:off + c.valid] = np.asarray(c.args[n_lead])[0]
+                seg_idx[row, off:off + c.valid] = slot
+            stacked += [seg_idx, cands]
+            t0 = time.perf_counter()
+            out = ex(*stacked)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            host = jax.tree.map(np.asarray, out)
+            self._note_dispatch(kind, bucket, n, rows_used=packer.n_rows,
+                                valid=sum(c.valid for c in batch),
+                                saved=n - packer.n_slots, cost_s=dt,
+                                packed=True)
+            for c, (row, off, _) in zip(batch, packer.placements):
+                c.future.set_result(jax.tree.map(
+                    lambda a: a[row:row + 1, off:off + c.valid], host))
         except BaseException as e:  # noqa: BLE001 — fail every rider
             for c in batch:
                 if not c.future.done():
@@ -462,6 +761,8 @@ class CoalescingOrchestrator:
     def stats(self) -> Dict[str, float]:
         with self._stat_lock:
             d = max(self.dispatch_count, 1)
+            slots = sum(self.slot_count.values())
+            valid = sum(self.valid_count.values())
             out = {
                 "chunks": self.chunk_count,
                 "dispatches": self.dispatch_count,
@@ -469,11 +770,28 @@ class CoalescingOrchestrator:
                 "avg_fill": self.rows_dispatched / d,
                 "batch_axis": self.policy.batch,
                 "dedup_rows_saved": self.dedup_rows_saved,
+                "packed_rows": self.packed_rows,
+                "packed_segments": self.packed_segments,
+                "cand_slots": slots,
+                "cand_valid": valid,
+                "padded_fraction": 1.0 - valid / slots if slots else 0.0,
+                "queue_delay_ms": (1e3 * self.queue_delay_total_s
+                                   / max(self.queue_delay_count, 1)),
             }
             if not self._legacy:
                 for kind in self.families:
                     out[f"chunks_{kind}"] = self.kind_chunks[kind]
                     out[f"dispatches_{kind}"] = self.kind_dispatches[kind]
+                    out[f"cand_slots_{kind}"] = sum(
+                        s for (k, _), s in self.slot_count.items()
+                        if k == kind)
+                    out[f"cand_valid_{kind}"] = sum(
+                        v for (k, _), v in self.valid_count.items()
+                        if k == kind)
+                for (kind, b), s in self.slot_count.items():
+                    if s:
+                        out[f"fill_{kind}_b{b}"] = \
+                            self.valid_count[(kind, b)] / s
             return out
 
     def shutdown(self):

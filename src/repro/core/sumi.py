@@ -12,6 +12,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import attention as A
 
@@ -44,6 +45,44 @@ def _dequant_gather(k, v, k_scale, v_scale, row_index, dtype):
     return _prep(k, v, k_scale, v_scale, row_index, dtype)
 
 
+def _segment_packed_attention(q, k_hist, v_hist, k_cand, v_cand, seg):
+    """Cached-candidate SUMI attention for a segment-packed row (framework
+    impls; ``impl="fused"`` handles the 2-D index natively in ops.py).
+
+    ``seg`` [B, M] maps every candidate to its user's (dequantized) pool
+    row in ``k_hist``/``v_hist`` [U, S, Hkv, D].  The computation mirrors
+    ``models/attention.py::reference_attention`` op for op — einsum scores
+    scaled by 1/sqrt(D), -1e30 mask fill, softmax over the [M, S+M] axis,
+    one output reduction over S+M — with the history operands gathered per
+    CANDIDATE instead of shared per row.  Masked positions (other
+    segments' candidates) contribute exact zeros, and every reduction has
+    the same length and per-element operand values as the unpacked
+    shared-KV row, so packed scores are bitwise-identical to unpacked
+    dispatches wherever the framework impl routes to the reference path
+    (all serving-scale cached executors do; asserted in
+    tests/test_dso_v2.py)."""
+    b, m, h, d = q.shape
+    hkv = k_cand.shape[2]
+    g = h // hkv
+    s = k_hist.shape[1]
+    kh = jnp.take(k_hist, seg, axis=0)             # [B, M, S, Hkv, D]
+    vh = jnp.take(v_hist, seg, axis=0)
+    qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d)
+    s_hist = jnp.einsum("bmhgd,bmshd->bhgms", qf,
+                        kh.astype(jnp.float32)) / np.sqrt(d)
+    s_cand = jnp.einsum("bmhgd,bkhd->bhgmk", qf,
+                        k_cand.astype(jnp.float32)) / np.sqrt(d)
+    scores = jnp.concatenate([s_hist, s_cand], axis=-1)   # [b,hkv,g,m,S+M]
+    mask = A.make_mask(m, s + m, "sumi", n_history=s, q_offset=s)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    vc = jnp.broadcast_to(v_cand.astype(jnp.float32)[:, None],
+                          (b, m, m, hkv, d))
+    v_all = jnp.concatenate([vh.astype(jnp.float32), vc], axis=2)
+    o = jnp.einsum("bhgmk,bmkhd->bmhgd", w, v_all)
+    return o.reshape(b, m, h, d).astype(q.dtype)
+
+
 def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
                                impl: str = "reference", temperature=None,
                                k_scale=None, v_scale=None, row_index=None):
@@ -65,7 +104,18 @@ def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
     ``k_scale``/``v_scale``, and ``row_index`` [B] selects each batch
     row's pool row (the DSO's KV-row dedup).  ``impl="fused"`` consumes
     them in-kernel (no dequant / gather / concat materialization); every
-    other impl materializes the framework operands first."""
+    other impl materializes the framework operands first.
+
+    DSO v2 segment packing: ``row_index`` may instead be ``[B, M]`` — a
+    per-CANDIDATE pool-row index, so one batch row can carry candidate
+    segments of *different* users (each candidate attends to its own
+    user's history + itself; candidates never see each other under SUMI,
+    so packing is exact by construction).  ``impl="fused"`` gathers the
+    stored rows per candidate (jnp path) or steers per-q-block KV reads
+    through scalar prefetch (kernel path); the framework impls run
+    :func:`_segment_packed_attention` — the reference computation with
+    per-candidate gathered history, bitwise-identical to the unpacked
+    shared-KV dispatch."""
     if temperature is not None:
         q = q / jnp.asarray(temperature, q.dtype)
     if impl == "fused":
@@ -73,6 +123,11 @@ def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
         return fs_ops.fused_cached_attention(
             q, k_hist, v_hist, k_cand, v_cand, k_scale=k_scale,
             v_scale=v_scale, row_index=row_index)
+    if row_index is not None and jnp.ndim(row_index) == 2:
+        k_hist, v_hist = _dequant_gather(k_hist, v_hist, k_scale, v_scale,
+                                         None, q.dtype)
+        return _segment_packed_attention(q, k_hist, v_hist, k_cand, v_cand,
+                                         jnp.asarray(row_index, jnp.int32))
     if k_scale is not None or v_scale is not None or row_index is not None \
             or k_hist.dtype != q.dtype:
         k_hist, v_hist = _dequant_gather(k_hist, v_hist, k_scale, v_scale,
@@ -100,7 +155,13 @@ def extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
     (chunked routes there at serving scales).  The FKE operand extensions
     (``k_scale``/``v_scale``/``row_index``) follow
     :func:`cached_candidate_attention`; a zero-length prefix degenerates
-    to plain causal attention and routes to the framework impls."""
+    to plain causal attention and routes to the framework impls.  Suffix
+    positions are causally ordered, so segment packing does not apply —
+    a per-candidate (2-D) ``row_index`` is rejected."""
+    if row_index is not None and jnp.ndim(row_index) == 2:
+        raise ValueError("extend attention is causal within the suffix — "
+                         "segment-packed (per-candidate) row_index only "
+                         "applies to cached candidate scoring")
     if temperature is not None:
         q = q / jnp.asarray(temperature, q.dtype)
     if impl == "fused" and k_prefix.shape[1] > 0:

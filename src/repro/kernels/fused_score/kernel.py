@@ -12,10 +12,15 @@ composed from four dispatches (host dequantize → ``kv[idx]`` row gather →
     scale; tiles are cast on the MXU input path and the scale is folded
     into the score / accumulator multiplies, so the dequantized history
     never touches HBM;
-  * **index-folded dedup gather** — a scalar-prefetched ``row_index [B]``
-    drives the KV BlockSpec index map: batch row ``b`` reads the blocks of
-    pool row ``row_index[b]`` directly, making the DSO's KV-row dedup free
-    on every backend (no gathered copy, just redirected DMAs).
+  * **index-folded dedup gather** — a scalar-prefetched per-q-block
+    ``row_index [B, nq]`` drives the KV BlockSpec index map: q block
+    ``qi`` of batch row ``b`` reads the blocks of pool row
+    ``row_index[b, qi]`` directly, making the DSO's KV-row dedup free on
+    every backend (no gathered copy, just redirected DMAs).  The per-q-
+    block granularity is what DSO v2 segment packing rides on: one packed
+    row carries candidate segments of several users, each q block steered
+    to its own user's pooled history (segments aligned to ``bq`` on this
+    path; ops.py samples the index at each block's first candidate).
 
 Two masking modes share the machinery:
 
@@ -50,7 +55,7 @@ def _fused_kernel(idx_ref, ks_ref, vs_ref, q_ref, kh_ref, vh_ref,
     bh = pl.program_id(0)
     qi = pl.program_id(1)
     kj = pl.program_id(2)
-    row = idx_ref[bh // h]                   # pool row of this batch row
+    row = idx_ref[bh // h, qi]               # pool row of this q block
     kvh = (bh % h) // g                      # kv head of this q head
 
     @pl.when(kj == 0)
@@ -121,7 +126,9 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
                        interpret: bool = True):
     """q [B,H,Mp,D] (pre-scaled); k_hist/v_hist [U,Hkv,Sp,D] stored dtype;
     k_scale/v_scale [U,Hkv] f32 multipliers (1.0 for unquantized);
-    k_cand/v_cand [B,Hkv,Mp,D]; row_index [B] int32 pool-row gather.
+    k_cand/v_cand [B,Hkv,Mp,D]; row_index [B, Mp//bq] int32 per-q-block
+    pool-row gather (constant per row for plain dedup; per-segment for
+    DSO v2 packed rows).
 
     ``sq``/``s_hist`` are the unpadded query/history lengths; Mp/Sp/D are
     pre-padded to block and 128-lane multiples by ops.py (``s_hist >= 1``
@@ -148,10 +155,10 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
         return (bh // h, bh % h, qi, 0)
 
     def kh_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
-        # the dedup gather, folded into the block read: batch row b pulls
-        # the blocks of pool row idx_ref[b] (clamped for self steps, whose
-        # loaded block is unused)
-        return (idx_ref[bh // h], (bh % h) // g,
+        # the dedup/packing gather, folded into the block read: q block qi
+        # of batch row b pulls the blocks of pool row idx_ref[b, qi]
+        # (clamped for self steps, whose loaded block is unused)
+        return (idx_ref[bh // h, qi], (bh % h) // g,
                 jnp.minimum(kj, hist_steps - 1), 0)
 
     def kc_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):

@@ -82,16 +82,29 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
     hkv = k_cand.shape[2]
     g = h // hkv
     qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d) / np.sqrt(d)
+    seg = row_index is not None and row_index.ndim == 2
     if row_index is not None:
         # the dedup gather runs on the STORED values (int8: 4x fewer
-        # bytes than the dequantized rows the framework path gathered)
+        # bytes than the dequantized rows the framework path gathered).
+        # A 2-D (per-candidate) index — DSO v2 segment packing — gathers
+        # each candidate's own pool row: [B,M,S,Hkv,D] history operands
+        # and [B,M,Hkv] scales
         k_hist = jnp.take(k_hist, row_index, axis=0)
         v_hist = jnp.take(v_hist, row_index, axis=0)
         if k_scale is not None:
             k_scale = jnp.take(k_scale, row_index, axis=0)
         if v_scale is not None:
             v_scale = jnp.take(v_scale, row_index, axis=0)
-    s_hist = _segment_scores(qf, k_hist, k_scale)    # [b,hkv,g,m,S]
+    if seg:
+        # per-candidate history segment: same per-(m, s) dot products as
+        # the shared-history einsum, just indexed per candidate
+        s_hist = jnp.einsum("bmhgd,bmshd->bhgms", qf,
+                            k_hist.astype(jnp.float32))
+        if k_scale is not None:
+            s_hist = s_hist * jnp.moveaxis(
+                k_scale, 2, 1)[:, :, None, :, None]      # [b,hkv,1,m,1]
+    else:
+        s_hist = _segment_scores(qf, k_hist, k_scale)    # [b,hkv,g,m,S]
 
     if mode == "cached":
         # self segment: query i sees exactly key i — the diagonal einsum
@@ -101,10 +114,16 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
         p_hist = jnp.exp(s_hist - m_all[..., None])
         p_self = jnp.exp(s_self - m_all)
         l = p_hist.sum(axis=-1) + p_self
-        o = jnp.einsum("bhgms,bshd->bmhgd", p_hist,
-                       v_hist.astype(jnp.float32))
-        if v_scale is not None:
-            o = o * v_scale[:, None, :, None, None]
+        if seg:
+            o = jnp.einsum("bhgms,bmshd->bmhgd", p_hist,
+                           v_hist.astype(jnp.float32))
+            if v_scale is not None:
+                o = o * v_scale[:, :, :, None, None]     # [b,m,hkv,1,1]
+        else:
+            o = jnp.einsum("bhgms,bshd->bmhgd", p_hist,
+                           v_hist.astype(jnp.float32))
+            if v_scale is not None:
+                o = o * v_scale[:, None, :, None, None]
         o = o + jnp.einsum("bhgm,bmhd->bmhgd", p_self,
                            v_cand.astype(jnp.float32))
     else:                                            # extend (causal)
@@ -160,8 +179,22 @@ def _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
     ones = jnp.ones((u, hkv), jnp.float32)
     ks = ones if k_scale is None else k_scale
     vs = ones if v_scale is None else v_scale
-    idx = jnp.arange(b, dtype=jnp.int32) if row_index is None \
-        else row_index.astype(jnp.int32)
+    # per-q-block KV row index [B, nq] in scalar prefetch: the DSO v2
+    # generalization of the per-row dedup index — every q block of every
+    # batch row reads its own pool row's KV blocks, so a segment-packed
+    # row steers each candidate segment to its own user's history.  A
+    # per-candidate (2-D) index requires segments aligned to ``bq``
+    # boundaries (the packer's kernel-path contract); it is sampled at
+    # each q block's first candidate.
+    nq = qp.shape[2] // bq
+    if row_index is None:
+        idx = jnp.tile(jnp.arange(b, dtype=jnp.int32)[:, None], (1, nq))
+    elif row_index.ndim == 1:
+        idx = jnp.tile(row_index.astype(jnp.int32)[:, None], (1, nq))
+    else:
+        full = jnp.pad(row_index.astype(jnp.int32),
+                       ((0, 0), (0, nq * bq - m)), mode="edge")
+        idx = full[:, ::bq]
     out = fused_score_kernel(idx, ks, vs, qp.astype(q.dtype), khp, vhp,
                              kcp, vcp, mode=mode, sq=m, s_hist=s_hist,
                              bq=bq, bk=bk, interpret=interpret)
@@ -181,6 +214,23 @@ def _fused_attention(q, k_hist, v_hist, k_cand, v_cand, *, mode: str,
     u, hkv = k_hist.shape[0], k_hist.shape[2]
     ks = _norm_scale(k_scale, u, hkv)
     vs = _norm_scale(v_scale, u, hkv)
+    if row_index is not None and row_index.ndim == 2:
+        if mode != "cached":
+            raise ValueError("per-candidate (segment-packed) row_index only "
+                             "applies to cached candidate scoring")
+        if row_index.shape != q.shape[:2]:
+            raise ValueError(f"2-D row_index must be [B, M] = {q.shape[:2]}, "
+                             f"got {row_index.shape}")
+        if path == "auto":
+            # the kernel path steers KV per q BLOCK, so packed segments
+            # must be bq-aligned — a contract the serving packer does not
+            # yet guarantee (ROADMAP: packer `align` knob).  Sampling an
+            # unaligned index at block starts would silently score
+            # candidates against the wrong user's history, so auto routes
+            # per-candidate indices to the jnp formulation on every
+            # backend; explicit path="kernel" remains the tested
+            # aligned-segment contract.
+            path = "jnp"
     if k_hist.shape[1] == 0:
         raise ValueError("fused attention needs a non-empty history/prefix "
                          "segment (degenerate cases route to the framework "

@@ -85,7 +85,10 @@ def serve_rec(args):
                                         args.extend_buckets.split(",")
                                         if b.strip())
                                   if args.extend_buckets.strip() else None),
-                  extend_refresh_limit=args.extend_refresh_limit)
+                  extend_refresh_limit=args.extend_refresh_limit,
+                  pack_tails=args.pack_tails,
+                  pack_rows=args.pack_rows if args.pack_rows > 0 else None,
+                  deadline_s=args.deadline_ms * 1e-3)
     else:
         kw.update(n_workers=args.concurrency)
     eng = create_engine(args.engine, bundle, params, **kw)
@@ -94,7 +97,9 @@ def serve_rec(args):
         print(f"[serve] executor pool built in {eng.dso.build_time_s:.2f}s "
               f"(families {fams}, impl {args.impl}, "
               f"batch axis {eng.dso.policy.batch}, "
-              f"coalesce={'on' if eng.dso.policy.enabled else 'off'})")
+              f"coalesce={'on' if eng.dso.policy.enabled else 'off'}, "
+              f"pack_tails={'on' if args.pack_tails else 'off'}, "
+              f"deadline={args.deadline_ms:g}ms)")
         if args.history_cache:
             budget = (f"{args.pool_budget_mb:g} MB budget"
                       if args.pool_budget_mb else "no byte budget")
@@ -126,7 +131,7 @@ def main():
     ap.add_argument("--buckets", default="64,32,16")
     ap.add_argument("--counts", default="16,32,64")
     ap.add_argument("--distribution", default="uniform",
-                    choices=["uniform", "zipf", "jittered"])
+                    choices=["uniform", "zipf", "jittered", "lognormal"])
     ap.add_argument("--feature-mode", default="sync",
                     choices=["off", "sync", "async"])
     ap.add_argument("--impl", default="chunked",
@@ -171,6 +176,27 @@ def main():
                          "incremental extensions of one pool entry (bounds "
                          "requantization drift under --pool-dtype int8; "
                          "0 = uncapped)")
+    ap.add_argument("--pack-tails", action="store_true",
+                    help="DSO v2 segment packing (needs --history-cache): "
+                         "partial tail chunks from different requests pack "
+                         "into shared (1, bucket) rows, each candidate "
+                         "segment steered to its own user's pooled history "
+                         "KV — reclaims the padding the greedy bucket "
+                         "split dispatches on non-uniform traffic")
+    ap.add_argument("--pack-rows", type=int, default=0,
+                    help="row capacity of the packed executors (packed "
+                         "rows are dense, so fewer rows carry the same "
+                         "candidate throughput at less executor cost; "
+                         "--max-batch still sizes how many distinct users "
+                         "one packed dispatch can steer to; 0 = auto "
+                         "max_batch/4)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="default per-request deadline budget: pending "
+                         "chunks flush earliest-deadline-first and the "
+                         "DSO stops collecting co-riders once its cost "
+                         "model says waiting longer would miss the "
+                         "earliest deadline (0 = no deadlines; misses "
+                         "surface as the deadline_misses metric)")
     ap.add_argument("--users", type=int, default=0,
                     help="repeat-user traffic: draw requests from this many "
                          "users with stable histories (0 = unique users)")

@@ -44,12 +44,19 @@ class ServeRequest:
     identity: cache-aware engines key their history-KV pool by it (falling
     back to a content hash of the history when absent), so repeat-user and
     session-re-rank traffic reuses the cached history encode.
+
+    ``deadline_s`` is an optional per-request latency budget (seconds,
+    relative to ``arrival_t``).  Deadline-aware engines order their flush
+    queues earliest-deadline-first against it and count overruns in the
+    ``deadline_misses`` metric; ``None`` defers to the engine's default
+    budget (which may be "no deadline").
     """
 
     history: np.ndarray
     candidates: Optional[np.ndarray] = None
     n_tokens: int = 16
     user_id: Optional[int] = None
+    deadline_s: Optional[float] = None
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     arrival_t: float = dataclasses.field(default_factory=time.perf_counter)
@@ -129,6 +136,7 @@ class ServeMetrics:
         self.last_t = 0.0
         self.latencies: list = []
         self.gauges: Dict[str, float] = {}
+        self.counters: Dict[str, int] = {}
 
     def record(self, n_items: int, latency_s: float):
         now = time.perf_counter()
@@ -143,9 +151,19 @@ class ServeMetrics:
     def set_gauge(self, name: str, value: float):
         """Point-in-time engine gauge surfaced in ``summary()`` — e.g. the
         history-KV pool's byte accounting (``pool_bytes_used`` vs its
-        configured budget), updated by the engine as entries come and go."""
+        configured budget), the DSO's cumulative ``padded_fraction``
+        (candidate-slot padding dispatched vs reclaimed by segment
+        packing) and ``queue_delay_ms`` (mean chunk enqueue-to-dispatch
+        delay), updated by the engine as requests flow."""
         with self._lock:
             self.gauges[name] = float(value)
+
+    def incr(self, name: str, by: int = 1):
+        """Monotonic engine counter surfaced in ``summary()`` — e.g.
+        ``deadline_misses`` (requests that resolved after their
+        ``ServeRequest.deadline_s`` budget)."""
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + by
 
     def summary(self) -> Dict[str, float]:
         with self._lock:
@@ -158,6 +176,7 @@ class ServeMetrics:
                 "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
                 "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
                 **self.gauges,
+                **self.counters,
             }
 
 

@@ -93,6 +93,9 @@ class _PipelinedEngine:
 
     def __init__(self, *, max_pending: int = 64, n_workers: int = 4,
                  name: str = "engine"):
+        # engine-default deadline budget (seconds; 0 = none): subclasses
+        # that support deadlines set it BEFORE calling __init__ here
+        self._deadline_s = getattr(self, "_deadline_s", 0.0)
         self._metrics = ServeMetrics()
         self._admission: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._open = True
@@ -152,9 +155,12 @@ class _PipelinedEngine:
         return self.submit(req).result().output
 
     def metrics(self) -> Dict[str, float]:
+        # engine internals first: _extra_metrics may refresh ServeMetrics
+        # gauges (padded_fraction / queue_delay_ms) that summary() reports
+        extra = self._extra_metrics()
         out = self._metrics.summary()
         out["pending"] = self._admission.qsize()
-        out.update(self._extra_metrics())
+        out.update(extra)
         return out
 
     def shutdown(self):
@@ -191,10 +197,17 @@ class _PipelinedEngine:
             req = fut.request
             try:
                 output, timings = self._execute(req)
-                latency = time.perf_counter() - t_submit
+                t_done = time.perf_counter()
+                latency = t_done - t_submit
                 timings = {"queue_s": t_deq - t_submit, **timings}
                 n_items = req.m if req.candidates is not None else len(output)
                 self._metrics.record(n_items, latency)
+                dl = req.deadline_s if req.deadline_s is not None \
+                    else self._deadline_s
+                if dl:
+                    self._metrics.incr(
+                        "deadline_misses"
+                        if t_done > req.arrival_t + dl else "deadline_met")
                 fut.set_result(ServeResponse(req.request_id, output,
                                              latency, timings))
             except BaseException as e:  # noqa: BLE001 — surface via future
@@ -309,6 +322,31 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         re-encode-vs-extend crossover: the extension would redo most of
         the window while layering another requantization).
 
+    DSO v2 (``pack_tails`` / ``deadline_s``):
+
+    ``pack_tails``
+        segment-packed ragged dispatch (needs ``history_cache``): partial
+        tail chunks from DIFFERENT requests pack into shared ``(1,
+        bucket)`` rows as independent segments, each steered to its own
+        user's pooled history KV through a per-candidate ``[B, bucket]``
+        KV slot index (candidates never attend to each other under SUMI,
+        so packing is bitwise-clean — asserted in tests/test_dso_v2.py).
+        Reclaims the 20-40% ``padded_fraction`` the greedy bucket split
+        dispatches on non-uniform candidate traffic; subsumes KV-row
+        dedup (same-user segments share one stacked KV slot).
+        ``pack_rows`` (default ``max_batch / 4``) sizes the packed
+        executors' row axis: packed rows are dense, so fewer rows carry
+        the unpacked fill target's candidate throughput at a fraction of
+        the per-dispatch executor cost, while ``max_batch`` still sizes
+        the unique-KV axis (distinct users per dispatch).
+    ``deadline_s``
+        default per-request latency budget (seconds; a request's own
+        ``ServeRequest.deadline_s`` overrides).  Pending chunks flush
+        earliest-deadline-first with a shortest-remaining-work tie-break,
+        and the DSO stops collecting co-riders as soon as its per-bucket
+        cost model says waiting longer would miss the earliest collected
+        deadline.  Overruns count into the ``deadline_misses`` metric.
+
     FKE (``impl="fused"``): the ``cached`` executor family is compiled
     against the pool's RAW stored representation (int8/bf16 values + per-
     (layer, head) scales, ``serving/kv_cache.py::raw_kv_specs``) plus the
@@ -337,13 +375,32 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  extend_buckets: Optional[Sequence[int]] = None,
                  extend_refresh_limit: int = 0,
                  extend_crossover: float = 0.5,
-                 kv_dedup: Optional[bool] = None):
+                 kv_dedup: Optional[bool] = None,
+                 pack_tails: bool = False,
+                 pack_rows: Optional[int] = None,
+                 deadline_s: float = 0.0):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
         self.n_history = n_history
         self.impl = impl
         self._fused = impl == "fused"
+        self._pack_tails = bool(pack_tails)
+        if pack_rows is None and pack_tails:
+            # packed rows are dense where unpacked rows are mostly padding:
+            # a quarter of the row capacity carries a comparable candidate
+            # throughput on the heavy-tailed traffic packing targets, at a
+            # quarter of the per-dispatch executor cost.  max_batch still
+            # sizes the unique-KV axis (distinct users per dispatch).
+            pack_rows = max(1, max_batch // 4)
+        self._pack_rows = pack_rows
+        self._deadline_s = float(deadline_s)
+        if pack_tails and not history_cache:
+            raise ValueError(
+                "pack_tails=True needs history_cache=True: segment packing "
+                "steers each candidate segment to its own user's POOLED "
+                "history KV — the monolithic full-pass family has no "
+                "per-user KV rows to steer to")
         self.store, self.features = _make_features(
             feature_mode, store, cache_capacity, cache_ttl_s)
 
@@ -393,13 +450,12 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 pool_slots, budget_bytes=pool_budget_bytes, dtype=pool_dtype,
                 placement=pool_placement, spill_bytes=pool_spill_bytes)
             kv_specs = bundle.history_kv_specs(params, n_history, batch=1)
-            leaves, self._kv_treedef = jax.tree.flatten(kv_specs)
-            self._kv_row_specs = leaves          # per-request rows (batch=1)
-            # the FKE ("fused") scoring executors consume the pool's RAW
+            # the FKE ("fused") executors consume the pool's RAW
             # representation — stored-precision values + per-(layer, head)
-            # scales, dequantized in-kernel — so their compiled signature
-            # quantizes the row specs instead of the engine dequantizing
-            # every hit on the host
+            # scales, dequantized in-kernel (cached scoring) or in-graph
+            # (extend basis) — so their compiled signature quantizes the
+            # row specs instead of the engine dequantizing every hit (or
+            # every stale basis) on the host
             cached_specs = raw_kv_specs(kv_specs, pool_dtype) \
                 if self._fused else kv_specs
             cleaves, self._cached_treedef = jax.tree.flatten(cached_specs)
@@ -422,8 +478,6 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         _batched = lambda specs, batch: tuple(  # noqa: E731
             jax.ShapeDtypeStruct((batch,) + s.shape[1:], s.dtype)
             for s in specs)
-        kv_row_shapes = lambda batch: _batched(  # noqa: E731
-            self._kv_row_specs, batch)
         cached_row_shapes = lambda batch: _batched(  # noqa: E731
             self._cached_row_specs, batch)
 
@@ -446,17 +500,40 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 shapes = (hist_spec(batch), side_spec(batch))
             elif kind == "extend":
                 # bucket = trusted prefix length: re-encode window positions
-                # >= bucket (plus the side token) against the cached prefix
+                # >= bucket (plus the side token) against the cached prefix.
+                # Under the fused impl the basis arrives RAW (the pool's
+                # stored int8/bf16 leaves + scales, 4x fewer dispatch bytes
+                # for int8) and dequantizes in-graph inside extend_history
                 def fn(*args):
                     *kv_leaves, history, side = args
-                    kv = jax.tree.unflatten(self._kv_treedef, list(kv_leaves))
+                    kv = jax.tree.unflatten(self._cached_treedef,
+                                            list(kv_leaves))
                     return bundle.extend_history(
                         self.params, kv, {"history": history, "side": side},
                         prefix_len=bucket, impl=self.impl)
-                shapes = kv_row_shapes(batch) + (hist_spec(batch),
-                                                 side_spec(batch))
+                shapes = cached_row_shapes(batch) + (hist_spec(batch),
+                                                     side_spec(batch))
             elif kind == "cached":
-                if self._kv_dedup:
+                if self._pack_tails:
+                    # DSO v2 segment-packed signature: one row may carry
+                    # candidate segments of several users; seg_idx [B,
+                    # bucket] steers every candidate to its own user's
+                    # stacked KV row (per-candidate generalization of the
+                    # dedup row index — consumed in-kernel under fused,
+                    # via the reference-structured segment attention
+                    # elsewhere)
+                    def fn(*args):
+                        *kv_leaves, seg_idx, candidates = args
+                        kv = jax.tree.unflatten(self._cached_treedef,
+                                                list(kv_leaves))
+                        return bundle.score_candidates(
+                            self.params, kv, jnp.maximum(candidates, 0),
+                            impl=self.impl, row_index=seg_idx)
+                    rows = self._pack_rows if coalesce else 1
+                    shapes = cached_row_shapes(batch) + (
+                        jax.ShapeDtypeStruct((rows, bucket), jnp.int32),
+                        jax.ShapeDtypeStruct((rows, bucket), jnp.int32))
+                elif self._kv_dedup:
                     # deduped signature: unique KV rows + per-row gather idx
                     def fn(*args):
                         *kv_leaves, idx, candidates = args
@@ -497,12 +574,17 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         # pool on miss, "extend" refreshes a stale entry from its cached
         # prefix, "full" is the monolithic path when the pool is off
         dedup_kinds = None
+        packed_kinds = None
         device_output_kinds: tuple = ()
         if history_cache:
             families = {"cached": tuple(buckets), "encode": (n_history,)}
             if self._extend_buckets:
                 families["extend"] = self._extend_buckets
-            if kv_dedup:
+            if self._pack_tails:
+                # packing subsumes KV-row dedup: same-user segments share
+                # one stacked KV slot inside the packer
+                packed_kinds = {"cached": len(self._cached_row_specs)}
+            elif kv_dedup:
                 dedup_kinds = {"cached": len(self._cached_row_specs)}
             if pool_placement == "device" and jax.default_backend() != "cpu":
                 # encode/extend outputs feed the pool: keep them on device.
@@ -513,11 +595,12 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         else:
             families = {"full": tuple(buckets)}
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
-                                    window_s=window_s)
+                                    window_s=window_s,
+                                    pack_rows=self._pack_rows)
         self.dso = DSO.CoalescingOrchestrator(
             build_fn, pad_slice_fn=self._pad_slice, gather_fn=self._gather,
             policy=policy, n_streams=n_streams, families=families,
-            dedup_kinds=dedup_kinds,
+            dedup_kinds=dedup_kinds, packed_kinds=packed_kinds,
             device_output_kinds=device_output_kinds)
         super().__init__(max_pending=max_pending, n_workers=n_workers,
                          name="flame")
@@ -563,6 +646,12 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             history, candidates, side = request
             return history, self._slice_candidates(candidates, chunk), side
         kv_leaves, candidates = request          # cached
+        if self._pack_tails:
+            # packed family: hand the dispatcher the UNPADDED segment —
+            # the packer places it at an arbitrary row offset and pads the
+            # assembled row once
+            sl = candidates[:, chunk.start:chunk.start + chunk.valid]
+            return tuple(kv_leaves) + (sl,)
         return tuple(kv_leaves) + (self._slice_candidates(candidates, chunk),)
 
     def _gather(self, rows, chunks: List[DSO.Chunk], m: int,
@@ -599,7 +688,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         return tuple(jax.tree.leaves(kv))
 
     def _lookup_or_encode(self, req: ServeRequest, hist: np.ndarray,
-                          memo: Optional[tuple] = None
+                          memo: Optional[tuple] = None,
+                          deadline: Optional[float] = None
                           ) -> Tuple[tuple, str, float]:
         """Returns (kv_leaves, path, features_s) with path one of ``hit`` /
         ``encode`` / ``extend`` / ``wait``; encodes (or, on an extendable
@@ -607,11 +697,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         pool on miss.  Concurrent misses for one (key, fingerprint) are
         single-flighted: the first worker encodes, co-arriving session
         requests wait on its future instead of dispatching duplicate
-        O(n_history) encodes."""
+        O(n_history) encodes.  Under the fused impl the stale basis is
+        read back RAW (``raw_basis``): the extend executors are compiled
+        against the pool's stored representation and dequantize in-graph,
+        so the host-side dequant of the dropped entry is gone."""
         key, fp = memo if memo is not None else self._pool_key(req)
         kv, status, basis = self.history_pool.lookup(
             key, fp, want_basis=bool(self._extend_buckets),
-            raw=self._fused)
+            raw=self._fused, raw_basis=self._fused)
         if status == "hit":
             return self._cached_rows(kv), "hit", 0.0
         with self._encode_lock:
@@ -648,13 +741,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 if bucket is not None:
                     basis_leaves = tuple(jax.tree.leaves(basis.kv))
                     kv_tree = self.dso.score((basis_leaves, hist, side),
-                                             bucket, kind="extend")
+                                             bucket, kind="extend",
+                                             deadline=deadline)
                     path = "extend"
                     refreshes = basis.refreshes + 1
                     self.history_pool.count_extension()
             if kv_tree is None:
                 kv_tree = self.dso.score((hist, side), self.n_history,
-                                         kind="encode")
+                                         kind="encode", deadline=deadline)
             # device-resident rows arrive as fresh device buffers (XLA
             # slices of the stacked dispatch output); host rows are numpy
             # VIEWS into the (max_batch, ...) stacked parent — copy those so
@@ -690,16 +784,20 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 if self.history_pool is not None else None)
         self._check_request(req)
         t0 = time.perf_counter()
+        dl = req.deadline_s if req.deadline_s is not None else self._deadline_s
+        deadline = (req.arrival_t + dl) if dl else None
         hist = np.asarray(req.history[None, :self.n_history], np.int32)
         cand = np.asarray(req.candidates[None], np.int32)
         if self.history_pool is None:
             side = self._side_features(req.history)
             t1 = time.perf_counter()
-            out = self.dso.score((hist, cand, side), req.m, kind="full")
+            out = self.dso.score((hist, cand, side), req.m, kind="full",
+                                 deadline=deadline)
             t2 = time.perf_counter()
             return out[0], {"features_s": t1 - t0, "execute_s": t2 - t1}
         key_fp = memo if memo is not None else self._pool_key(req)
-        kv, path, features_s = self._lookup_or_encode(req, hist, key_fp)
+        kv, path, features_s = self._lookup_or_encode(req, hist, key_fp,
+                                                      deadline)
         t1 = time.perf_counter()
         # On a HIT the (key, fingerprint) pair is a stable content identity
         # for the loaded rows (every hit dequantizes the same payload), so
@@ -715,10 +813,11 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         # all share one content identity and dedup across co-batched
         # requests unconditionally.
         token = None
-        if self._kv_dedup and (self._fused or path == "hit"):
+        if (self._kv_dedup or self._pack_tails) \
+                and (self._fused or path == "hit"):
             token = ("kv",) + key_fp[0] + (key_fp[1],)
         out = self.dso.score((kv, cand), req.m, kind="cached",
-                             dedup_token=token)
+                             dedup_token=token, deadline=deadline)
         t2 = time.perf_counter()
         build_s = (t1 - t0) - features_s
         return out[0], {"features_s": features_s,
@@ -728,7 +827,20 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                         "execute_s": t2 - t1}
 
     def _extra_metrics(self):
-        out = {f"dso_{k}": v for k, v in self.dso.stats().items()}
+        st = self.dso.stats()
+        # surface the DSO v2 dispatch-economics gauges through ServeMetrics
+        # so summary() carries them alongside the request stats.  The
+        # padded-fraction gauge covers the CANDIDATE-SCORING kinds only:
+        # encode/extend dispatches always run full rows, so folding them
+        # in (as the all-kind dso_padded_fraction does) would read near
+        # zero on miss-heavy traffic even while cached dispatches are
+        # mostly padding — the exact regime the gauge exists to expose
+        slots = sum(st.get(f"cand_slots_{k}", 0) for k in ("cached", "full"))
+        valid = sum(st.get(f"cand_valid_{k}", 0) for k in ("cached", "full"))
+        self._metrics.set_gauge(
+            "padded_fraction", 1.0 - valid / slots if slots else 0.0)
+        self._metrics.set_gauge("queue_delay_ms", st["queue_delay_ms"])
+        out = {f"dso_{k}": v for k, v in st.items()}
         out["dso_build_s"] = self.dso.build_time_s
         out.update({f"pda_{k}": v for k, v in
                     dataclasses.asdict(self.features.stats).items()})

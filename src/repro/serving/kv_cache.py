@@ -288,7 +288,8 @@ class StaleBasis:
     """What ``lookup`` hands back for a dropped stale entry so the engine
     can extend the cached prefix instead of re-encoding from scratch."""
 
-    kv: object                     # dequantized K/V (extension basis)
+    kv: object                     # K/V extension basis (dequantized, or a
+                                   # raw stored view under ``raw_basis``)
     hist_window: Optional[np.ndarray]  # window the basis encoded
     refreshes: int = 0             # extensions already layered on this basis
 
@@ -378,12 +379,17 @@ class HistoryKVPool:
         return kv
 
     def lookup(self, key: Hashable, fingerprint: Hashable, *,
-               want_basis: bool = False, raw: bool = False):
+               want_basis: bool = False, raw: bool = False,
+               raw_basis: bool = False):
         """One counted probe; see the class docstring.  Checks the primary
         tier, then the spill tier (promoting on a spill hit).  Counter
         bookkeeping happens under the lock; dequantization runs after
         releasing it (payloads are immutable once stored), so concurrent
-        workers never serialize on the dequant math."""
+        workers never serialize on the dequant math.  ``raw_basis=True``
+        hands a dropped stale entry back as its :func:`raw_kv_view` —
+        the quantized-extend-basis path: extend executors compiled
+        against raw pool specs dequantize in-graph, so the host never
+        pays the dequant (or ships the dequantized bytes)."""
         with self._lock:
             e = self._entries.get(key)
             if e is not None:
@@ -429,8 +435,8 @@ class HistoryKVPool:
             return self._load(e, raw), "hit", None
         if status == "hit":
             return self._load(e, raw), "hit", None
-        basis = StaleBasis(self._load(e), e.hist_window, e.refreshes) \
-            if want_basis else None
+        basis = StaleBasis(self._load(e, raw_basis), e.hist_window,
+                           e.refreshes) if want_basis else None
         return None, "stale", basis
 
     def get(self, key: Hashable, fingerprint: Hashable):

@@ -1,9 +1,10 @@
 """Mixed-traffic workload driver (paper §4.2.3 simulation).
 
 Generates requests whose candidate counts follow the paper's non-uniform
-upstream distribution (uniform over {128,256,512,1024} in Table 5, plus a
-zipf-skewed variant) and drives them through an engine, concurrently,
-collecting the throughput / latency / P99 metrics of Table 5.
+upstream distribution (uniform over {128,256,512,1024} in Table 5, plus
+zipf-skewed and heavy-tailed lognormal variants) and drives them through an
+engine, concurrently, collecting the throughput / latency / P99 metrics of
+Table 5.
 """
 from __future__ import annotations
 
@@ -20,7 +21,12 @@ from repro.serving.api import ServeRequest, ServingEngine
 @dataclasses.dataclass
 class TrafficConfig:
     candidate_counts: Sequence[int] = (128, 256, 512, 1024)
-    distribution: str = "uniform"     # uniform | zipf | jittered
+    # uniform | zipf | jittered | lognormal — ``zipf`` skews over the fixed
+    # counts (most requests draw the smallest); ``lognormal`` is the
+    # heavy-tailed continuous variant (median at the middle count, clipped
+    # to [1, max]): almost every M is tiny and non-bucket-aligned, the
+    # regime where tail-chunk padding dominates dispatch cost
+    distribution: str = "uniform"
     n_requests: int = 64
     n_history: int = 1024
     concurrency: int = 4
@@ -44,6 +50,10 @@ def generate_traffic(tc: TrafficConfig, n_items: int = 100_000
         elif tc.distribution == "zipf":
             idx = min(len(tc.candidate_counts) - 1, rng.zipf(2.0) - 1)
             m = int(sorted(tc.candidate_counts)[idx])
+        elif tc.distribution == "lognormal":
+            counts = sorted(tc.candidate_counts)
+            med = counts[len(counts) // 2]
+            m = int(np.clip(rng.lognormal(np.log(med), 1.0), 1, counts[-1]))
         else:  # jittered: non-bucket-aligned counts (the hard case)
             base = int(rng.choice(tc.candidate_counts))
             m = max(1, base - int(rng.integers(0, base // 3)))
@@ -108,7 +118,7 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
             time.sleep(float(rng.uniform(0, arrival_gap_s)))
         futs.append(engine.submit(ServeRequest(
             history=r["history"], candidates=r["candidates"],
-            user_id=r.get("user_id"))))
+            user_id=r.get("user_id"), deadline_s=r.get("deadline_s"))))
     resps = [f.result() for f in futs]
     total = time.perf_counter() - t0
     la = np.array([r.latency_s for r in resps])

@@ -1,0 +1,419 @@
+"""DSO v2: segment-packed ragged dispatch + deadline-aware flushing.
+
+Layers of coverage:
+
+  1. packer fuzz — :class:`SegmentPacker` placements never split a segment
+     across rows (a segment IS one request's chunk, so no segment ever
+     crosses a request boundary), never overlap within a row, never exceed
+     the row/KV capacity, and same-identity segments share one KV slot;
+  2. EDF flush order — pending chunks pop earliest-deadline-first with a
+     shortest-remaining-work tie-break (deadline-less chunks last), and
+     deadline overruns land in the ``deadline_misses`` metric;
+  3. model-level packing parity — ``score_candidates`` with a
+     per-candidate seg index is BITWISE identical to the unpacked
+     per-user rows, per impl reference/chunked/fused, across ragged
+     segment layouts including 1-candidate segments;
+  4. engine level — the packed engine's concurrent scores are bitwise
+     the same engine's sequential scores (the coalescing contract; one
+     executable, placement-invariant), packed-vs-unpacked engines agree
+     at the cross-AOT-executable tolerance with ``padded_fraction``
+     reduced, and the quantized extend basis ships raw (no host dequant).
+"""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._propcheck import given, settings, st
+
+from repro.configs import get_config
+from repro.core.dso import (CoalescePolicy, CoalescingOrchestrator,
+                            SegmentPacker, _PendingChunk)
+from repro.core.pda import RemoteFeatureStore
+from repro.models import build_model
+from repro.serving import FlameEngine, ServeMetrics, ServeRequest
+from repro.serving.kv_cache import (HistoryKVPool, dequantize_kv,
+                                    quantize_kv, raw_kv_view)
+from repro.serving.scheduler import (TrafficConfig, generate_traffic,
+                                     run_workload_async)
+from repro.types import ClimberConfig
+
+
+@pytest.fixture(scope="module")
+def climber_setup():
+    cfg = dataclasses.replace(
+        get_config("climber"), vocab_size=10_000, d_model=64, d_ff=128,
+        n_heads=2, n_kv_heads=2, head_dim=32,
+        climber=ClimberConfig(num_blocks=2, layers_per_block=2))
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    return cfg, bundle, params
+
+
+def _store():
+    return RemoteFeatureStore(latency_s=0.0, feature_dim=12)
+
+
+def _flame(bundle, params, **kw):
+    base = dict(n_history=64, buckets=(32, 16), n_streams=2,
+                feature_mode="off", store=_store(), window_s=0.01,
+                max_batch=4, n_workers=4, history_cache=True, pool_slots=32)
+    base.update(kw)
+    return FlameEngine(bundle, params, **base)
+
+
+# ---------------------------------------------------------------------------
+# 1. packer fuzz
+# ---------------------------------------------------------------------------
+
+SEGMENTS = st.lists(st.tuples(st.integers(1, 16), st.integers(0, 5)),
+                    min_size=1, max_size=40)
+
+
+@given(SEGMENTS, st.integers(1, 8), st.integers(1, 8))
+@settings(max_examples=150, deadline=None)
+def test_packer_invariants(segs, max_rows, max_kv):
+    bucket = 16
+    packer = SegmentPacker(bucket, max_rows, max_kv)
+    placed = []
+    for valid, ident in segs:
+        p = packer.try_add(valid, ident)
+        if p is not None:
+            placed.append((valid, ident, p))
+    assert placed, "an empty packer must accept any bucket-sized segment"
+    rows = {}
+    for valid, ident, (row, off, slot) in placed:
+        # a segment never crosses a row (request) boundary
+        assert 0 <= row < max_rows
+        assert 0 <= off and off + valid <= bucket
+        # same identity -> same KV slot, distinct identities stay bounded
+        assert slot == packer.slot_of[ident]
+        rows.setdefault(row, []).append((off, off + valid))
+    assert packer.n_slots <= max_kv
+    assert len(rows) == packer.n_rows <= max_rows
+    for intervals in rows.values():
+        intervals.sort()
+        for (a0, a1), (b0, b1) in zip(intervals, intervals[1:]):
+            assert a1 <= b0, "segments overlap within a row"
+    # fill accounting matches the placements
+    for row, intervals in rows.items():
+        assert packer.fills[row] == sum(b - a for a, b in intervals)
+
+
+def test_packer_rejects_oversized_and_fills():
+    p = SegmentPacker(8, max_rows=2, max_kv=2)
+    with pytest.raises(ValueError):
+        p.try_add(9, "a")
+    assert p.try_add(8, "a") == (0, 0, 0)
+    assert p.try_add(5, "b") == (1, 0, 1)
+    assert p.try_add(4, "a") is None        # no row has 4 slots left
+    assert p.try_add(3, "c") is None        # KV capacity exhausted
+    assert p.try_add(3, "b") == (1, 5, 1)   # existing ident still packs
+    assert p.is_full()
+
+
+# ---------------------------------------------------------------------------
+# 2. EDF ordering + deadline accounting
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 1000), st.integers(1, 64)),
+                min_size=2, max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_pending_chunk_edf_ordering(items):
+    """Heap order: earliest deadline first (None last), then shortest
+    remaining work, then FIFO sequence."""
+    chunks = []
+    for dl, rem in items:
+        chunks.append(_PendingChunk(
+            args=(), future=None,
+            deadline=None if dl == 0 else float(dl), remaining=rem))
+    got = sorted(chunks)
+    keys = [(c.deadline if c.deadline is not None else float("inf"),
+             c.remaining, c.seq) for c in got]
+    assert keys == sorted(keys)
+
+
+def test_orchestrator_flushes_in_edf_order():
+    """Preloaded same-bucket chunks dispatch earliest-deadline-first with
+    SRW tie-breaks, not FIFO."""
+    order = []
+
+    def build(bucket, batch):
+        fn = jax.jit(lambda x: x * 2.0).lower(
+            jax.ShapeDtypeStruct((batch, bucket), jnp.float32)).compile()
+
+        def run(x):
+            order.append(int(np.asarray(x)[0, 0]))
+            return fn(x)
+        return run
+
+    def pad_slice(request, chunk):
+        return (request[0],)
+
+    def gather(rows, chunks, m):
+        return rows[0]
+
+    dso = CoalescingOrchestrator(
+        build, buckets=[4], pad_slice_fn=pad_slice, gather_fn=gather,
+        policy=CoalescePolicy(enabled=True, max_batch=1, window_s=0.0),
+        n_streams=1)
+    base = 1000.0   # far-future absolute deadlines: order decided by value
+    plan = [  # (tag, deadline, m-for-SRW)
+        (0, base + 0.30, 4), (1, base + 0.10, 4), (2, None, 4),
+        (3, base + 0.20, 4), (4, base + 0.10, 3), (5, None, 3),
+    ]
+    cond = dso._cond[(dso._DEFAULT_KIND, 4)]
+    futs = []
+    with cond:        # workers can't pop until we release the condition
+        for tag, dl, m in plan:
+            x = np.full((1, 4), float(tag), np.float32)
+            futs.append(dso.submit((x,), m, deadline=dl))
+    for f in futs:
+        f.result()
+    dso.shutdown()
+    # EDF: 4 (dl .10, SRW 3) before 1 (dl .10, SRW 4), then .20, .30;
+    # deadline-less last, SRW-ordered (5 before 2)
+    assert order == [4, 1, 3, 0, 5, 2]
+
+
+def test_serve_metrics_counters():
+    m = ServeMetrics()
+    threads = [threading.Thread(target=lambda: [m.incr("deadline_misses")
+                                                for _ in range(50)])
+               for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.summary()["deadline_misses"] == 200
+
+
+def test_engine_deadline_miss_accounting(climber_setup):
+    cfg, bundle, params = climber_setup
+    eng = _flame(bundle, params, pack_tails=True, deadline_s=100.0)
+    rng = np.random.default_rng(0)
+    hist = rng.integers(0, 1000, 64).astype(np.int32)
+    for _ in range(3):   # generous engine default: everything meets it
+        eng.serve(hist, rng.integers(0, 1000, 12).astype(np.int32),
+                  user_id=1)
+    m = eng.metrics()
+    assert m.get("deadline_met", 0) == 3 and "deadline_misses" not in m
+    # per-request override: an (absurd) 1ns budget must always be missed
+    fut = eng.submit(ServeRequest(
+        history=hist, candidates=rng.integers(0, 1000, 12).astype(np.int32),
+        user_id=1, deadline_s=1e-9))
+    fut.result(timeout=60)
+    assert eng.metrics()["deadline_misses"] == 1
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# 3. model-level packing parity (bitwise, per impl)
+# ---------------------------------------------------------------------------
+
+RAGGED_LAYOUTS = [
+    # (m_total, segments as (count, user)) — incl. 1-candidate segments
+    (1, ((1, 0),)),
+    (7, ((3, 0), (4, 2))),
+    (16, ((1, 1), (1, 0), (14, 2))),
+    (16, ((5, 0), (11, 1))),
+]
+
+
+@pytest.mark.parametrize("impl", ["reference", "chunked", "fused"])
+def test_packed_scoring_bitwise_vs_unpacked(climber_setup, impl):
+    """score_candidates over a segment-packed row == the same candidates
+    scored on unpacked per-user rows, for every impl.
+
+    reference/chunked are BITWISE: the packed segment attention mirrors
+    the reference op sequence with identical reduction lengths, and masked
+    co-segment positions contribute exact zeros.  The fused jnp path is
+    gated at a tight tolerance instead: its per-candidate gathered einsum
+    contracts the same dot products but XLA may reassociate the head-dim
+    reduction differently than the shared-history GEMM (low-bit only;
+    engine-level packed-vs-unpacked rides the same cross-executable
+    tolerance every other A/B in this repo uses)."""
+    cfg, bundle, params = climber_setup
+    rng = np.random.default_rng(3)
+    n_hist = 64
+    kvs = []
+    for u in range(3):
+        batch = {"history": jnp.asarray(
+            rng.integers(0, 10_000, (1, n_hist)).astype(np.int32)),
+            "side": jnp.asarray(rng.standard_normal((1, 12)), jnp.float32)}
+        kvs.append(bundle.encode_history(params, batch, impl="chunked"))
+    kv_stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *kvs)
+
+    for m_total, segments in RAGGED_LAYOUTS:
+        cand = rng.integers(0, 10_000, (1, m_total)).astype(np.int32)
+        seg = np.zeros((1, m_total), np.int32)
+        off = 0
+        for count, user in segments:
+            seg[0, off:off + count] = user
+            off += count
+        assert off == m_total
+        packed = np.asarray(bundle.score_candidates(
+            params, kv_stack, jnp.asarray(cand), impl=impl,
+            row_index=jnp.asarray(seg)))
+        off = 0
+        for count, user in segments:
+            unpacked = np.asarray(bundle.score_candidates(
+                params, kvs[user], jnp.asarray(cand), impl=impl))
+            a, b = packed[0, off:off + count], unpacked[0, off:off + count]
+            if impl == "fused":
+                np.testing.assert_allclose(
+                    a, b, atol=1e-3, rtol=0,
+                    err_msg=f"impl={impl} layout={segments} segment@{off}")
+            else:
+                np.testing.assert_array_equal(
+                    a, b,
+                    err_msg=f"impl={impl} layout={segments} segment@{off}")
+            off += count
+
+
+def test_packed_extend_index_rejected(climber_setup):
+    """Suffix extension is causal — the per-candidate seg index must be
+    rejected, not silently mis-scored."""
+    from repro.core import sumi
+    k = jax.random.normal(jax.random.key(0), (1, 4, 2, 16))
+    with pytest.raises(ValueError, match="causal"):
+        sumi.extend_attention(k, k, k, k, k, impl="chunked",
+                              row_index=jnp.zeros((1, 4), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# 4. engine level
+# ---------------------------------------------------------------------------
+
+def _ragged_requests(n, seed=5, n_users=4, n_hist=64):
+    tc = TrafficConfig(candidate_counts=(3, 7, 19, 33),
+                       distribution="jittered", n_requests=n,
+                       n_history=n_hist, seed=seed, n_users=n_users)
+    reqs = generate_traffic(tc, n_items=10_000)
+    rng = np.random.default_rng(seed + 1)
+    for u in range(2):   # M=1 rides along (the hardest ragged case)
+        reqs.append({"history": reqs[u]["history"],
+                     "user_id": reqs[u]["user_id"],
+                     "candidates": rng.integers(0, 10_000, 1)
+                     .astype(np.int32)})
+    return reqs
+
+
+@pytest.mark.parametrize("impl", ["chunked", "fused"])
+def test_packed_engine_concurrent_bitwise_matches_sequential(climber_setup,
+                                                             impl):
+    """The tentpole contract: concurrent packed serving (segments of many
+    requests sharing rows at arbitrary offsets) is bitwise-identical to
+    the same engine serving sequentially — one executable, and segment
+    placement is bitwise-invariant."""
+    cfg, bundle, params = climber_setup
+    eng = _flame(bundle, params, pack_tails=True, impl=impl)
+    reqs = _ragged_requests(14)
+    for r in reqs[:6]:   # warm the pool: hot-hit steady state
+        eng.serve(r["history"], r["candidates"], user_id=r.get("user_id"))
+    sequential = [eng.serve(r["history"], r["candidates"],
+                            user_id=r.get("user_id")) for r in reqs]
+    concurrent = run_workload_async(eng, reqs)["outputs"]
+    for s, c in zip(sequential, concurrent):
+        np.testing.assert_array_equal(s, c)
+    m = eng.metrics()
+    assert m["dso_packed_segments"] > 0
+    eng.shutdown()
+
+
+def test_packed_engine_matches_unpacked_and_reclaims_padding(climber_setup):
+    """Packed vs unpacked engines: scores agree at the cross-AOT-executable
+    tolerance (different XLA fusions; bitwise is asserted within one
+    executable above and at the model level), and the packed side
+    dispatches measurably less candidate padding."""
+    cfg, bundle, params = climber_setup
+    reqs = _ragged_requests(16)
+    outs, engines = {}, {}
+    for pack in (False, True):
+        eng = _flame(bundle, params, pack_tails=pack, impl="fused")
+        for r in reqs[:6]:
+            eng.serve(r["history"], r["candidates"],
+                      user_id=r.get("user_id"))
+        outs[pack] = run_workload_async(eng, reqs)["outputs"]
+        engines[pack] = eng
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=0)
+    pf_un = engines[False].metrics()["dso_padded_fraction"]
+    pf_pk = engines[True].metrics()["dso_padded_fraction"]
+    m = engines[True].metrics()
+    assert m["dso_packed_segments"] > 0 and m["dso_packed_rows"] > 0
+    assert pf_pk < pf_un, (pf_pk, pf_un)
+    # the padded-fraction / queue-delay gauges surface through ServeMetrics
+    assert "padded_fraction" in m and "queue_delay_ms" in m
+    for eng in engines.values():
+        eng.shutdown()
+
+
+def test_pack_tails_requires_history_cache(climber_setup):
+    cfg, bundle, params = climber_setup
+    with pytest.raises(ValueError, match="history_cache"):
+        _flame(bundle, params, history_cache=False, pack_tails=True)
+
+
+# ---------------------------------------------------------------------------
+# 5. quantized extend basis (raw, no host dequant)
+# ---------------------------------------------------------------------------
+
+def test_pool_raw_basis_returns_stored_representation(climber_setup):
+    cfg, bundle, params = climber_setup
+    pool = HistoryKVPool(4, dtype="int8")
+    kv = {"b0": {"k": np.ones((1, 2, 5, 2, 16), np.float32)}}
+    pool.put("u", "fp0", kv, hist_window=np.arange(5))
+    _, status, basis = pool.lookup("u", "fp-new", want_basis=True,
+                                   raw_basis=True)
+    assert status == "stale"
+    leaf = basis.kv["b0"]["k"]
+    assert isinstance(leaf, tuple)
+    values, scale = leaf
+    assert values.dtype == np.int8 and scale.dtype == np.float32
+
+
+def test_extend_history_raw_basis_bitwise(climber_setup):
+    """extend_history over a RAW (stored int8) basis == the same extension
+    over the host-dequantized basis, bit for bit — the in-graph dequant is
+    the same formula as the pool's dequantize_leaf."""
+    cfg, bundle, params = climber_setup
+    rng = np.random.default_rng(11)
+    n = 64
+    batch = {"history": jnp.asarray(
+        rng.integers(0, 10_000, (1, n)).astype(np.int32)),
+        "side": jnp.asarray(rng.standard_normal((1, 12)), jnp.float32)}
+    kv = bundle.encode_history(params, batch, impl="chunked")
+    payload, _ = quantize_kv(jax.tree.map(np.asarray, kv), "int8")
+    for impl in ("chunked", "fused"):
+        out_raw = bundle.extend_history(params, raw_kv_view(payload), batch,
+                                        prefix_len=n, impl=impl)
+        out_deq = bundle.extend_history(params, dequantize_kv(payload),
+                                        batch, prefix_len=n, impl=impl)
+        for a, b in zip(jax.tree.leaves(out_raw), jax.tree.leaves(out_deq)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_incremental_engine_extends_from_raw_basis(climber_setup):
+    """End to end: the fused int8 engine serves tail-append (stale) traffic
+    through the extend family compiled against raw pool specs."""
+    cfg, bundle, params = climber_setup
+    eng = _flame(bundle, params, pack_tails=True, impl="fused",
+                 pool_dtype="int8", incremental_history=True)
+    rng = np.random.default_rng(2)
+    hists = {u: rng.integers(0, 10_000, 80).astype(np.int32)
+             for u in range(3)}
+    outs = []
+    for _ in range(3):
+        for u in range(3):
+            hists[u] = np.concatenate(
+                [hists[u], rng.integers(0, 10_000, 4).astype(np.int32)])
+            outs.append(eng.serve(
+                hists[u], rng.integers(0, 10_000, 9).astype(np.int32),
+                user_id=u))
+    m = eng.metrics()
+    assert m["pool_extensions"] > 0
+    assert all(np.isfinite(o).all() for o in outs)
+    eng.shutdown()
