@@ -540,14 +540,19 @@ def _merge_report(section: str, payload: dict):
     print(f"wrote {path} ({section})")
 
 
+#: standalone profile name -> runner.  scripts/check_docs.py parses this
+#: dict (by AST, without importing jax) to verify every `--profile <name>`
+#: mentioned in benchmarks/README.md actually exists; add new profiles here.
+PROFILE_RUNNERS = {
+    "fke": run_fke_profile,
+    "dso_nonuniform": run_dso_nonuniform_profile,
+}
+
+
 def main(csv=True, profile: str = "all"):
     cfg, bundle, params = make_climber(d_model=64, layers=2, blocks=2)
-    if profile == "fke":
-        _merge_report("fke", run_fke_profile(bundle, params, csv))
-        return
-    if profile == "dso_nonuniform":
-        _merge_report("dso_nonuniform",
-                      run_dso_nonuniform_profile(bundle, params, csv))
+    if profile in PROFILE_RUNNERS:
+        _merge_report(profile, PROFILE_RUNNERS[profile](bundle, params, csv))
         return
     tc = TrafficConfig(candidate_counts=COUNTS, distribution="jittered",
                        n_requests=N_REQUESTS, n_history=HISTORY, seed=11)
@@ -808,7 +813,7 @@ def main(csv=True, profile: str = "all"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="all",
-                    choices=["all", "fke", "dso_nonuniform"],
+                    choices=["all"] + sorted(PROFILE_RUNNERS),
                     help="'fke' runs only the fused-engine A/B + gates; "
                          "'dso_nonuniform' runs only the segment-packing "
                          "vs PR-4-coalescing A/B + gates (both CI gates); "

@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: the repo's own test suite, a docs-reference check, an
-# end-to-end serving smoke run, and a PDA v2 (quantized + incremental
-# history pool) serve smoke.  Run from the repo root:  bash scripts/ci.sh
+# Tier-1 CI gate: flamecheck static analysis, the repo's own test suite,
+# a docs-reference check, an end-to-end serving smoke run, and a PDA v2
+# (quantized + incremental history pool) serve smoke.  Run from the repo
+# root:  bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== flamecheck: static analysis (strict) =="
+python -m repro.analysis --strict
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q

@@ -1,0 +1,15 @@
+"""flamecheck — repo-specific static analysis for the FLAME serving stack.
+
+Four passes (see the module docstrings for details):
+
+- :mod:`repro.analysis.lock_discipline` — unguarded shared-state access in
+  the threaded classes;
+- :mod:`repro.analysis.host_sync` — hidden device→host syncs reachable from
+  the serving hot path;
+- :mod:`repro.analysis.recompile` — jit-recompile and tracer hazards;
+- :mod:`repro.analysis.kernel_contracts` — Pallas BlockSpec/grid contracts.
+
+Run as ``python -m repro.analysis [--strict]``; stdlib-only (imports neither
+jax nor numpy) so it is fast enough to gate CI.
+"""
+from repro.analysis.common import Finding, ModuleSource  # noqa: F401

@@ -1,0 +1,190 @@
+"""Pass 2 — hidden device→host synchronization on the serving hot path.
+
+Builds an intra-repo call graph rooted at the request hot path —
+``FlameEngine.submit`` (inherited from ``_PipelinedEngine``), the pipelined
+worker loop, and the ``CoalescingOrchestrator`` flush loop — and flags every
+construct reachable from it that forces a device→host sync or host copy:
+
+- ``np.asarray(...)`` / ``np.array(...)`` calls (S1),
+- ``jax.device_get(...)`` / ``jax.block_until_ready(...)`` (S2),
+- ``.item()`` / ``.block_until_ready()`` method calls (S3),
+- ``float(...)`` / ``int(...)`` whose argument mentions ``np.`` / ``jnp.``
+  (S4 — conversion of an array scalar blocks on the device),
+- ``np.asarray`` / ``jax.device_get`` passed as a callback, e.g.
+  ``jax.tree.map(np.asarray, out)`` (S5).
+
+Call resolution is name-based (CHA-style): ``self.m(...)`` and ``obj.m(...)``
+link to every analyzed class defining ``m``; bare names link to module-level
+functions.  This over-approximates — acceptable, because the flagged sync
+constructs are precisely the ones that need a written justification anywhere
+near the hot path.  Deliberate dispatch-boundary syncs carry
+``# flamecheck: host-sync-ok(reason)`` pragmas.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, ModuleSource, dotted_name
+
+PASS = "host-sync"
+
+#: (class name, method name) roots of the hot path.  Name-based so test
+#: fixtures defining a class with one of these shapes are analyzed too.
+ROOT_METHODS = {
+    ("FlameEngine", "submit"),
+    ("_PipelinedEngine", "submit"),
+    ("_PipelinedEngine", "_worker_loop"),
+    ("CoalescingOrchestrator", "submit"),
+    ("CoalescingOrchestrator", "_worker"),
+}
+
+#: callback indirection the name-based resolver cannot see: a method that
+#: stores/passes a bound helper which a callee later invokes.
+EXTRA_EDGES = {
+    "pad_slice": ("_pad_slice",),
+    "gather": ("_gather",),
+}
+
+SYNC_NP_FUNCS = {"asarray", "array"}
+SYNC_JAX_FUNCS = {"device_get", "block_until_ready"}
+SYNC_METHODS = {"item", "block_until_ready"}
+
+
+class _Node:
+    __slots__ = ("module", "cls", "name", "fn")
+
+    def __init__(self, module: ModuleSource, cls: Optional[str], name: str,
+                 fn: ast.AST):
+        self.module = module
+        self.cls = cls
+        self.name = name
+        self.fn = fn
+
+    @property
+    def qualname(self) -> str:
+        return f"{self.cls}.{self.name}" if self.cls else self.name
+
+
+def _collect_nodes(sources: Sequence[ModuleSource]) -> List[_Node]:
+    nodes: List[_Node] = []
+    for src in sources:
+        for top in src.tree.body:
+            if isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                nodes.append(_Node(src, None, top.name, top))
+            elif isinstance(top, ast.ClassDef):
+                for item in top.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        nodes.append(_Node(src, top.name, item.name, item))
+    return nodes
+
+
+def _called_names(fn: ast.AST) -> Set[str]:
+    """Names of everything syntactically called inside ``fn``."""
+    out: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Name):
+                out.add(f.id)
+            elif isinstance(f, ast.Attribute):
+                out.add(f.attr)
+    return out
+
+
+def build_call_graph(sources: Sequence[ModuleSource]
+                     ) -> Tuple[List[_Node], Dict[int, Set[int]]]:
+    """Returns (nodes, edges) with edges keyed/valued by node index."""
+    nodes = _collect_nodes(sources)
+    by_method: Dict[str, List[int]] = {}
+    by_func: Dict[str, List[int]] = {}
+    for i, node in enumerate(nodes):
+        (by_method if node.cls else by_func).setdefault(
+            node.name, []).append(i)
+
+    edges: Dict[int, Set[int]] = {}
+    for i, node in enumerate(nodes):
+        callees: Set[int] = set()
+        names = set(_called_names(node.fn))
+        for name in list(names):
+            names.update(EXTRA_EDGES.get(name, ()))
+        for name in names:
+            callees.update(by_method.get(name, []))
+            callees.update(by_func.get(name, []))
+        edges[i] = callees
+    return nodes, edges
+
+
+def reachable_from_roots(sources: Sequence[ModuleSource],
+                         roots: Iterable[Tuple[str, str]] = ROOT_METHODS
+                         ) -> Tuple[List[_Node], Set[int]]:
+    nodes, edges = build_call_graph(sources)
+    roots = set(roots)
+    work = [i for i, n in enumerate(nodes) if (n.cls, n.name) in roots]
+    seen: Set[int] = set(work)
+    while work:
+        i = work.pop()
+        for j in edges.get(i, ()):
+            if j not in seen:
+                seen.add(j)
+                work.append(j)
+    return nodes, seen
+
+
+def _mentions_array_ns(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name) \
+                and n.value.id in ("np", "jnp", "numpy", "jax"):
+            return True
+    return False
+
+
+def _scan_function(node: _Node) -> List[Finding]:
+    src = node.module
+    out: List[Finding] = []
+
+    def add(line: int, code: str, msg: str):
+        out.append(Finding(
+            src.path, line, PASS, code,
+            f"{node.qualname}: {msg} (reachable from the serving hot path)"))
+
+    for n in ast.walk(node.fn):
+        if not isinstance(n, ast.Call):
+            continue
+        f = n.func
+        dn = dotted_name(f)
+        if dn is not None:
+            head, _, tail = dn.partition(".")
+            if head in ("np", "numpy") and tail in SYNC_NP_FUNCS:
+                add(n.lineno, "FC-SYNC-NP",
+                    f"{dn}() forces a host copy/device sync")
+                continue
+            if head == "jax" and tail in SYNC_JAX_FUNCS:
+                add(n.lineno, "FC-SYNC-JAX", f"{dn}() blocks on the device")
+                continue
+        if isinstance(f, ast.Attribute) and f.attr in SYNC_METHODS \
+                and dotted_name(f.value) not in ("np", "numpy", "jnp"):
+            add(n.lineno, "FC-SYNC-METHOD",
+                f".{f.attr}() blocks on the device")
+            continue
+        if isinstance(f, ast.Name) and f.id in ("float", "int") \
+                and n.args and _mentions_array_ns(n.args[0]):
+            add(n.lineno, "FC-SYNC-SCALAR",
+                f"{f.id}() of an array expression syncs the device")
+            continue
+        for arg in list(n.args) + [kw.value for kw in n.keywords]:
+            adn = dotted_name(arg)
+            if adn in ("np.asarray", "numpy.asarray", "jax.device_get"):
+                add(n.lineno, "FC-SYNC-CALLBACK",
+                    f"{adn} passed as a callback forces host copies")
+                break
+    return out
+
+
+def run(sources: Sequence[ModuleSource]) -> List[Finding]:
+    nodes, reach = reachable_from_roots(sources)
+    findings: List[Finding] = []
+    for i in sorted(reach):
+        findings.extend(_scan_function(nodes[i]))
+    return findings

@@ -1,0 +1,229 @@
+"""Pass 4 — Pallas kernel contracts.
+
+Runs over the kernel packages (``kernels/*/kernel.py`` + wrapping
+``ops.py``) and checks three contracts the TPU lowering depends on:
+
+K1  **BlockSpec index-map purity.**  Index maps run at trace time inside the
+    pipeline emitter: they must be pure functions of the grid indices (and
+    scalar-prefetch refs).  Flagged: direct ``jnp.*`` calls in the map body
+    (Python scalar clamps of grid indices are preferred; where a traced
+    clamp is genuinely required — e.g. clamping against a traced step count
+    — suppress with ``kernel-ok`` and say why) and closures over mutable
+    module-level state (list/dict/set globals) or ``self``.  Calls to
+    module-level *helper functions* are allowed (flash-attention's
+    ``_k_index`` pattern); the helper is the auditable unit.
+
+K2  **Divisibility guards in the wrapper.**  Every ``ops.py`` that invokes a
+    ``*_kernel`` entry point must contain padding/divisibility logic — a
+    ``_pad_to`` helper or a ``%``-based pad computation — so grid/block
+    shapes always divide. A wrapper with neither is assumed to pass raw
+    shapes through.
+
+K3  **Scalar-prefetch argument ordering.**  With
+    ``pltpu.PrefetchScalarGridSpec(num_scalar_prefetch=N, grid=<len G>)``,
+    every index map must take exactly ``G + N`` parameters (grid indices
+    first, then the prefetch refs).  An arity mismatch silently misbinds
+    refs to grid axes.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.common import Finding, ModuleSource, dotted_name
+
+PASS = "kernel-contract"
+
+
+def _is_kernel_file(src: ModuleSource) -> bool:
+    return os.path.basename(src.path) == "kernel.py" or \
+        "pallas" in src.text
+
+
+def _module_defs(src: ModuleSource) -> Dict[str, ast.FunctionDef]:
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for item in ast.walk(node):
+                if isinstance(item, ast.FunctionDef) and item is not node:
+                    defs.setdefault(item.name, item)
+            defs.setdefault(node.name, node)
+    return defs
+
+
+def _mutable_globals(src: ModuleSource) -> Set[str]:
+    out: Set[str] = set()
+    for node in src.tree.body:
+        if isinstance(node, ast.Assign) and isinstance(
+                node.value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _index_map_exprs(call: ast.Call) -> List[ast.AST]:
+    """The index-map argument of a ``pl.BlockSpec(shape, index_map)`` call."""
+    if dotted_name(call.func) not in ("pl.BlockSpec", "BlockSpec",
+                                      "pallas.BlockSpec"):
+        return []
+    args = list(call.args)
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            return [kw.value]
+    if len(args) >= 2:
+        return [args[1]]
+    return []
+
+
+def _map_params(expr: ast.AST,
+                defs: Dict[str, ast.FunctionDef]) -> Optional[List[str]]:
+    if isinstance(expr, ast.Lambda):
+        return [a.arg for a in expr.args.args]
+    if isinstance(expr, ast.Name) and expr.id in defs:
+        return [a.arg for a in defs[expr.id].args.args]
+    return None
+
+
+def _map_body(expr: ast.AST,
+              defs: Dict[str, ast.FunctionDef]) -> Optional[ast.AST]:
+    if isinstance(expr, ast.Lambda):
+        return expr.body
+    if isinstance(expr, ast.Name) and expr.id in defs:
+        return defs[expr.id]
+    return None
+
+
+def _k1(src: ModuleSource) -> List[Finding]:
+    defs = _module_defs(src)
+    mutable = _mutable_globals(src)
+    out: List[Finding] = []
+    seen: Set[int] = set()
+    for call in ast.walk(src.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        for expr in _index_map_exprs(call):
+            body = _map_body(expr, defs)
+            if body is None or id(body) in seen:
+                continue
+            seen.add(id(body))
+            params = set(_map_params(expr, defs) or [])
+            for n in ast.walk(body):
+                if isinstance(n, ast.Call):
+                    dn = dotted_name(n.func)
+                    if dn and dn.split(".")[0] in ("jnp", "jax", "lax"):
+                        out.append(Finding(
+                            src.path, n.lineno, PASS, "FC-INDEX-MAP-JNP",
+                            f"index map calls {dn}() — index maps must be "
+                            f"pure Python over grid indices; use Python "
+                            f"min/max or justify with kernel-ok"))
+                elif isinstance(n, ast.Name) and isinstance(
+                        n.ctx, ast.Load):
+                    if n.id == "self":
+                        out.append(Finding(
+                            src.path, n.lineno, PASS, "FC-INDEX-MAP-STATE",
+                            "index map closes over self — instance state "
+                            "can change between trace and execution"))
+                    elif n.id in mutable and n.id not in params:
+                        out.append(Finding(
+                            src.path, n.lineno, PASS, "FC-INDEX-MAP-STATE",
+                            f"index map closes over mutable module global "
+                            f"{n.id!r}"))
+    return out
+
+
+def _k2(src: ModuleSource) -> List[Finding]:
+    if os.path.basename(src.path) != "ops.py":
+        return []
+    calls_kernel = None
+    for n in ast.walk(src.tree):
+        if isinstance(n, ast.Call):
+            dn = dotted_name(n.func)
+            if dn and dn.split(".")[-1].endswith("_kernel"):
+                calls_kernel = n
+                break
+    if calls_kernel is None:
+        return []
+    has_guard = False
+    for n in ast.walk(src.tree):
+        if isinstance(n, ast.Call) and dotted_name(n.func) in (
+                "_pad_to", "pad_to"):
+            has_guard = True
+            break
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod):
+            has_guard = True
+            break
+    if not has_guard:
+        return [Finding(
+            src.path, calls_kernel.lineno, PASS, "FC-NO-PAD-GUARD",
+            "ops wrapper invokes a *_kernel entry point but has no "
+            "padding/divisibility guard (_pad_to or %-based) — grid/block "
+            "shapes may not divide for arbitrary inputs")]
+    return []
+
+
+def _k3(src: ModuleSource) -> List[Finding]:
+    defs = _module_defs(src)
+    out: List[Finding] = []
+    for call in ast.walk(src.tree):
+        if not isinstance(call, ast.Call) or dotted_name(call.func) not in (
+                "pltpu.PrefetchScalarGridSpec", "PrefetchScalarGridSpec"):
+            continue
+        n_prefetch: Optional[int] = None
+        grid_len: Optional[int] = None
+        spec_args: List[ast.AST] = []
+        for kw in call.keywords:
+            if kw.arg == "num_scalar_prefetch" and \
+                    isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, int):
+                n_prefetch = kw.value.value
+            elif kw.arg == "grid":
+                grid_expr = kw.value
+                if isinstance(grid_expr, ast.Name):
+                    # resolve `grid = (...)` assigned earlier in the file
+                    gname = grid_expr.id
+                    for n in ast.walk(src.tree):
+                        if isinstance(n, ast.Assign) and any(
+                                isinstance(t, ast.Name) and t.id == gname
+                                for t in n.targets):
+                            grid_expr = n.value
+                            break
+                if isinstance(grid_expr, (ast.Tuple, ast.List)):
+                    grid_len = len(grid_expr.elts)
+            elif kw.arg in ("in_specs", "out_specs"):
+                spec_args.append(kw.value)
+        if n_prefetch is None or grid_len is None:
+            continue
+        expected = grid_len + n_prefetch
+        # the grid spec's BlockSpecs may be passed inline or via the
+        # surrounding pallas_call — scan the whole file's BlockSpecs
+        for n in ast.walk(src.tree):
+            if not isinstance(n, ast.Call):
+                continue
+            for expr in _index_map_exprs(n):
+                params = _map_params(expr, defs)
+                if params is None:
+                    continue
+                if len(params) != expected:
+                    out.append(Finding(
+                        src.path, expr.lineno, PASS, "FC-PREFETCH-ARITY",
+                        f"index map takes {len(params)} params but the "
+                        f"PrefetchScalarGridSpec implies "
+                        f"{grid_len} grid indices + {n_prefetch} prefetch "
+                        f"refs = {expected} — refs would misbind to grid "
+                        f"axes"))
+    return out
+
+
+def run(sources: Sequence[ModuleSource]) -> List[Finding]:
+    out: List[Finding] = []
+    for src in sources:
+        if not _is_kernel_file(src):
+            continue
+        out.extend(_k1(src))
+        out.extend(_k3(src))
+    for src in sources:
+        out.extend(_k2(src))
+    return out

@@ -1,0 +1,272 @@
+"""Pass 3 — recompile and tracer hazards.
+
+Four rules:
+
+R1  ``jax.jit(...)`` reachable from the serving hot path.  The AOT executor
+    design (DSO) compiles everything up front; a jit call on the hot path
+    means a per-request trace/compile is possible.
+
+R2  Python ``if``/``while`` on traced values inside jit-compiled functions.
+    A function is "jitted" when decorated with ``@jax.jit`` (directly or via
+    ``functools.partial(jax.jit, static_argnames=...)``) or wrapped by name
+    in a ``jax.jit(fn, ...)`` call in the same module.  Branch tests are
+    fine when *static*: literals, ``static_argnames`` parameters, shape
+    metadata (``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``len(...)`` /
+    ``isinstance(...)``), ``is None`` checks, ``self.*`` config reads, and
+    locals assigned from static expressions (``b, m = q.shape``).
+
+R3  Unhashable or non-canonical keys stored into executor caches: subscript
+    stores / ``.add`` / ``.get`` / ``.setdefault`` on ``self`` attributes
+    whose name matches ``cache|memo|seen|inflight|executor`` with a key
+    expression containing a list/set/dict display, an ``np.array`` call, or
+    a bare float literal.  Lists raise ``TypeError`` at runtime; arrays and
+    floats silently fragment the executor family.
+
+R4  Shape-dependent Python branching inside the serving/orchestration
+    modules (``engine.py`` / ``dso.py``) — ``if``/``while`` on ``.shape``
+    subscripts outside ``__init__`` fragments AOT executor families one
+    request at a time.  Bucketing is expected to go through the canonical
+    bucket tables, not ad-hoc shape comparisons.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.common import Finding, ModuleSource, dotted_name, \
+    self_attr
+from repro.analysis.host_sync import reachable_from_roots
+
+PASS = "recompile"
+
+CACHE_ATTR_RE = re.compile(r"cache|memo|seen|inflight|executor")
+R4_FILES = ("engine.py", "dso.py")
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"len", "isinstance", "min", "max", "bool"}
+
+
+# -- R1 ------------------------------------------------------------------
+
+def _r1(sources: Sequence[ModuleSource]) -> List[Finding]:
+    nodes, reach = reachable_from_roots(sources)
+    out: List[Finding] = []
+    for i in sorted(reach):
+        node = nodes[i]
+        for n in ast.walk(node.fn):
+            if isinstance(n, ast.Call) and dotted_name(n.func) == "jax.jit":
+                out.append(Finding(
+                    node.module.path, n.lineno, PASS, "FC-JIT-HOT",
+                    f"{node.qualname}: jax.jit() on the serving hot path — "
+                    f"trace/compile can happen per request; build AOT "
+                    f"executors instead"))
+    return out
+
+
+# -- R2 ------------------------------------------------------------------
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+    return names
+
+
+def _jit_wrapper_call(node: ast.AST) -> Optional[ast.Call]:
+    """Return the Call node if ``node`` is ``jax.jit(...)`` or
+    ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    dn = dotted_name(node.func)
+    if dn in ("jax.jit", "jit"):
+        return node
+    if dn in ("functools.partial", "partial") and node.args \
+            and dotted_name(node.args[0]) in ("jax.jit", "jit"):
+        return node
+    return None
+
+
+def _jitted_functions(src: ModuleSource) -> Dict[str, Set[str]]:
+    """function name -> static arg names, for jitted defs in the module."""
+    jitted: Dict[str, Set[str]] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = _jit_wrapper_call(dec)
+                if call is not None:
+                    jitted[node.name] = _static_argnames(call)
+                elif dotted_name(dec) in ("jax.jit", "jit"):
+                    jitted[node.name] = set()
+        elif isinstance(node, ast.Call):
+            call = _jit_wrapper_call(node)
+            if call is not None and call is node:
+                # jax.jit(fn, static_argnames=...) applied by name
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        jitted[arg.id] = _static_argnames(node)
+    return jitted
+
+
+class _StaticExpr:
+    """Classifies whether an expression is trace-time static."""
+
+    def __init__(self, static_names: Set[str]):
+        self.static = set(static_names) | {"self"}
+
+    def is_static(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.static
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True
+            return self.is_static(node.value)
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in _STATIC_CALLS:
+                return True
+            return False
+        if isinstance(node, ast.Compare):
+            if any(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return True
+            return self.is_static(node.left) and \
+                all(self.is_static(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v) for v in node.values)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_static(node.left) and self.is_static(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return all(self.is_static(e) for e in node.elts)
+        if isinstance(node, ast.Subscript):
+            return self.is_static(node.value)
+        if isinstance(node, ast.IfExp):
+            return all(self.is_static(e)
+                       for e in (node.test, node.body, node.orelse))
+        return False
+
+
+def _r2_function(src: ModuleSource, fn: ast.AST,
+                 statics: Set[str]) -> List[Finding]:
+    classifier = _StaticExpr(statics)
+    out: List[Finding] = []
+    for stmt in ast.walk(fn):
+        # grow the static-local set in statement order (approximate: one
+        # forward pass is enough for the straight-line preambles jitted
+        # kernels use, e.g. ``b, m, h, d = q.shape``)
+        if isinstance(stmt, ast.Assign) and \
+                classifier.is_static(stmt.value):
+            for t in stmt.targets:
+                elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                    else [t]
+                for e in elts:
+                    if isinstance(e, ast.Name):
+                        classifier.static.add(e.id)
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, (ast.If, ast.While)) and \
+                not classifier.is_static(stmt.test):
+            kw = "while" if isinstance(stmt, ast.While) else "if"
+            out.append(Finding(
+                src.path, stmt.lineno, PASS, "FC-TRACED-BRANCH",
+                f"Python `{kw}` on a traced value inside a jitted function "
+                f"— use lax.cond/select or mark the argument static"))
+    return out
+
+
+def _r2(sources: Sequence[ModuleSource]) -> List[Finding]:
+    out: List[Finding] = []
+    for src in sources:
+        jitted = _jitted_functions(src)
+        if not jitted:
+            continue
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in jitted:
+                out.extend(_r2_function(src, node, jitted[node.name]))
+    return out
+
+
+# -- R3 ------------------------------------------------------------------
+
+def _bad_key(expr: ast.AST) -> Optional[str]:
+    for n in ast.walk(expr):
+        if isinstance(n, (ast.List, ast.Set, ast.Dict, ast.ListComp,
+                          ast.SetComp, ast.DictComp)):
+            return "unhashable list/set/dict"
+        if isinstance(n, ast.Call) and dotted_name(n.func) in (
+                "np.array", "np.asarray", "numpy.array", "numpy.asarray",
+                "jnp.array", "jnp.asarray"):
+            return "array object (identity-hashed / unhashable)"
+        if isinstance(n, ast.Constant) and isinstance(n.value, float):
+            return "bare float literal (non-canonical)"
+    return None
+
+
+def _r3(sources: Sequence[ModuleSource]) -> List[Finding]:
+    out: List[Finding] = []
+    for src in sources:
+        for n in ast.walk(src.tree):
+            key: Optional[ast.AST] = None
+            attr: Optional[str] = None
+            if isinstance(n, (ast.Assign, ast.AugAssign)):
+                targets = n.targets if isinstance(n, ast.Assign) \
+                    else [n.target]
+                for t in targets:
+                    if isinstance(t, ast.Subscript):
+                        attr = self_attr(t.value)
+                        key = t.slice
+            elif isinstance(n, ast.Call) and \
+                    isinstance(n.func, ast.Attribute) and \
+                    n.func.attr in ("add", "get", "setdefault", "pop") \
+                    and n.args:
+                attr = self_attr(n.func.value)
+                key = n.args[0]
+            if attr is None or key is None or \
+                    not CACHE_ATTR_RE.search(attr):
+                continue
+            why = _bad_key(key)
+            if why is not None:
+                out.append(Finding(
+                    src.path, n.lineno, PASS, "FC-CACHE-KEY",
+                    f"non-canonical key into self.{attr}: {why} — "
+                    f"canonicalize to a tuple of hashable scalars"))
+    return out
+
+
+# -- R4 ------------------------------------------------------------------
+
+def _r4(sources: Sequence[ModuleSource]) -> List[Finding]:
+    out: List[Finding] = []
+    for src in sources:
+        if os.path.basename(src.path) not in R4_FILES:
+            continue
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                    or node.name == "__init__":
+                continue
+            for stmt in ast.walk(node):
+                if not isinstance(stmt, (ast.If, ast.While)):
+                    continue
+                for n in ast.walk(stmt.test):
+                    if isinstance(n, ast.Subscript) and \
+                            isinstance(n.value, ast.Attribute) and \
+                            n.value.attr == "shape":
+                        out.append(Finding(
+                            src.path, stmt.lineno, PASS, "FC-SHAPE-BRANCH",
+                            f"{node.name}: branching on .shape[...] — "
+                            f"shape-dependent control flow fragments AOT "
+                            f"executor families; route through the bucket "
+                            f"tables"))
+                        break
+    return out
+
+
+def run(sources: Sequence[ModuleSource]) -> List[Finding]:
+    return _r1(sources) + _r2(sources) + _r3(sources) + _r4(sources)

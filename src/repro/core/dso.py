@@ -606,7 +606,8 @@ class CoalescingOrchestrator:
                 target = window_end
                 dls = [c.deadline for c in batch if c.deadline is not None]
                 if dls:
-                    est = self._cost.get((kind, bucket), 0.0)
+                    with self._stat_lock:
+                        est = self._cost.get((kind, bucket), 0.0)
                     target = min(target, min(dls) - est)
                 left = target - now
                 if left <= 0:
@@ -621,7 +622,8 @@ class CoalescingOrchestrator:
 
     def _worker(self, kind: str, bucket: int, ex: Executor):
         key = (kind, bucket)
-        cond, pending = self._cond[key], self._pending[key]
+        cond, pending = (self._cond[key], self._pending[key]
+                         )  # flamecheck: unguarded-ok(dicts frozen after __init__; the heap is only touched under cond)
         while True:
             with cond:
                 while not pending and not self._stop:
@@ -664,7 +666,8 @@ class CoalescingOrchestrator:
                 (1 - self._COST_EWMA) * old + self._COST_EWMA * cost_s
 
     def _dispatch(self, kind: str, bucket: int, ex: Executor,
-                  batch: List[_PendingChunk]):
+                  batch: List[_PendingChunk]
+                  ):  # flamecheck: host-sync-ok(dispatch boundary: results must land on host to fan back out to per-chunk futures)
         n = len(batch)
         try:
             B = self.policy.batch
@@ -716,7 +719,8 @@ class CoalescingOrchestrator:
                     c.future.set_exception(e)
 
     def _dispatch_packed(self, kind: str, bucket: int, ex: Executor,
-                         batch: List[_PendingChunk], packer: SegmentPacker):
+                         batch: List[_PendingChunk], packer: SegmentPacker
+                         ):  # flamecheck: host-sync-ok(dispatch boundary: seg-index planes are built host-side and results fan back out to futures)
         """One packed dispatch: stack each unique KV identity once, build
         the ``[B, bucket]`` seg-index and candidate planes from the packer's
         placements, run the executor, and scatter each segment's exact
@@ -816,7 +820,8 @@ class ImplicitShapeEngine:
         self.compiles = 0
         self._seen: set = set()
 
-    def score(self, request, m: int):
+    def score(self, request, m: int
+              ):  # flamecheck: host-sync-ok(implicit-shape baseline engine: the per-request sync IS the modeled cost)
         if m not in self._seen:
             self._seen.add(m)
             self.compiles += 1

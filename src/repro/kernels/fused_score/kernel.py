@@ -159,13 +159,15 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
         # of batch row b pulls the blocks of pool row idx_ref[b, qi]
         # (clamped for self steps, whose loaded block is unused)
         return (idx_ref[bh // h, qi], (bh % h) // g,
-                jnp.minimum(kj, hist_steps - 1), 0)
+                jnp.minimum(kj, hist_steps - 1),
+                0)  # flamecheck: kernel-ok(pure scalar clamp of a grid index; Python min fails on the traced kj)
 
     def kc_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
         if mode == "cached":
             cj = qi
         else:
-            cj = jnp.clip(kj - hist_steps, 0, nq - 1)
+            cj = jnp.clip(kj - hist_steps, 0,
+                          nq - 1)  # flamecheck: kernel-ok(pure scalar clamp of a grid index; Python min/max fail on the traced kj)
         return (bh // h, (bh % h) // g, cj, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -34,6 +34,8 @@ Both paths are gated against ``ref.py`` (the dequantize → gather → concat
 from __future__ import annotations
 
 import functools
+import threading
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +48,38 @@ from repro.kernels.fused_score.ref import dequantize_values
 
 def _auto_path() -> str:
     return "kernel" if jax.default_backend() == "tpu" else "jnp"
+
+
+# Observability for the 2-D (segment-packed) row_index auto-reroute below:
+# rerouting to the jnp formulation is correct but must not be silent — on
+# TPU it forfeits the kernel path the packer was built to feed.  The count
+# ticks once per traced call (i.e. once per AOT executor family built with
+# packed indices, not per request) and is surfaced by FlameEngine as the
+# ``packed_kernel_reroutes`` ServeMetrics counter.
+_reroute_lock = threading.Lock()
+_packed_reroutes = 0
+_reroute_warned = False
+
+
+def _note_packed_reroute():
+    global _packed_reroutes, _reroute_warned
+    with _reroute_lock:
+        _packed_reroutes += 1
+        first = not _reroute_warned
+        _reroute_warned = True
+    if first:
+        warnings.warn(
+            "fused_score: 2-D (segment-packed) row_index rerouted from the "
+            "Pallas kernel to the jnp formulation — packed segments are not "
+            "bq-aligned yet (ROADMAP: packer `align` knob). Pass "
+            "path='kernel' only with block-aligned segments.",
+            RuntimeWarning, stacklevel=4)
+
+
+def packed_reroute_count() -> int:
+    """Total 2-D row_index kernel->jnp auto-reroutes this process."""
+    with _reroute_lock:
+        return _packed_reroutes
 
 
 def _norm_scale(scale, u: int, hkv: int):
@@ -231,6 +265,7 @@ def _fused_attention(q, k_hist, v_hist, k_cand, v_cand, *, mode: str,
             # backend; explicit path="kernel" remains the tested
             # aligned-segment contract.
             path = "jnp"
+            _note_packed_reroute()
     if k_hist.shape[1] == 0:
         raise ValueError("fused attention needs a non-empty history/prefix "
                          "segment (degenerate cases route to the framework "

@@ -67,6 +67,7 @@ from repro.models.model import ModelBundle
 from repro.serving.api import (AdmissionQueueFull, ResponseFuture,
                                ServeMetrics, ServeRequest, ServeResponse,
                                register_engine)
+from repro.kernels.fused_score.ops import packed_reroute_count
 from repro.serving.kv_cache import (HistoryKVPool, KVCacheManager,
                                     quantize_kv, raw_kv_specs, raw_kv_view)
 
@@ -235,11 +236,13 @@ class _SideFeatureMixin:
                 f"request {req.request_id}: candidates must be a non-empty "
                 f"1-D id array, got "
                 f"{None if req.candidates is None else req.candidates.shape}")
-        if req.m and int(np.min(req.candidates)) < 0:
+        if req.m and int(np.min(
+                req.candidates)) < 0:  # flamecheck: host-sync-ok(admission validation over the caller's host id array)
             raise ValueError(
                 f"request {req.request_id}: candidate ids must be >= 0 "
                 f"(negative ids are reserved for chunk-padding sentinels)")
-        if req.history.ndim != 1 or req.history.shape[0] < self.n_history:
+        if req.history.ndim != 1 or \
+                req.history.shape[0] < self.n_history:  # flamecheck: recompile-ok(admission validation that raises; selects no executor)
             raise ValueError(
                 f"request {req.request_id}: history must be a 1-D id array "
                 f"with >= n_history={self.n_history} entries, got "
@@ -471,6 +474,10 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             self._encode_lock = threading.Lock()
             self._key_memo: Dict[int, tuple] = {}   # request_id -> (key, fp)
 
+        # baseline for the packed_kernel_reroutes delta counter: the ops
+        # module count is process-wide and may predate this engine
+        self._reroutes_seen = packed_reroute_count()
+
         hist_spec = lambda batch: jax.ShapeDtypeStruct(  # noqa: E731
             (batch, n_history), jnp.int32)
         side_spec = lambda batch: jax.ShapeDtypeStruct(  # noqa: E731
@@ -610,7 +617,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     def pool(self):
         return self.dso
 
-    def _pool_key(self, request: ServeRequest) -> tuple:
+    def _pool_key(self, request: ServeRequest
+                  ):  # flamecheck: host-sync-ok(admission-time canonicalization: histories arrive as host numpy and the content hash must read host bytes)
         fp = self._fingerprint(np.asarray(request.history, np.int32))
         key = ("u", int(request.user_id)) \
             if request.user_id is not None else ("h", fp)
@@ -619,8 +627,11 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     def _admit_hook(self, request: ServeRequest):
         if self.history_pool is not None and request.candidates is not None:
             key, fp = self._pool_key(request)
-            # stash for _execute so the O(n_history) hash runs once
-            self._key_memo[request.request_id] = (key, fp)
+            # stash for _execute so the O(n_history) hash runs once; the
+            # memo is written on the submitter thread and consumed on a
+            # pipeline worker, so it shares the encode lock
+            with self._encode_lock:
+                self._key_memo[request.request_id] = (key, fp)
             if self.history_pool.contains(key, fp):
                 return      # pool hit ahead: side features never consumed
         super()._admit_hook(request)
@@ -671,7 +682,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                                digest_size=16).hexdigest()
 
     @staticmethod
-    def _shared_prefix(cached: Optional[np.ndarray], new: np.ndarray) -> int:
+    def _shared_prefix(cached: Optional[np.ndarray], new: np.ndarray
+                       ) -> int:  # flamecheck: host-sync-ok(prefix diff of two host-resident id windows; no device arrays involved)
         """Length of the common leading run of two history windows (-1 when
         no basis window is available)."""
         if cached is None or cached.shape != new.shape:
@@ -755,7 +767,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             # pooling them doesn't pin the padded parent or make pool_bytes
             # under-report
             kv = tuple(np.array(a) if isinstance(a, np.ndarray) else a
-                       for a in jax.tree.leaves(kv_tree))
+                       for a in jax.tree.leaves(
+                           kv_tree))  # flamecheck: host-sync-ok(copies host VIEWS out of the padded stacked parent so pooling them cannot pin it)
             self.history_pool.put(key, fp, kv, hist_window=hist[0],
                                   refreshes=refreshes)
             self._metrics.set_gauge("pool_bytes_used",
@@ -780,14 +793,18 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         return kv, path, t1 - t0
 
     def _execute(self, req: ServeRequest):
-        memo = (self._key_memo.pop(req.request_id, None)
-                if self.history_pool is not None else None)
+        memo = None
+        if self.history_pool is not None:
+            with self._encode_lock:
+                memo = self._key_memo.pop(req.request_id, None)
         self._check_request(req)
         t0 = time.perf_counter()
         dl = req.deadline_s if req.deadline_s is not None else self._deadline_s
         deadline = (req.arrival_t + dl) if dl else None
-        hist = np.asarray(req.history[None, :self.n_history], np.int32)
-        cand = np.asarray(req.candidates[None], np.int32)
+        hist = np.asarray(req.history[None, :self.n_history],
+                          np.int32)  # flamecheck: host-sync-ok(request arrays arrive as host numpy; dtype canonicalized once at admission)
+        cand = np.asarray(req.candidates[None],
+                          np.int32)  # flamecheck: host-sync-ok(request arrays arrive as host numpy; dtype canonicalized once at admission)
         if self.history_pool is None:
             side = self._side_features(req.history)
             t1 = time.perf_counter()
@@ -840,6 +857,13 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         self._metrics.set_gauge(
             "padded_fraction", 1.0 - valid / slots if slots else 0.0)
         self._metrics.set_gauge("queue_delay_ms", st["queue_delay_ms"])
+        # satellite observability for the packed-seg kernel->jnp reroute:
+        # the ops-module count is process-wide, so fold in deltas only
+        reroutes = packed_reroute_count()
+        delta = reroutes - self._reroutes_seen
+        if delta > 0:
+            self._metrics.incr("packed_kernel_reroutes", delta)
+        self._reroutes_seen = reroutes
         out = {f"dso_{k}": v for k, v in st.items()}
         out["dso_build_s"] = self.dso.build_time_s
         out.update({f"pda_{k}": v for k, v in
@@ -883,7 +907,8 @@ class ImplicitShapeServingEngine(_SideFeatureMixin, _PipelinedEngine):
         super().__init__(max_pending=max_pending, n_workers=n_workers,
                          name="implicit")
 
-    def _execute(self, req: ServeRequest):
+    def _execute(self, req: ServeRequest
+                 ):  # flamecheck: host-sync-ok(Table-5 Default baseline: per-request jit + sync is the comparison point, not a defect)
         self._check_request(req)
         t0 = time.perf_counter()
         side = self._side_features(req.history)
@@ -901,7 +926,8 @@ class ImplicitShapeServingEngine(_SideFeatureMixin, _PipelinedEngine):
                                     "execute_s": t2 - t1}
 
     def _extra_metrics(self):
-        out = {"jit_compiles": self.compiles}
+        with self._seen_lock:
+            out = {"jit_compiles": self.compiles}
         out.update({f"pda_{k}": v for k, v in
                     dataclasses.asdict(self.features.stats).items()})
         return out
@@ -929,7 +955,8 @@ class TextServingEngine(_PipelinedEngine):
         # decode state is single-stream: exactly one pipeline worker
         super().__init__(max_pending=max_pending, n_workers=1, name="text")
 
-    def _execute(self, req: ServeRequest):
+    def _execute(self, req: ServeRequest
+                 ):  # flamecheck: host-sync-ok(decode engine: prompts are host token arrays by contract)
         t0 = time.perf_counter()
         out = self.generate([np.asarray(req.history)],
                             n_tokens=req.n_tokens)[0]
@@ -959,4 +986,5 @@ class TextServingEngine(_PipelinedEngine):
                 for i, t in enumerate(last):
                     outs[i].append(int(t))
                 cur += 1
-            return [np.array(o) for o in outs]
+            return [np.array(o) for o in
+                    outs]  # flamecheck: host-sync-ok(autoregressive decode emits host token ids per step by design)

@@ -172,7 +172,9 @@ def quantize_kv(kv, dtype: str):
     return payload, payload_bytes(payload)
 
 
-def quantized_nbytes(kv, dtype: str) -> int:
+def quantized_nbytes(
+        kv, dtype: str
+) -> int:  # flamecheck: host-sync-ok(shape arithmetic over .shape tuples and Python ints; no device data is read)
     """Stored bytes :func:`quantize_kv` would produce, WITHOUT quantizing —
     shape/dtype arithmetic only, so admission prechecks are free."""
     total = 0
@@ -243,7 +245,9 @@ def _stored_arrays(payload):
             out.append(leaf)
     return out
 
-def payload_bytes(payload) -> int:
+def payload_bytes(
+        payload
+) -> int:  # flamecheck: host-sync-ok(shape arithmetic over .shape tuples and Python ints; no device data is read)
     """Stored bytes of a (possibly quantized) payload pytree."""
     return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
                for a in _stored_arrays(payload))
@@ -375,7 +379,8 @@ class HistoryKVPool:
             return raw_kv_view(e.payload)
         kv = dequantize_kv(e.payload)
         if self.placement == "host":
-            kv = jax.tree.map(np.asarray, kv)
+            kv = jax.tree.map(
+                np.asarray, kv)  # flamecheck: host-sync-ok(host-placement pools hand out host arrays by contract)
         return kv
 
     def lookup(self, key: Hashable, fingerprint: Hashable, *,
@@ -469,7 +474,8 @@ class HistoryKVPool:
         return self._load(e, raw)
 
     # ---- admission side ----
-    def _admit(self, key: Hashable, entry: _PoolEntry) -> List[_PoolEntry]:
+    def _admit(self, key: Hashable, entry: _PoolEntry
+               ) -> List[_PoolEntry]:  # flamecheck: locked-by-caller(self._lock)
         """Insert into the primary tier and evict until limits hold.
         Caller holds the lock.  Returns the entries demoted to the spill
         tier — their payloads still sit in the primary tier's memory space;
@@ -532,7 +538,8 @@ class HistoryKVPool:
         payload, nbytes = quantize_kv(kv, self.dtype)
         payload = _place(payload, self.placement)
         if hist_window is not None:
-            hist_window = np.array(hist_window)     # defensive copy
+            hist_window = np.array(
+                hist_window)  # flamecheck: host-sync-ok(defensive copy of the caller-owned host id window)
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:

@@ -1,0 +1,436 @@
+"""flamecheck (repro.analysis) — fixture coverage for all four passes.
+
+Each test writes a minimal fixture module, runs the relevant pass through
+the library API, and asserts (a) the violation is found, (b) the matching
+pragma suppresses it, and (c) ``--strict`` semantics (unused pragmas,
+empty reasons) hold.  A subprocess test pins the CLI exit-code contract
+that scripts/ci.sh gates on.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.cli import PASSES, default_paths, load_sources, \
+    run_passes
+from repro.analysis.common import ModuleSource
+
+SRC_ROOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _findings(tmp_path, name, code, passes=tuple(PASSES), strict=False):
+    src = ModuleSource(str(tmp_path / name), code)
+    return [f for f in run_passes([src], passes, strict=strict)]
+
+
+def _active(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# pass 1: lock discipline
+# ---------------------------------------------------------------------------
+
+LOCK_FIXTURE = """
+import threading
+
+class Pool:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries = {}
+        self.bytes_used = 0
+
+    def put(self, k, v):
+        with self._lock:
+            self._entries[k] = v
+            self.bytes_used += 1
+
+    def peek(self, k):
+        return self._entries.get(k){pragma}
+"""
+
+
+def test_lock_unguarded_read_found(tmp_path):
+    code = LOCK_FIXTURE.replace("{pragma}", "")
+    fs = _active(_findings(tmp_path, "m.py", code,
+                           passes=("lock-discipline",)))
+    assert len(fs) == 1
+    assert fs[0].code == "FC-LOCK"
+    assert "_entries" in fs[0].message and "peek" in fs[0].message
+
+
+def test_lock_pragma_suppresses(tmp_path):
+    code = LOCK_FIXTURE.replace(
+        "{pragma}",
+        "  # flamecheck: unguarded-ok(read-only probe; stale OK)")
+    fs = _findings(tmp_path, "m.py", code, passes=("lock-discipline",))
+    assert len(fs) == 1 and fs[0].suppressed
+    assert not _active(fs)
+
+
+def test_lock_guarded_access_clean(tmp_path):
+    code = textwrap.dedent("""
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._entries = {}
+
+            def put(self, k, v):
+                with self._lock:
+                    self._entries[k] = v
+
+            def get(self, k):
+                with self._lock:
+                    return self._entries.get(k)
+        """)
+    assert not _findings(tmp_path, "m.py", code,
+                         passes=("lock-discipline",))
+
+
+def test_lock_locked_by_caller_pragma(tmp_path):
+    code = textwrap.dedent("""
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._entries = {}
+
+            def put(self, k, v):
+                with self._lock:
+                    self._admit(k, v)
+
+            def _admit(self, k, v):  # flamecheck: locked-by-caller(self._lock)
+                self._entries[k] = v
+        """)
+    assert not _active(_findings(tmp_path, "m.py", code,
+                                 passes=("lock-discipline",)))
+
+
+def test_lock_condition_shares_wrapped_lock(tmp_path):
+    """Condition(self._lock) and self._lock are one lock to the pass."""
+    code = textwrap.dedent("""
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition(self._lock)
+                self._items = []
+
+            def put(self, x):
+                with self._lock:
+                    self._items.append(x)
+
+            def drain(self):
+                with self._cv:
+                    return self._items.pop()
+        """)
+    assert not _findings(tmp_path, "m.py", code,
+                         passes=("lock-discipline",))
+
+
+def test_lock_alias_and_heappush_tracked(tmp_path):
+    """cond aliasing + heapq first-arg mutation, the dso.py idioms."""
+    code = textwrap.dedent("""
+        import heapq
+        import threading
+
+        class Orch:
+            def __init__(self):
+                self._cond = {k: threading.Condition() for k in (1, 2)}
+                self._pending = {k: [] for k in (1, 2)}
+
+            def submit(self, k, item):
+                cond = self._cond[k]
+                with cond:
+                    heapq.heappush(self._pending[k], item)
+
+            def steal(self, k):
+                return self._pending[k]
+        """)
+    fs = _active(_findings(tmp_path, "m.py", code,
+                           passes=("lock-discipline",)))
+    assert len(fs) == 1 and "steal" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# pass 2: host sync in hot paths
+# ---------------------------------------------------------------------------
+
+SYNC_FIXTURE = """
+import numpy as np
+
+class FlameEngine:
+    def submit(self, req):
+        return self._score(req)
+
+    def _score(self, req):
+        arr = np.asarray(req.history){pragma}
+        return arr.sum()
+
+def offline_tool(x):
+    return np.asarray(x)    # NOT reachable from the hot path
+"""
+
+
+def test_host_sync_reachable_found(tmp_path):
+    fs = _active(_findings(tmp_path, "m.py",
+                           SYNC_FIXTURE.replace("{pragma}", ""),
+                           passes=("host-sync",)))
+    assert len(fs) == 1
+    assert fs[0].code == "FC-SYNC-NP" and "_score" in fs[0].message
+
+
+def test_host_sync_pragma_suppresses(tmp_path):
+    code = SYNC_FIXTURE.replace(
+        "{pragma}",
+        "  # flamecheck: host-sync-ok(request arrays are host-side)")
+    assert not _active(_findings(tmp_path, "m.py", code,
+                                 passes=("host-sync",)))
+
+
+def test_host_sync_detects_item_and_device_get(tmp_path):
+    code = textwrap.dedent("""
+        import jax
+        import numpy as np
+
+        class CoalescingOrchestrator:
+            def _worker(self):
+                out = self._run()
+                jax.block_until_ready(out)
+                host = jax.tree.map(np.asarray, out)
+                return float(np.max(host)), out.item()
+        """)
+    codes = {f.code for f in _active(_findings(
+        tmp_path, "m.py", code, passes=("host-sync",)))}
+    assert codes == {"FC-SYNC-JAX", "FC-SYNC-CALLBACK", "FC-SYNC-SCALAR",
+                     "FC-SYNC-METHOD"}
+
+
+# ---------------------------------------------------------------------------
+# pass 3: recompile / tracer hazards
+# ---------------------------------------------------------------------------
+
+def test_recompile_traced_branch_found(tmp_path):
+    code = textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.sum() > 0:
+                return x
+            return -x
+        """)
+    fs = _active(_findings(tmp_path, "m.py", code, passes=("recompile",)))
+    assert len(fs) == 1 and fs[0].code == "FC-TRACED-BRANCH"
+
+
+def test_recompile_static_branches_clean(tmp_path):
+    code = textwrap.dedent("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, y, mode):
+            b, m = x.shape
+            if mode == "causal":
+                x = x + 1
+            if y is None:
+                return x
+            if x.ndim == 3 and b > m:
+                return x * 2
+            while len(x.shape) < 4:
+                x = x[None]
+            return x
+        """)
+    assert not _active(_findings(tmp_path, "m.py", code,
+                                 passes=("recompile",)))
+
+
+def test_recompile_bad_cache_key_found(tmp_path):
+    code = textwrap.dedent("""
+        import numpy as np
+
+        class Eng:
+            def remember(self, hist, out):
+                self._cache[np.array(hist)] = out
+                self._executors[[1, 2]] = out
+                self._memo.get((1, 2.5))
+        """)
+    fs = _active(_findings(tmp_path, "m.py", code, passes=("recompile",)))
+    assert len(fs) == 3
+    assert {f.code for f in fs} == {"FC-CACHE-KEY"}
+
+
+def test_recompile_jit_in_hot_path_found(tmp_path):
+    code = textwrap.dedent("""
+        import jax
+
+        class FlameEngine:
+            def submit(self, req):
+                fn = jax.jit(lambda x: x * 2)   # per-request trace
+                return fn(req)
+        """)
+    fs = _active(_findings(tmp_path, "m.py", code, passes=("recompile",)))
+    assert len(fs) == 1 and fs[0].code == "FC-JIT-HOT"
+
+
+def test_recompile_shape_branch_in_serving_module(tmp_path):
+    code = textwrap.dedent("""
+        class Engine:
+            def route(self, x):
+                if x.shape[0] > 128:
+                    return self.big(x)
+                return self.small(x)
+        """)
+    fs = _active(_findings(tmp_path, "engine.py", code,
+                           passes=("recompile",)))
+    assert len(fs) == 1 and fs[0].code == "FC-SHAPE-BRANCH"
+    # same code outside the serving modules is not R4's business
+    assert not _active(_findings(tmp_path, "util.py", code,
+                                 passes=("recompile",)))
+
+
+# ---------------------------------------------------------------------------
+# pass 4: Pallas kernel contracts
+# ---------------------------------------------------------------------------
+
+IMPURE_MAP_FIXTURE = """
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def build(nk):
+    def kv_map(i, j):
+        return (i, jnp.minimum(j, nk - 1)){pragma}
+    return pl.BlockSpec((1, 128), kv_map)
+"""
+
+
+def test_kernel_impure_index_map_found(tmp_path):
+    fs = _active(_findings(tmp_path, "kernel.py",
+                           IMPURE_MAP_FIXTURE.replace("{pragma}", ""),
+                           passes=("kernel-contract",)))
+    assert len(fs) == 1 and fs[0].code == "FC-INDEX-MAP-JNP"
+
+
+def test_kernel_pragma_suppresses(tmp_path):
+    code = IMPURE_MAP_FIXTURE.replace(
+        "{pragma}",
+        "  # flamecheck: kernel-ok(scalar clamp of a traced index)")
+    assert not _active(_findings(tmp_path, "kernel.py", code,
+                                 passes=("kernel-contract",)))
+
+
+def test_kernel_mutable_global_closure_found(tmp_path):
+    code = textwrap.dedent("""
+        from jax.experimental import pallas as pl
+
+        OFFSETS = [0, 1, 2]
+
+        def build():
+            return pl.BlockSpec((1, 8), lambda i: (OFFSETS[i], 0))
+        """)
+    fs = _active(_findings(tmp_path, "kernel.py", code,
+                           passes=("kernel-contract",)))
+    assert len(fs) == 1 and fs[0].code == "FC-INDEX-MAP-STATE"
+
+
+def test_kernel_missing_pad_guard_found(tmp_path):
+    code = textwrap.dedent("""
+        from repro.kernels.fake.kernel import fake_kernel
+
+        def fake_op(x):
+            return fake_kernel(x)
+        """)
+    fs = _active(_findings(tmp_path, "ops.py", code,
+                           passes=("kernel-contract",)))
+    assert len(fs) == 1 and fs[0].code == "FC-NO-PAD-GUARD"
+    guarded = textwrap.dedent("""
+        from repro.kernels.fake.kernel import fake_kernel
+
+        def fake_op(x, bk=128):
+            pad = (-x.shape[0]) % bk
+            return fake_kernel(x)
+        """)
+    assert not _active(_findings(tmp_path, "ops.py", guarded,
+                                 passes=("kernel-contract",)))
+
+
+def test_kernel_prefetch_arity_mismatch_found(tmp_path):
+    code = textwrap.dedent("""
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def build(b, nq):
+            def q_map(i, j, idx_ref):   # needs 2 grid + 2 prefetch = 4
+                return (i, j)
+            return pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(b, nq),
+                in_specs=[pl.BlockSpec((1, 8), q_map)])
+        """)
+    fs = _active(_findings(tmp_path, "kernel.py", code,
+                           passes=("kernel-contract",)))
+    assert len(fs) == 1 and fs[0].code == "FC-PREFETCH-ARITY"
+    assert "2 grid indices + 2 prefetch" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# pragma hygiene (--strict) and the CLI contract
+# ---------------------------------------------------------------------------
+
+def test_strict_flags_unused_pragma_and_empty_reason(tmp_path):
+    code = textwrap.dedent("""
+        X = 1  # flamecheck: unguarded-ok(nothing here needs a lock)
+        Y = 2  # flamecheck: host-sync-ok()
+        """)
+    fs = _findings(tmp_path, "m.py", code, strict=True)
+    codes = sorted(f.code for f in fs)
+    assert codes == ["FC-PRAGMA-REASON", "FC-PRAGMA-UNUSED",
+                     "FC-PRAGMA-UNUSED"]
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=str(cwd))
+
+
+def test_cli_exit_codes(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f():\n    return 1\n")
+    bad = tmp_path / "m.py"
+    bad.write_text(LOCK_FIXTURE.replace("{pragma}", ""))
+    assert _run_cli(["--strict", str(clean)], tmp_path).returncode == 0
+    r = _run_cli(["--strict", str(bad)], tmp_path)
+    assert r.returncode == 1
+    assert "FC-LOCK" in r.stdout
+    assert _run_cli(["--passes", "nonsense", str(clean)],
+                    tmp_path).returncode == 2
+
+
+def test_cli_json_output(tmp_path):
+    import json
+    bad = tmp_path / "m.py"
+    bad.write_text(LOCK_FIXTURE.replace("{pragma}", ""))
+    r = _run_cli(["--json", str(bad)], tmp_path)
+    assert r.returncode == 1
+    data = json.loads(r.stdout)
+    assert len(data) == 1 and data[0]["code"] == "FC-LOCK"
+
+
+def test_repo_is_baseline_clean():
+    """The shipped tree must stay flamecheck-clean in strict mode —
+    the same gate scripts/ci.sh runs."""
+    sources = load_sources(default_paths())
+    assert sources, "default target set resolved to no files"
+    active = _active(run_passes(sources, strict=True))
+    assert not active, "\n".join(f.format() for f in active)
