@@ -11,7 +11,12 @@ construct reachable from it that forces a device→host sync or host copy:
 - ``float(...)`` / ``int(...)`` whose argument mentions ``np.`` / ``jnp.``
   (S4 — conversion of an array scalar blocks on the device),
 - ``np.asarray`` / ``jax.device_get`` passed as a callback, e.g.
-  ``jax.tree.map(np.asarray, out)`` (S5).
+  ``jax.tree.map(np.asarray, out)`` (S5),
+- ``jax.device_put(...)`` (S6 — a host→device transfer staged from the
+  hot path; blocks on the source buffer and, without a committed sharding,
+  can force a later reshard.  A deliberate publish of pool KV into the
+  executors' ``NamedSharding`` layout is the justified form — mesh-sharded
+  serving commits KV where its heads live — and carries a pragma).
 
 Call resolution is name-based (CHA-style): ``self.m(...)`` and ``obj.m(...)``
 link to every analyzed class defining ``m``; bare names link to module-level
@@ -48,6 +53,7 @@ EXTRA_EDGES = {
 
 SYNC_NP_FUNCS = {"asarray", "array"}
 SYNC_JAX_FUNCS = {"device_get", "block_until_ready"}
+SYNC_JAX_PUT = {"device_put"}
 SYNC_METHODS = {"item", "block_until_ready"}
 
 
@@ -162,6 +168,12 @@ def _scan_function(node: _Node) -> List[Finding]:
                 continue
             if head == "jax" and tail in SYNC_JAX_FUNCS:
                 add(n.lineno, "FC-SYNC-JAX", f"{dn}() blocks on the device")
+                continue
+            if head == "jax" and tail in SYNC_JAX_PUT:
+                add(n.lineno, "FC-SYNC-PUT",
+                    f"{dn}() stages a host->device transfer on the hot "
+                    f"path (justified when publishing into a committed "
+                    f"NamedSharding layout)")
                 continue
         if isinstance(f, ast.Attribute) and f.attr in SYNC_METHODS \
                 and dotted_name(f.value) not in ("np", "numpy", "jnp"):

@@ -179,16 +179,30 @@ def _r2_function(src: ModuleSource, fn: ast.AST,
     return out
 
 
+def _module_constants(src: ModuleSource) -> Set[str]:
+    """Module-level names bound to literal constants — trace-time static
+    by construction (e.g. threshold knobs like ``_SEG_GEMM_MIN_S``)."""
+    out: Set[str] = set()
+    for stmt in src.tree.body:
+        if isinstance(stmt, ast.Assign) and \
+                isinstance(stmt.value, ast.Constant):
+            out.update(t.id for t in stmt.targets
+                       if isinstance(t, ast.Name))
+    return out
+
+
 def _r2(sources: Sequence[ModuleSource]) -> List[Finding]:
     out: List[Finding] = []
     for src in sources:
         jitted = _jitted_functions(src)
         if not jitted:
             continue
+        consts = _module_constants(src)
         for node in ast.walk(src.tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
                     and node.name in jitted:
-                out.extend(_r2_function(src, node, jitted[node.name]))
+                out.extend(_r2_function(src, node,
+                                        jitted[node.name] | consts))
     return out
 
 

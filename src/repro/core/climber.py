@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as shd
 from repro.core import sumi
 from repro.models import attention as A
 from repro.models import layers as L
@@ -115,6 +116,7 @@ def _fuse_and_head(params, h, cfg):
         + params["gate_b"].astype(jnp.float32)
     gates = jax.nn.softmax(gate_logits, axis=2)
     fused = (gates * h.astype(jnp.float32)).sum(axis=2)  # [B,M,d]
+    fused = shd.constrain_ctx(fused, "batch", None, None)
     fused = L.apply_norm(cfg, params["out_norm"], fused)
 
     # MMoE expert head
@@ -157,6 +159,9 @@ def _block_forward(bp, x, n_history: int, cfg, impl: str):
     def layer(x, p):
         h = L.apply_norm(cfg, p["norm1"], x)
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        # mesh-sharded serving: batch over data, heads tensor-parallel
+        # (no-op without an active mesh_rules context)
+        q = shd.constrain_ctx(q, "batch", None, "heads", None)
         o = sumi.sumi_attention(q, k, v, n_history, impl=impl,
                                 temperature=_tau(p))
         return _layer_tail(p, x, o, cfg, impl), None
@@ -178,6 +183,7 @@ def _block_encode_kv(bp, x, cfg, impl: str):
     def layer(x, p):
         h = L.apply_norm(cfg, p["norm1"], x)
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        q = shd.constrain_ctx(q, "batch", None, "heads", None)
         # n_history == s: the SUMI mask degenerates to causal here
         o = sumi.sumi_attention(q, k, v, s, impl=impl, temperature=_tau(p))
         return _layer_tail(p, x, o, cfg, impl), (k, v)
@@ -214,6 +220,16 @@ def _block_score(bp, cand, k_hist, v_hist, cfg, impl: str, *,
             (p, kh, vh), khs, vhs = inp, None, None
         h = L.apply_norm(cfg, p["norm1"], x)
         q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        # mesh-sharded serving: candidate queries shard batch-over-data and
+        # heads-over-model; the stacked pool rows kh/vh [U,S,Hkv,D] keep
+        # their user axis replicated (so the per-candidate row gather never
+        # crosses shards) with heads — or, CP fallback, the history
+        # length — on the model axis
+        q = shd.constrain_ctx(q, "batch", None, "heads", None)
+        kh = shd.constrain_ctx(kh, None, "cache_seq_shard", "cache_heads",
+                               None)
+        vh = shd.constrain_ctx(vh, None, "cache_seq_shard", "cache_heads",
+                               None)
         o = sumi.cached_candidate_attention(
             q, kh, vh, k, v, impl=impl, temperature=_tau(p),
             k_scale=khs, v_scale=vhs, row_index=row_index)

@@ -222,12 +222,24 @@ class CoalescePolicy:
     many distinct users one packed dispatch can steer to): packed rows are
     dense, so a fraction of the unpacked row capacity carries the same
     candidate throughput at a fraction of the executor cost.  ``None``
-    defaults to ``max_batch``."""
+    defaults to ``max_batch``.
+
+    ``data_ways`` (mesh-sharded serving) is the data-parallel width of the
+    engine's device mesh.  ``max_batch`` / ``pack_rows`` are PER-DEVICE
+    capacities: the compiled global batch/row axes scale by ``data_ways``
+    so one coalesced flush feeds every data shard a full per-device batch
+    without resharding — throughput scales with the mesh instead of each
+    device serving a 1/ways sliver of a fixed batch.  Preserving the
+    per-device (local) shape is also what makes sharded serving bitwise
+    against a single-device engine on CPU CI: XLA's kernel selection (and
+    hence FP reduction order) depends on the local batch shape, so equal
+    local shapes mean identical per-row arithmetic."""
 
     enabled: bool = True
     max_batch: int = 4
     window_s: float = 0.002
     pack_rows: Optional[int] = None
+    data_ways: int = 1
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -236,18 +248,25 @@ class CoalescePolicy:
             raise ValueError(f"window_s must be >= 0, got {self.window_s}")
         if self.pack_rows is not None and self.pack_rows < 1:
             raise ValueError(f"pack_rows must be >= 1, got {self.pack_rows}")
+        if self.data_ways < 1:
+            raise ValueError(f"data_ways must be >= 1, got {self.data_ways}")
 
     @property
     def batch(self) -> int:
-        """Compiled batch-axis size: coalescing off degrades to (1, bucket)."""
-        return self.max_batch if self.enabled else 1
+        """Compiled (global) batch-axis size: coalescing off degrades to
+        (1, bucket); mesh-sharded engines compile ``max_batch`` rows PER
+        data shard."""
+        return self.max_batch * self.data_ways if self.enabled else 1
 
     @property
     def rows(self) -> int:
-        """Compiled row-axis size of PACKED executors."""
+        """Compiled (global) row-axis size of PACKED executors — scales by
+        the data ways like ``batch`` does."""
         if not self.enabled:
             return 1
-        return self.pack_rows if self.pack_rows is not None else self.batch
+        per_dev = self.pack_rows if self.pack_rows is not None else \
+            self.max_batch
+        return per_dev * self.data_ways
 
 
 _SEQ = itertools.count()
@@ -420,7 +439,8 @@ class CoalescingOrchestrator:
                  families: Optional[Dict[str, Sequence[int]]] = None,
                  dedup_kinds: Optional[Dict[str, int]] = None,
                  device_output_kinds: Sequence[str] = (),
-                 packed_kinds: Optional[Dict[str, int]] = None):
+                 packed_kinds: Optional[Dict[str, int]] = None,
+                 serialize_dispatch: bool = False):
         self._legacy = families is None
         if families is None:
             # adapt the single-family callbacks to the kinds signatures once
@@ -465,12 +485,26 @@ class CoalescingOrchestrator:
         self.valid_count: Dict[Tuple[str, int], int] = {}
         self._cost: Dict[Tuple[str, int], float] = {}   # EWMA dispatch cost
         self._stat_lock = threading.Lock()
+        # Mesh-sharded executables run one computation across EVERY device:
+        # XLA's in-process collectives rendezvous per-computation with no
+        # cross-computation ordering, so two dispatch threads whose
+        # executions overlap on shared devices can interleave their
+        # collectives and deadlock (observed on forced-host CPU meshes).
+        # Engines serving a multi-device mesh set serialize_dispatch so the
+        # launch+wait region runs under one process-wide lock; single-device
+        # executables keep fully concurrent streams.
+        self._dispatch_lock = threading.Lock() if serialize_dispatch \
+            else None
         self._stop = False
 
         self._pending: Dict[Tuple[str, int], List[_PendingChunk]] = {}
         self._cond: Dict[Tuple[str, int], threading.Condition] = {}
         self._threads: List[threading.Thread] = []
         self.build_time_s = 0.0
+        #: (kind, bucket) -> the AOT executable all streams share; exposed
+        #: so tests/benches can inspect compiled HLO (e.g. assert the
+        #: steady-state hot path carries no cross-shard reshard collectives)
+        self.compiled: Dict[Tuple[str, int], object] = {}
 
         t0 = time.perf_counter()
         for kind, bs in self.families.items():
@@ -480,6 +514,7 @@ class CoalescingOrchestrator:
                 self.slot_count[(kind, b)] = 0
                 self.valid_count[(kind, b)] = 0
                 compiled = build_fn(kind, b, policy.batch)
+                self.compiled[(kind, b)] = compiled
                 for s in range(n_streams):
                     ex = Executor(b, compiled, eid=len(self._threads))
                     th = threading.Thread(
@@ -665,6 +700,20 @@ class CoalescingOrchestrator:
             self._cost[key] = cost_s if old is None else \
                 (1 - self._COST_EWMA) * old + self._COST_EWMA * cost_s
 
+    def _run_executor(self, ex: Executor, stacked) -> Tuple[object, float]:  # flamecheck: host-sync-ok(dispatch boundary: the wait must happen inside the timed region — and inside the dispatch lock when executables are multi-device)
+        """Launch + wait, timed; serialized under the dispatch lock when the
+        executables are multi-device (see ``serialize_dispatch``)."""
+        if self._dispatch_lock is not None:
+            with self._dispatch_lock:
+                t0 = time.perf_counter()
+                out = ex(*stacked)
+                jax.block_until_ready(out)
+                return out, time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = ex(*stacked)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
     def _dispatch(self, kind: str, bucket: int, ex: Executor,
                   batch: List[_PendingChunk]
                   ):  # flamecheck: host-sync-ok(dispatch boundary: results must land on host to fan back out to per-chunk futures)
@@ -699,10 +748,7 @@ class CoalescingOrchestrator:
                 rests = [c.args for c in batch]
             for j in range(len(rests[0])):
                 stacked.append(self._stack_rows([r[j] for r in rests], B))
-            t0 = time.perf_counter()
-            out = ex(*stacked)
-            jax.block_until_ready(out)
-            dt = time.perf_counter() - t0
+            out, dt = self._run_executor(ex, stacked)
             if kind in self._device_output:
                 host = out        # stays device-resident (pool entries)
             else:
@@ -744,10 +790,7 @@ class CoalescingOrchestrator:
                 cands[row, off:off + c.valid] = np.asarray(c.args[n_lead])[0]
                 seg_idx[row, off:off + c.valid] = slot
             stacked += [seg_idx, cands]
-            t0 = time.perf_counter()
-            out = ex(*stacked)
-            jax.block_until_ready(out)
-            dt = time.perf_counter() - t0
+            out, dt = self._run_executor(ex, stacked)
             host = jax.tree.map(np.asarray, out)
             self._note_dispatch(kind, bucket, n, rows_used=packer.n_rows,
                                 valid=sum(c.valid for c in batch),

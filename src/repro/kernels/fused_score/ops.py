@@ -82,6 +82,22 @@ def packed_reroute_count() -> int:
         return _packed_reroutes
 
 
+# Segment-packed (2-D row_index) histories at/above this length skip the
+# per-candidate [B,M,S,Hkv,D] value gather and score via a dense all-rows
+# GEMM + exact one-hot selection instead.  The gather turns the score
+# contraction into M independent [1,D]x[D,S] GEMVs per batch row (poor
+# arithmetic intensity) and materializes an M-times-replicated history
+# operand; the dense form keeps the stored [U,S,Hkv,D] pool operand in
+# place and contracts it with ALL candidates in one [B*M*G, D]x[D, U*S]
+# GEMM, then selects each candidate's own row with a 0/1 one-hot einsum.
+# The selection itself is exact (multiply by 1.0 / add 0.0 are lossless
+# in IEEE-754); only the usual contraction-order reassociation separates
+# the two forms.  The U-fold extra FLOPs only pay off once S is long
+# enough for GEMM efficiency to dominate — short histories keep the
+# gather.
+_SEG_GEMM_MIN_S = 128
+
+
 def _norm_scale(scale, u: int, hkv: int):
     """Pool scales arrive [U,1,Hkv,1] (per-layer slice of the per-(layer,
     head) absmax); normalize to [U,Hkv] with the int8 /127 folded in."""
@@ -117,19 +133,38 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
     g = h // hkv
     qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d) / np.sqrt(d)
     seg = row_index is not None and row_index.ndim == 2
+    seg_gemm = seg and k_hist.shape[1] >= _SEG_GEMM_MIN_S
+    onehot = None
     if row_index is not None:
         # the dedup gather runs on the STORED values (int8: 4x fewer
         # bytes than the dequantized rows the framework path gathered).
         # A 2-D (per-candidate) index — DSO v2 segment packing — gathers
         # each candidate's own pool row: [B,M,S,Hkv,D] history operands
-        # and [B,M,Hkv] scales
-        k_hist = jnp.take(k_hist, row_index, axis=0)
-        v_hist = jnp.take(v_hist, row_index, axis=0)
+        # and [B,M,Hkv] scales.  At long histories (seg_gemm) the VALUE
+        # gathers are skipped — scoring contracts the stored pool rows
+        # directly (see _SEG_GEMM_MIN_S) — but the tiny scale gathers
+        # stay, so the dequant multiply is per-candidate in both forms.
+        if not seg_gemm:
+            k_hist = jnp.take(k_hist, row_index, axis=0)
+            v_hist = jnp.take(v_hist, row_index, axis=0)
         if k_scale is not None:
             k_scale = jnp.take(k_scale, row_index, axis=0)
         if v_scale is not None:
             v_scale = jnp.take(v_scale, row_index, axis=0)
-    if seg:
+    if seg_gemm:
+        # dense all-rows GEMM + exact one-hot selection: restores a real
+        # [B*M*G, D] x [D, U*S] GEMM shape where the gathered form is M
+        # independent GEMVs per batch row
+        u = k_hist.shape[0]
+        onehot = (row_index[..., None] == jnp.arange(u)) \
+            .astype(jnp.float32)                         # [b,m,U]
+        s_all = jnp.einsum("bmhgd,ushd->bhgmus", qf,
+                           k_hist.astype(jnp.float32))
+        s_hist = jnp.einsum("bhgmus,bmu->bhgms", s_all, onehot)
+        if k_scale is not None:
+            s_hist = s_hist * jnp.moveaxis(
+                k_scale, 2, 1)[:, :, None, :, None]      # [b,hkv,1,m,1]
+    elif seg:
         # per-candidate history segment: same per-(m, s) dot products as
         # the shared-history einsum, just indexed per candidate
         s_hist = jnp.einsum("bmhgd,bmshd->bhgms", qf,
@@ -148,7 +183,16 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
         p_hist = jnp.exp(s_hist - m_all[..., None])
         p_self = jnp.exp(s_self - m_all)
         l = p_hist.sum(axis=-1) + p_self
-        if seg:
+        if seg_gemm:
+            # scatter each candidate's probabilities back to its own pool
+            # row (one nonzero u per (b, m) — exact), then contract the
+            # stored values in place: one [B*M*G, U*S] x [U*S, D] GEMM
+            weighted = jnp.einsum("bhgms,bmu->bhgums", p_hist, onehot)
+            o = jnp.einsum("bhgums,ushd->bmhgd", weighted,
+                           v_hist.astype(jnp.float32))
+            if v_scale is not None:
+                o = o * v_scale[:, :, :, None, None]     # [b,m,hkv,1,1]
+        elif seg:
             o = jnp.einsum("bhgms,bmshd->bmhgd", p_hist,
                            v_hist.astype(jnp.float32))
             if v_scale is not None:

@@ -22,3 +22,21 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     data = max(1, n // model_parallel)
     return make_mesh((data, model_parallel), ("data", "model"))
+
+
+def make_serving_mesh(mesh: str = "", model_parallel: int = 0):
+    """Resolve the serve CLI's mesh flags to a ("data", "model") host mesh.
+
+    ``mesh``: explicit "DATA,MODEL" ways (e.g. "2,2").  ``model_parallel``:
+    shortcut — KV heads sharded N ways, data ways = devices // N.  Both
+    empty/zero -> None (single-device serving).  On CPU hosts pair with
+    XLA_FLAGS=--xla_force_host_platform_device_count=K set before jax import.
+    """
+    if mesh:
+        parts = [int(x) for x in mesh.split(",")]
+        if len(parts) != 2 or any(p < 1 for p in parts):
+            raise ValueError(f"--mesh expects 'data,model' ways, got {mesh!r}")
+        return make_mesh(tuple(parts), ("data", "model"))
+    if model_parallel:
+        return make_host_mesh(model_parallel)
+    return None

@@ -68,7 +68,10 @@ def serve_rec(args):
     kw = dict(n_history=args.history, feature_mode=args.feature_mode,
               max_pending=args.max_pending, impl=args.impl)
     if args.engine == "flame":
-        kw.update(buckets=tuple(int(b) for b in args.buckets.split(",")),
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh, args.model_parallel)
+        kw.update(mesh=mesh,
+                  buckets=tuple(int(b) for b in args.buckets.split(",")),
                   n_streams=args.streams, coalesce=not args.no_coalesce,
                   max_batch=args.max_batch,
                   window_s=args.window_ms * 1e-3,
@@ -100,6 +103,10 @@ def serve_rec(args):
               f"coalesce={'on' if eng.dso.policy.enabled else 'off'}, "
               f"pack_tails={'on' if args.pack_tails else 'off'}, "
               f"deadline={args.deadline_ms:g}ms)")
+        if eng.mesh is not None:
+            print(f"[serve] mesh: data={eng.mesh.shape['data']} x "
+                  f"model={eng.mesh.shape['model']} over "
+                  f"{len(jax.devices())} {jax.default_backend()} device(s)")
         if args.history_cache:
             budget = (f"{args.pool_budget_mb:g} MB budget"
                       if args.pool_budget_mb else "no byte budget")
@@ -197,6 +204,17 @@ def main():
                          "model says waiting longer would miss the "
                          "earliest deadline (0 = no deadlines; misses "
                          "surface as the deadline_misses metric)")
+    ap.add_argument("--mesh", default="",
+                    help="serve the flame executors over a 'data,model' "
+                         "device mesh, e.g. --mesh 2,2: the request batch "
+                         "axis is sharded over data ways and attention "
+                         "heads over model ways, with pooled history KV "
+                         "committed to the same layout (empty = no mesh; "
+                         "on CPU hosts set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=K first)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="shortcut for --mesh: shard KV heads over N model "
+                         "ways, data ways = devices // N")
     ap.add_argument("--users", type=int, default=0,
                     help="repeat-user traffic: draw requests from this many "
                          "users with stable histories (0 = unique users)")

@@ -1,4 +1,5 @@
-from repro.serving.api import (AdmissionQueueFull, ResponseFuture,  # noqa: F401
+from repro.serving.api import (AdmissionQueueFull,  # noqa: F401
+                               DeadlineExceeded, ResponseFuture,
                                ServeMetrics, ServeRequest, ServeResponse,
                                ServingEngine, available_engines,
                                create_engine, register_engine)

@@ -116,6 +116,13 @@ class AdmissionQueueFull(RuntimeError):
     the caller's timeout (the backpressure signal)."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """Raised by ``submit`` when the request's deadline budget has already
+    passed at admission time (counted in the ``deadline_shed`` metric):
+    executing it would burn an executor slot on a guaranteed miss, so
+    deadline-aware engines shed it instead."""
+
+
 # ---------------------------------------------------------------------------
 # metrics
 # ---------------------------------------------------------------------------

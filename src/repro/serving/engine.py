@@ -60,13 +60,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as shd
 from repro.core import dso as DSO
 from repro.core import pda as PDA
 from repro.core.climber import N_SIDE_FEATURES
 from repro.models.model import ModelBundle
-from repro.serving.api import (AdmissionQueueFull, ResponseFuture,
-                               ServeMetrics, ServeRequest, ServeResponse,
-                               register_engine)
+from repro.serving.api import (AdmissionQueueFull, DeadlineExceeded,
+                               ResponseFuture, ServeMetrics, ServeRequest,
+                               ServeResponse, register_engine)
 from repro.kernels.fused_score.ops import packed_reroute_count
 from repro.serving.kv_cache import (HistoryKVPool, KVCacheManager,
                                     quantize_kv, raw_kv_specs, raw_kv_view)
@@ -127,6 +128,17 @@ class _PipelinedEngine:
                timeout: Optional[float] = None) -> ResponseFuture:
         if not self._open:
             raise RuntimeError("engine is shut down")
+        dl = request.deadline_s if request.deadline_s is not None \
+            else self._deadline_s
+        if dl and time.perf_counter() > request.arrival_t + dl:
+            # admission-time shedding: the latency budget is already blown,
+            # so executing would burn an executor slot on a guaranteed miss
+            # and delay co-pending requests that can still make theirs —
+            # reject here, before the prefetch hook or a queue slot
+            self._metrics.incr("deadline_shed")
+            raise DeadlineExceeded(
+                f"request {request.request_id}: deadline budget "
+                f"{dl * 1e3:.3g} ms already exhausted at admission")
         fut = ResponseFuture(request)
         self._admit_hook(request)
         t_submit = time.perf_counter()
@@ -350,6 +362,19 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         cost model says waiting longer would miss the earliest collected
         deadline.  Overruns count into the ``deadline_misses`` metric.
 
+    Mesh-sharded serving (``mesh=...``): executors AOT-compile with
+    ``NamedSharding`` in/out specs resolved from
+    ``sharding.serving_rules`` — the request-batch axis rides the mesh's
+    ``data`` axis, attention heads ride ``model`` (tensor-parallel; when
+    the KV heads don't divide the model ways, the history length takes
+    the model axis instead, the context-parallel fallback shared with
+    ``impl="cp"``), and the pooled-user row axis of stacked history KV is
+    REPLICATED so the dedup/packed row gathers never cross shards.  The
+    pool commits its entries to the same layout (``shard_spec``) and
+    splits its byte budget per model shard; the DSO rounds batch/row
+    capacities up to multiples of the data ways so one coalesced flush
+    feeds every device without resharding on the hot path.
+
     FKE (``impl="fused"``): the ``cached`` executor family is compiled
     against the pool's RAW stored representation (int8/bf16 values + per-
     (layer, head) scales, ``serving/kv_cache.py::raw_kv_specs``) plus the
@@ -381,13 +406,26 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  kv_dedup: Optional[bool] = None,
                  pack_tails: bool = False,
                  pack_rows: Optional[int] = None,
-                 deadline_s: float = 0.0):
+                 deadline_s: float = 0.0,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
         self.n_history = n_history
         self.impl = impl
         self._fused = impl == "fused"
+        # mesh-sharded serving: executors compile with NamedSharding in/out
+        # specs (batch over "data", attention heads over "model", pooled
+        # user rows replicated) so one coalesced flush feeds every device
+        self.mesh = mesh
+        self._shard_rules: Optional[dict] = None
+        self._data_ways = 1
+        self._model_ways = 1
+        if mesh is not None:
+            self._shard_rules = shd.serving_rules(
+                mesh, kv_heads=bundle.cfg.n_kv_heads)
+            self._data_ways = int(mesh.shape.get("data", 1))
+            self._model_ways = int(mesh.shape.get("model", 1))
         self._pack_tails = bool(pack_tails)
         if pack_rows is None and pack_tails:
             # packed rows are dense where unpacked rows are mostly padding:
@@ -451,7 +489,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                         f"extend_crossover")
             self.history_pool = HistoryKVPool(
                 pool_slots, budget_bytes=pool_budget_bytes, dtype=pool_dtype,
-                placement=pool_placement, spill_bytes=pool_spill_bytes)
+                placement=pool_placement, spill_bytes=pool_spill_bytes,
+                mesh=mesh, shard_spec=self._kv_leaf_sharding)
             kv_specs = bundle.history_kv_specs(params, n_history, batch=1)
             # the FKE ("fused") executors consume the pool's RAW
             # representation — stored-precision values + per-(layer, head)
@@ -536,7 +575,10 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                         return bundle.score_candidates(
                             self.params, kv, jnp.maximum(candidates, 0),
                             impl=self.impl, row_index=seg_idx)
-                    rows = self._pack_rows if coalesce else 1
+                    # policy.rows (late-bound: build_fn runs inside the
+                    # orchestrator's executor build) carries the mesh
+                    # rounding, so compiled rows match the packer's capacity
+                    rows = policy.rows
                     shapes = cached_row_shapes(batch) + (
                         jax.ShapeDtypeStruct((rows, bucket), jnp.int32),
                         jax.ShapeDtypeStruct((rows, bucket), jnp.int32))
@@ -574,6 +616,23 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                         jax.ShapeDtypeStruct((batch, bucket), jnp.int32),)
             else:
                 raise ValueError(kind)
+            if self.mesh is not None:
+                # attach the resolved NamedSharding specs to the AOT
+                # signature: the executor consumes its operands in exactly
+                # the layout the dispatcher stacks / the pool stores them,
+                # so the steady-state hot path never reshards.  Tracing
+                # under mesh_rules() binds the model's constrain_ctx
+                # annotations (and the impl="cp" shard_map route) to the
+                # same rule table.
+                shapes = tuple(
+                    jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                         sharding=self._arg_sharding(s.shape))
+                    for s in shapes)
+                out_sh = jax.tree.map(lambda s: self._arg_sharding(s.shape),
+                                      jax.eval_shape(fn, *shapes))
+                with shd.mesh_rules(self.mesh, self._shard_rules):
+                    return jax.jit(fn, out_shardings=out_sh) \
+                        .lower(*shapes).compile()
             return jax.jit(fn).lower(*shapes).compile()
 
         # the bucket key gains a hit/miss dimension: candidate-only
@@ -603,12 +662,17 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             families = {"full": tuple(buckets)}
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
                                     window_s=window_s,
-                                    pack_rows=self._pack_rows)
+                                    pack_rows=self._pack_rows,
+                                    data_ways=self._data_ways)
         self.dso = DSO.CoalescingOrchestrator(
             build_fn, pad_slice_fn=self._pad_slice, gather_fn=self._gather,
             policy=policy, n_streams=n_streams, families=families,
             dedup_kinds=dedup_kinds, packed_kinds=packed_kinds,
-            device_output_kinds=device_output_kinds)
+            device_output_kinds=device_output_kinds,
+            # multi-device executables must not overlap their collectives
+            # (XLA rendezvous has no cross-computation ordering — see
+            # CoalescingOrchestrator); a 1x1 mesh stays fully concurrent
+            serialize_dispatch=mesh is not None and mesh.size > 1)
         super().__init__(max_pending=max_pending, n_workers=n_workers,
                          name="flame")
 
@@ -616,6 +680,30 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     @property
     def pool(self):
         return self.dso
+
+    # ---- mesh sharding (logical layouts -> NamedSharding) ----
+    def _kv_leaf_sharding(self, shape):
+        """Sharding for one stored/stacked history-KV leaf (5-d: [rows, L,
+        S, Hkv, D] values or [rows, L, 1, Hkv, 1] scales): heads ride the
+        model axis, the pooled-user row axis stays replicated.  Doubles as
+        the pool's placement callback so pooled KV lives where its heads
+        live; returns None for non-KV shapes or mesh-less engines."""
+        if self.mesh is None or len(shape) != 5:
+            return None
+        return shd.logical_to_sharding(shd.SERVING_KV_LEAF, shape,
+                                       self.mesh, self._shard_rules)
+
+    def _arg_sharding(self, shape):
+        """NamedSharding for one executor operand/result: 5-d arrays are
+        history-KV leaves; everything else (history / side / candidates /
+        seg_idx / scores) leads with the request-batch axis, which rides
+        the data axis."""
+        kv = self._kv_leaf_sharding(shape)
+        if kv is not None:
+            return kv
+        logical = ("batch",) + (None,) * (len(shape) - 1)
+        return shd.logical_to_sharding(logical, shape, self.mesh,
+                                       self._shard_rules)
 
     def _pool_key(self, request: ServeRequest
                   ):  # flamecheck: host-sync-ok(admission-time canonicalization: histories arrive as host numpy and the content hash must read host bytes)
@@ -773,6 +861,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                                   refreshes=refreshes)
             self._metrics.set_gauge("pool_bytes_used",
                                     self.history_pool.bytes_used)
+            for i, b in enumerate(self.history_pool.shard_bytes()):
+                self._metrics.set_gauge(f"pool_bytes_used_shard{i}", b)
             if self._fused:
                 # the fused executors speak the pool's raw (quantized)
                 # representation: read the entry back as stored — a racing

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import threading
 from typing import Dict, Hashable, List, Optional, Tuple
 
@@ -172,14 +173,30 @@ def quantize_kv(kv, dtype: str):
     return payload, payload_bytes(payload)
 
 
+def _shard_elems(shape, shard_spec) -> int:
+    """Element count ONE shard holds of an array with this global shape.
+    ``shard_spec`` maps a shape to a NamedSharding (or None = replicated);
+    the per-shard shape comes from the sharding itself, so the accounting
+    follows whatever layout (head-split, sequence-split, replicated) the
+    divisibility fallback actually resolved — analytically, which keeps it
+    true on CPU hosts where forced host "devices" share one allocator."""
+    shape = tuple(int(s) for s in shape)
+    if shard_spec is not None:
+        sh = shard_spec(shape)
+        if sh is not None:
+            return math.prod(sh.shard_shape(shape))
+    return math.prod(shape)
+
+
 def quantized_nbytes(
-        kv, dtype: str
-) -> int:  # flamecheck: host-sync-ok(shape arithmetic over .shape tuples and Python ints; no device data is read)
+        kv, dtype: str, shard_spec=None
+) -> int:
     """Stored bytes :func:`quantize_kv` would produce, WITHOUT quantizing —
-    shape/dtype arithmetic only, so admission prechecks are free."""
+    shape/dtype arithmetic only, so admission prechecks are free.  With
+    ``shard_spec`` (shape -> NamedSharding), the bytes one shard holds."""
     total = 0
     for a in jax.tree.leaves(kv):
-        n = int(np.prod(a.shape))
+        n = _shard_elems(a.shape, shard_spec)
         if dtype == "native":
             total += n * jnp.dtype(a.dtype).itemsize
         elif dtype == "bf16":
@@ -187,7 +204,7 @@ def quantized_nbytes(
         elif dtype == "int8":
             scale_shape = tuple(1 if i in _scale_axes(a.ndim) else s
                                 for i, s in enumerate(a.shape))
-            total += n + int(np.prod(scale_shape)) * 4
+            total += n + _shard_elems(scale_shape, shard_spec) * 4
         else:
             raise ValueError(
                 f"pool dtype must be one of {POOL_DTYPES}, got {dtype!r}")
@@ -260,7 +277,7 @@ def _device_move(a):
     with a real accelerator attached this is the HBM residency that spares
     the per-dispatch H2D copy."""
     if jax.default_backend() == "cpu":
-        return np.asarray(a)
+        return np.asarray(a)  # flamecheck: host-sync-ok(CPU tier: source is already host-resident, asarray is a no-op view — host and device memory coincide)
     return jnp.asarray(a)
 
 
@@ -285,6 +302,8 @@ class _PoolEntry:
     nbytes: int                    # stored bytes (quantized size)
     hist_window: Optional[np.ndarray]   # model-window ids at encode time
     refreshes: int = 0             # incremental extensions since full encode
+    shard_nbytes: int = 0          # bytes ONE model shard holds (== nbytes
+                                   # for mesh-less pools / replicated leaves)
 
 
 @dataclasses.dataclass
@@ -333,7 +352,7 @@ class HistoryKVPool:
     def __init__(self, slots: Optional[int] = 256, *,
                  budget_bytes: Optional[int] = None,
                  dtype: str = "native", placement: str = "device",
-                 spill_bytes: int = 0):
+                 spill_bytes: int = 0, mesh=None, shard_spec=None):
         if slots is None and budget_bytes is None:
             raise ValueError("pool needs slots and/or budget_bytes")
         if slots is not None and slots < 1:
@@ -349,6 +368,20 @@ class HistoryKVPool:
         self.dtype = dtype
         self.placement = placement
         self.spill_budget = int(spill_bytes)
+        # mesh-sharded serving: ``shard_spec`` (shape -> NamedSharding, or
+        # None for replicated) commits device-placed leaves to the layout
+        # the sharded executors consume — pooled KV lives where its heads
+        # live — and drives the analytic per-shard byte accounting.  The
+        # byte budget is the pool's TOTAL across shards; each model shard
+        # gets an even share of it.
+        self.mesh = mesh
+        self._shard_spec = shard_spec
+        self._model_ways = 1
+        if mesh is not None and "model" in mesh.axis_names:
+            self._model_ways = int(mesh.shape["model"])
+        self._shard_budget = None
+        if budget_bytes is not None and self._model_ways > 1:
+            self._shard_budget = budget_bytes // self._model_ways
         self._entries: "collections.OrderedDict[Hashable, _PoolEntry]" = \
             collections.OrderedDict()
         self._spill: "collections.OrderedDict[Hashable, _PoolEntry]" = \
@@ -364,11 +397,41 @@ class HistoryKVPool:
         self.spill_hits = 0
         self.bytes_used = 0
         self.spill_bytes_used = 0
+        self.shard_bytes_used = 0
 
     @staticmethod
     def entry_bytes(kv) -> int:
         """Unquantized (compute-dtype) bytes of a KV pytree."""
         return payload_bytes(kv)
+
+    # ---- placement (mesh-aware) ----
+    def _move(self, a):
+        """Shard-aware device placement of one stored array: with a mesh,
+        commit it to the executor-facing NamedSharding layout (heads on the
+        model axis, pooled-user rows replicated) so the hot path never
+        reshards it.  On the CPU backend forced host "devices" share one
+        allocator and AOT executables auto-place uncommitted host arrays,
+        so plain numpy stays the faster representation of the same
+        placement (and keeps the bitwise single- vs multi-device parity
+        path committed-array free)."""
+        if self._shard_spec is not None and jax.default_backend() != "cpu":
+            sh = self._shard_spec(np.shape(a))
+            if sh is not None:
+                return jax.device_put(a, sh)  # flamecheck: host-sync-ok(async H2D publish committing pool KV to the executors' NamedSharding layout, not a device->host sync)
+        return _device_move(a)
+
+    def _place_stored(self, payload, placement: str):
+        """Tier placement honoring the pool's mesh layout for the device
+        tier; host-tier moves fall through to the plain numpy path."""
+        if placement == "device" and self._shard_spec is not None:
+            return jax.tree.map(
+                lambda s: _QuantLeaf(
+                    self._move(s.q),
+                    None if s.scale is None else self._move(s.scale),
+                    s.dtype)
+                if isinstance(s, _QuantLeaf) else self._move(s),
+                payload, is_leaf=lambda x: isinstance(x, _QuantLeaf))
+        return _place(payload, placement)
 
     # ---- lookup side ----
     def _load(self, e: _PoolEntry, raw: bool = False):
@@ -405,6 +468,7 @@ class HistoryKVPool:
                 else:
                     del self._entries[key]      # stale: history advanced
                     self.bytes_used -= e.nbytes
+                    self.shard_bytes_used -= e.shard_nbytes
                     self.stale += 1
                     self.misses += 1
                     status = "stale"
@@ -431,7 +495,7 @@ class HistoryKVPool:
             # not single-flighted), so only admit if the key is still
             # absent — the racing entry is at least as fresh, and this
             # request is still correctly served from the promoted copy.
-            e.payload = _place(e.payload, self.placement)
+            e.payload = self._place_stored(e.payload, self.placement)
             demoted: List[_PoolEntry] = []
             with self._lock:
                 if key not in self._entries:
@@ -486,13 +550,18 @@ class HistoryKVPool:
         old = self._entries.pop(key, None)
         if old is not None:                 # replace, don't leak its bytes
             self.bytes_used -= old.nbytes
+            self.shard_bytes_used -= old.shard_nbytes
         self._entries[key] = entry
         self.bytes_used += entry.nbytes
+        self.shard_bytes_used += entry.shard_nbytes
         while (self.slots is not None and len(self._entries) > self.slots) \
                 or (self.budget_bytes is not None
-                    and self.bytes_used > self.budget_bytes):
+                    and self.bytes_used > self.budget_bytes) \
+                or (self._shard_budget is not None
+                    and self.shard_bytes_used > self._shard_budget):
             k, ev = self._entries.popitem(last=False)   # LRU end
             self.bytes_used -= ev.nbytes
+            self.shard_bytes_used -= ev.shard_nbytes
             self.evictions += 1
             if self.spill_budget > 0:
                 stale_sp = self._spill.pop(k, None)   # defensive: keep the
@@ -529,14 +598,20 @@ class HistoryKVPool:
         last full encode (the engine's extension-drift cap reads it back
         through :class:`StaleBasis`)."""
         # size precheck BEFORE quantizing/placing: a rejected entry must
-        # not pay the (multi-MB at paper scale) quantize + transfer cost
+        # not pay the (multi-MB at paper scale) quantize + transfer cost.
+        # The per-shard share is prechecked too — an entry whose replicated
+        # leaves alone exceed one shard's budget slice can never be held
         nbytes = quantized_nbytes(kv, self.dtype)
-        if self.budget_bytes is not None and nbytes > self.budget_bytes:
+        shard_nbytes = nbytes if self._shard_spec is None else \
+            quantized_nbytes(kv, self.dtype, shard_spec=self._shard_spec)
+        if (self.budget_bytes is not None and nbytes > self.budget_bytes) \
+                or (self._shard_budget is not None
+                    and shard_nbytes > self._shard_budget):
             with self._lock:
                 self.rejects += 1
             return False
         payload, nbytes = quantize_kv(kv, self.dtype)
-        payload = _place(payload, self.placement)
+        payload = self._place_stored(payload, self.placement)
         if hist_window is not None:
             hist_window = np.array(
                 hist_window)  # flamecheck: host-sync-ok(defensive copy of the caller-owned host id window)
@@ -544,12 +619,13 @@ class HistoryKVPool:
             old = self._entries.pop(key, None)
             if old is not None:
                 self.bytes_used -= old.nbytes
+                self.shard_bytes_used -= old.shard_nbytes
             sp = self._spill.pop(key, None)
             if sp is not None:
                 self.spill_bytes_used -= sp.nbytes
             demoted = self._admit(key, _PoolEntry(fingerprint, payload,
                                                   nbytes, hist_window,
-                                                  refreshes))
+                                                  refreshes, shard_nbytes))
         self._finish_demotions(demoted)
         return True
 
@@ -581,11 +657,29 @@ class HistoryKVPool:
             self._spill.clear()
             self.bytes_used = 0
             self.spill_bytes_used = 0
+            self.shard_bytes_used = 0
+
+    def shard_bytes(self) -> List[int]:
+        """Primary-tier stored bytes per model shard (one gauge per shard;
+        [] for mesh-less pools).  The serving layout is symmetric by
+        construction — every stored leaf is either split evenly over the
+        model axis or replicated on all of its shards — so the shards hold
+        identical byte counts."""
+        with self._lock:
+            if self.mesh is None:
+                return []
+            return [self.shard_bytes_used] * self._model_ways
 
     def stats(self) -> Dict[str, float]:
         with self._lock:
             total = self.hits + self.misses
+            shard = {}
+            if self.mesh is not None:
+                shard["shard_ways"] = self._model_ways
+                for i in range(self._model_ways):
+                    shard[f"bytes_shard{i}"] = self.shard_bytes_used
             return {
+                **shard,
                 "entries": len(self._entries),
                 "slots": self.slots if self.slots is not None else -1,
                 "budget_bytes": (self.budget_bytes

@@ -53,6 +53,46 @@ def resolve_rules(mesh: Mesh) -> dict:
     return {k: tuple(a for a in v if a in names) for k, v in DEFAULT_RULES.items()}
 
 
+# Logical layout of every stored/stacked history-KV leaf in the serving stack:
+# quantized values [U, L, S, Hkv, D] and int8 scales [U, L, 1, Hkv, 1] share it
+# (the divisibility fallback drops cache_seq_shard on the size-1 scale dim).
+SERVING_KV_LEAF: Logical = (
+    "cache_batch", "stack", "cache_seq_shard", "cache_heads", None)
+
+
+def serving_rules(mesh: Mesh, kv_heads: Optional[int] = None) -> dict:
+    """Rule table for the serving executors (engine/pool/DSO hot path).
+
+    Differs from the train-time defaults in two load-bearing ways:
+
+    - ``cache_batch`` is REPLICATED.  The leading axis of stacked history KV
+      is "which pooled user row", and the dedup/packed executors index it
+      with ``jnp.take(k_hist, row_index)`` where ``row_index`` varies per
+      candidate — sharding it over data would put a cross-shard gather on
+      every cached dispatch.  Keeping it replicated (while heads ride the
+      model axis) is the reshard-free hot-path invariant: encode emits rows
+      in exactly the layout the pool stores and the cached executors consume.
+    - ``cache_seq_shard`` maps to the *model* axis, and only as a fallback:
+      when the KV heads divide the model ways, attention is tensor-parallel
+      over heads and the history length stays unsharded; when they don't
+      (e.g. 4 KV heads on an 8-way model axis), the history length takes the
+      model axis instead — the same ``seq_axis="model"`` convention as
+      ``models.attention.context_parallel_attention``, so the shard_map CP
+      path (``impl="cp"``) composes with these rules.
+
+    The request batch axis always rides ``data``.
+    """
+    rules = dict(resolve_rules(mesh))
+    names = set(mesh.axis_names)
+    rules["batch"] = tuple(a for a in ("data",) if a in names)
+    rules["cache_batch"] = ()
+    model_ways = mesh.shape.get("model", 1) if "model" in names else 1
+    cp_fallback = (kv_heads is not None and model_ways > 1
+                   and kv_heads % model_ways != 0)
+    rules["cache_seq_shard"] = ("model",) if cp_fallback else ()
+    return rules
+
+
 def rules_for_shape(mesh: Mesh, global_batch: int, fsdp: bool = True) -> dict:
     """Workload-adapted rules.
 

@@ -21,6 +21,7 @@ Layers of coverage:
 """
 import dataclasses
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,8 @@ from repro.core.dso import (CoalescePolicy, CoalescingOrchestrator,
                             SegmentPacker, _PendingChunk)
 from repro.core.pda import RemoteFeatureStore
 from repro.models import build_model
-from repro.serving import FlameEngine, ServeMetrics, ServeRequest
+from repro.serving import (DeadlineExceeded, FlameEngine, ServeMetrics,
+                           ServeRequest)
 from repro.serving.kv_cache import (HistoryKVPool, dequantize_kv,
                                     quantize_kv, raw_kv_view)
 from repro.serving.scheduler import (TrafficConfig, generate_traffic,
@@ -200,12 +202,26 @@ def test_engine_deadline_miss_accounting(climber_setup):
                   user_id=1)
     m = eng.metrics()
     assert m.get("deadline_met", 0) == 3 and "deadline_misses" not in m
-    # per-request override: an (absurd) 1ns budget must always be missed
+    # per-request override: a 1ns budget that is still live at admission
+    # (arrival stamped slightly in the future, so the admission check
+    # passes deterministically) must be MISSED by the worker
     fut = eng.submit(ServeRequest(
         history=hist, candidates=rng.integers(0, 1000, 12).astype(np.int32),
-        user_id=1, deadline_s=1e-9))
+        user_id=1, deadline_s=1e-9,
+        arrival_t=time.perf_counter() + 5e-4))
     fut.result(timeout=60)
     assert eng.metrics()["deadline_misses"] == 1
+    # a budget already exhausted when submit() runs is SHED at admission:
+    # no executor work, no ResponseFuture, a dedicated counter
+    with pytest.raises(DeadlineExceeded):
+        eng.submit(ServeRequest(
+            history=hist,
+            candidates=rng.integers(0, 1000, 12).astype(np.int32),
+            user_id=1, deadline_s=1e-9,
+            arrival_t=time.perf_counter() - 1.0))
+    m = eng.metrics()
+    assert m["deadline_shed"] == 1
+    assert m["deadline_misses"] == 1    # shedding is not a miss
     eng.shutdown()
 
 

@@ -127,6 +127,35 @@ def test_cached_op_parity(case, path):
                                atol=tol, rtol=tol)
 
 
+def test_cached_seg_gemm_long_history_parity(monkeypatch):
+    """Segment-packed (2-D ``row_index``) scoring at ``S >=
+    _SEG_GEMM_MIN_S`` takes the dense-GEMM + one-hot-selection form
+    instead of gathering an M-times-replicated [B,M,S,Hkv,D] history.
+    The selection is algebraically exact, so the two forms must agree to
+    plain f32 reassociation tolerance even on int8 operands (both read
+    the same stored values; only contraction order differs)."""
+    s = fs_ops._SEG_GEMM_MIN_S + 33
+    b, m, h, hkv, d, u = 2, 10, 4, 2, 16, 3
+    t = _mk(9, b, m, h, hkv, d, s, u)
+    t, _ = _quant(t, "int8")
+    idx2 = jnp.asarray(np.random.default_rng(1).integers(0, u, (b, m)),
+                       jnp.int32)
+
+    def call():
+        return fs_ops.fused_cached_attention(
+            t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"],
+            k_scale=t["k_scale"], v_scale=t["v_scale"], row_index=idx2,
+            path="jnp")
+
+    got = call()                                     # dense-GEMM form
+    fs_ops._fused_jnp.clear_cache()
+    monkeypatch.setattr(fs_ops, "_SEG_GEMM_MIN_S", s + 1)
+    exp = call()                                     # gathered form
+    fs_ops._fused_jnp.clear_cache()                  # drop patched trace
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
 @pytest.mark.parametrize("case", CASES,
                          ids=[f"{c[8]}-s{c[5]}-m{c[1]}" + ("-idx" if c[7]
                               else "") for c in CASES])
