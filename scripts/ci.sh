@@ -38,13 +38,18 @@ python -m repro.launch.serve --engine flame --impl fused --history-cache \
     --pool-slots 64 --users 4 --requests 12 --history 64 \
     --buckets 16 --counts 3,5,9,15 --d-model 64
 
+echo "== smoke: generative top-k decode from pooled KV =="
+python -m repro.launch.serve --engine flame --generate topk \
+    --gen-steps 4 --beam-width 2 --pool-slots 64 --users 4 \
+    --requests 12 --history 64 --buckets 16,8 --counts 8,16 --d-model 64
+
 echo "== smoke: mesh-sharded serving (forced 4-device host mesh, 2x2) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 python -m repro.launch.serve --engine flame --history-cache --mesh 2,2 \
     --pool-slots 64 --users 4 --requests 12 --history 64 \
     --buckets 16,8 --counts 8,16 --d-model 64
 
-echo "== bench gate: FKE >= 1.3x chunked on the repeat-user profile =="
+echo "== bench gate: FKE vs chunked (1.3x multi-core, parity 1-core) =="
 python -m benchmarks.bench_serving --profile fke
 
 echo "== bench gate: DSO v2 packing >= 1.2x coalescing on zipf traffic =="
@@ -52,5 +57,8 @@ python -m benchmarks.bench_serving --profile dso_nonuniform
 
 echo "== bench gate: sharded parity + per-shard pool split (4-dev mesh) =="
 python -m benchmarks.bench_serving --profile sharded
+
+echo "== bench gate: packed decode bitwise + gen-tokens/s vs unpacked =="
+python -m benchmarks.bench_serving --profile decode
 
 echo "CI OK"

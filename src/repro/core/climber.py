@@ -384,6 +384,112 @@ def score_candidates(params, history_kv, candidates, cfg: ModelConfig, *,
     return _fuse_and_head(params, h, cfg)
 
 
+def _block_decode(bp, cand, k_hist, v_hist, lengths, cfg, impl: str, *,
+                  k_scale=None, v_scale=None, row_index=None,
+                  collect_kv: bool = False):
+    """Generative-decode pass for one block against a PADDED beam cache.
+
+    Like :func:`_block_score` but the cached history is a growing beam
+    cache whose valid prefix per row is ``lengths`` [B] (or [U] with a
+    packed ``row_index`` [B,M] steering every candidate to its own beam
+    row).  Each candidate sits at RoPE position ``lengths`` — the next
+    slot of ITS OWN sequence — so a decode step over the vocab is
+    `score_candidates(M=V)` at the beam's current length.  With
+    ``collect_kv`` the per-layer candidate K/V are returned too (the
+    append path: the chosen token's K/V are exactly what this pass
+    computed for it)."""
+    b, m, d = cand.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if row_index is not None:
+        positions = jnp.take(lengths, row_index)
+    else:
+        positions = jnp.broadcast_to(lengths[:, None], (b, m))
+    has_scale = k_scale is not None
+
+    def layer(x, inp):
+        if has_scale:
+            p, kh, vh, khs, vhs = inp
+        else:
+            (p, kh, vh), khs, vhs = inp, None, None
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions)
+        q = shd.constrain_ctx(q, "batch", None, "heads", None)
+        o = sumi.decode_candidate_attention(
+            q, kh, vh, k, v, lengths, impl=impl, temperature=_tau(p),
+            k_scale=khs, v_scale=vhs, row_index=row_index)
+        return _layer_tail(p, x, o, cfg, impl), \
+            ((k, v) if collect_kv else None)
+
+    from repro.models.transformer import scan_or_unroll
+    inp = (bp, k_hist, v_hist)
+    if has_scale:
+        inp = inp + (k_scale, v_scale)
+    x, kv = scan_or_unroll(layer, cand, inp)
+    return x, kv
+
+
+def decode_logits(params, history_kv, candidates, lengths, cfg: ModelConfig,
+                  *, impl: str = "reference", row_index=None):
+    """One generative-decode scoring step: task logits [B,M,T] for M
+    next-token candidates against padded beam caches.
+
+    ``history_kv`` leaves are [B,L,S_pad,Hkv,D] (or [U,...] packed) with
+    valid prefix ``lengths`` per row; every candidate scores as the
+    hypothetical next item of its beam.  At ``lengths == S_pad`` (no
+    padding) this is bitwise :func:`score_candidates` — one decode step
+    IS `score_candidates(M=V)` + argmax, the oracle identity the decode
+    test suite pins down."""
+    cand = jnp.take(params["embed"]["embedding"], candidates, axis=0)
+    if row_index is not None:
+        row_index = jnp.asarray(row_index, jnp.int32)
+    block_outs = []
+    for i in range(cfg.climber.num_blocks):
+        kv = history_kv[f"b{i}"]
+        kh, khs = _split_stored(kv["k"])
+        vh, vhs = _split_stored(kv["v"])
+        x, _ = _block_decode(
+            params["blocks"][f"b{i}"], cand, kh, vh, lengths, cfg, impl,
+            k_scale=khs, v_scale=vhs, row_index=row_index)
+        block_outs.append(x)
+    h = jnp.stack(block_outs, axis=2)                   # [B,M,Nb,d]
+    return _fuse_and_head(params, h, cfg)
+
+
+def append_token(params, history_kv, tokens, lengths, cfg: ModelConfig, *,
+                 impl: str = "reference"):
+    """Write one chosen token's per-layer K/V into every block's padded
+    beam cache at position ``lengths`` (the beam's next free slot).
+
+    ``tokens`` [B,1] ids; ``history_kv`` leaves must be PLAIN (dequantized)
+    [B,L,S_pad,Hkv,D] arrays with ``lengths < S_pad`` (the engine pads
+    caches by the generation budget up front; `dynamic_update_slice`
+    clamps, so an unpadded full cache would silently overwrite its last
+    history row).  The written K/V are computed by the same decode-pass
+    layer chain that scored the token, so an incrementally-grown cache is
+    bitwise the cache a monolithic re-encode of history+tokens would
+    produce (reference impl) — asserted in tests/test_decode_serving.py."""
+    tok = jnp.take(params["embed"]["embedding"], tokens, axis=0)  # [B,1,d]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    new_kv = {}
+    for i in range(cfg.climber.num_blocks):
+        kv = history_kv[f"b{i}"]
+        kh, _ = _split_stored(kv["k"])
+        vh, _ = _split_stored(kv["v"])
+        _, (k_new, v_new) = _block_decode(
+            params["blocks"][f"b{i}"], tok, kh, vh, lengths, cfg, impl,
+            collect_kv=True)
+
+        def scatter(cache, new):
+            new = jnp.moveaxis(new, 1, 0)               # [B,L,1,Hkv,D]
+            return jax.vmap(
+                lambda c, t, n: jax.lax.dynamic_update_slice(
+                    c, t.astype(c.dtype), (0, n, 0, 0)))(
+                cache, new, lengths)
+        new_kv[f"b{i}"] = {"k": scatter(kv["k"], k_new),
+                           "v": scatter(kv["v"], v_new)}
+    return new_kv
+
+
 def history_kv_specs(params, cfg: ModelConfig, n_history: int,
                      batch: int = 1):
     """ShapeDtypeStruct pytree of the HistoryKV for AOT executor builds."""
@@ -452,6 +558,22 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
     def history_kv_specs_fn(params, n_history: int, batch: int = 1):
         return history_kv_specs(params, cfg, n_history, batch)
 
+    def decode_logits_fn(params, history_kv, candidates, lengths,
+                         impl: str = "reference", row_index=None):
+        """Serving entry: one generative-decode step -> per-candidate
+        probabilities [B,M,T] (same sigmoid as score_candidates_fn, so a
+        decode step at full length is bitwise a score_candidates call)."""
+        return jax.nn.sigmoid(
+            decode_logits(params, history_kv, candidates, lengths, cfg,
+                          impl=impl, row_index=row_index))
+
+    def append_token_fn(params, history_kv, tokens, lengths,
+                        impl: str = "reference"):
+        """Serving entry: grow every block's padded beam cache by the
+        chosen token's K/V at position ``lengths``."""
+        return append_token(params, history_kv, tokens, lengths, cfg,
+                            impl=impl)
+
     def decode_step(params, caches, batch, impl: str = "reference"):
         raise NotImplementedError(
             "Climber scores all candidates in one SUMI pass; no decode step.")
@@ -484,4 +606,6 @@ def build_climber(cfg: ModelConfig) -> ModelBundle:
                        encode_history=encode_history_fn,
                        score_candidates=score_candidates_fn,
                        history_kv_specs=history_kv_specs_fn,
-                       extend_history=extend_history_fn)
+                       extend_history=extend_history_fn,
+                       decode_logits=decode_logits_fn,
+                       append_token=append_token_fn)

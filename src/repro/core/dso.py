@@ -40,6 +40,27 @@ mechanisms reclaim it:
   per-(kind, bucket) EWMA cost model — it flushes as soon as waiting any
   longer would make the earliest collected deadline unmeetable, instead of
   always sleeping the full flat window.
+
+Generative decode families (ISSUE 8)
+------------------------------------
+The flame engine registers two more executor families when built with
+``generate > 0``; the DSO needs no new machinery for either:
+
+* ``decode`` — one vocab-scoring step for an in-flight beam: lead args are
+  the beam's padded KV leaves plus its ``lengths`` row, the candidate axis
+  carries the step's token universe, and the usual bucket ladder chunks
+  ragged universes.  Under ``pack_tails`` the SegmentPacker packs tail
+  chunks of *different beams'* decode steps into shared rows exactly like
+  cached scoring — the per-candidate segment index steers each universe
+  segment to its own beam's stacked KV slot, so per-step ragged decode
+  batching falls out of the PR 5 contract unchanged.
+* ``append`` — the single-token KV append growing a chosen hypothesis;
+  rides the plain (unpacked) path at bucket 1 and returns device KV leaves
+  (an engine-output kind, like ``encode``/``extend``).
+
+Chunks from concurrent generative requests coalesce per step, so the
+decode families inherit cross-request batching, deadline flushing, and the
+fill/padding metrics (``dso_dispatches_decode`` etc.) for free.
 """
 from __future__ import annotations
 

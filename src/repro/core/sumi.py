@@ -139,6 +139,121 @@ def cached_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, *,
                        q_offset=n_history)
 
 
+def _kernel_decode_attention(q, k_hist, v_hist, k_cand, v_cand, lengths):
+    """Generative-decode scoring via the seed's flash-decode kernel
+    (``kernels/flash_decode``): each candidate's own K/V is written into a
+    private copy of its cache row at position ``lengths`` and the kernel
+    runs single-token decode attention with ``lengths + 1`` — the
+    "decode step = score_candidates(M=1) + KV append" identity made
+    literal.  ``k_hist``/``v_hist`` arrive PRE-GATHERED per candidate
+    ([B,M,S,Hkv,D]) with ``lengths`` [B,M]."""
+    from repro.kernels.flash_decode.ops import flash_decode
+    b, m, h, d = q.shape
+    s = k_hist.shape[2]
+    hkv = k_cand.shape[2]
+    # one spare column so a full (unpadded) cache still has a self slot
+    kh = jnp.pad(k_hist, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))
+                 ).reshape(b * m, s + 1, hkv, d)
+    vh = jnp.pad(v_hist, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))
+                 ).reshape(b * m, s + 1, hkv, d)
+    lens = lengths.reshape(b * m).astype(jnp.int32)
+    put = jax.vmap(lambda c, t, i: jax.lax.dynamic_update_slice(
+        c, t, (i, 0, 0)))
+    kh = put(kh, k_cand.reshape(b * m, 1, hkv, d), lens)
+    vh = put(vh, v_cand.reshape(b * m, 1, hkv, d), lens)
+    o = flash_decode(q.reshape(b * m, h, d), kh, vh, lens + 1)
+    return o.reshape(b, m, h, d)
+
+
+def decode_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, lengths, *,
+                               impl: str = "reference", temperature=None,
+                               k_scale=None, v_scale=None, row_index=None):
+    """Generative-decode SUMI attention against a padded, growing cache.
+
+    Same contract as :func:`cached_candidate_attention` except the history
+    operands are PRE-PADDED beam caches whose valid prefix per row is
+    ``lengths`` (int32): candidate m attends to cache positions ``<
+    lengths`` plus itself, never to other candidates or cache padding.
+    Because masked positions contribute exact softmax zeros, a padded
+    cache scores bitwise-identically to the tight cache — and at
+    ``lengths == S`` with no padding this is op-for-op
+    :func:`cached_candidate_attention` (asserted in
+    tests/test_decode_serving.py), so one greedy decode step IS
+    ``score_candidates`` over the vocab.
+
+    ``row_index`` [B, M] is the DSO v2 packed-decode steer: ``k_hist`` /
+    ``v_hist`` are then [U,S,Hkv,D] stacked beam caches with ``lengths``
+    [U], and every candidate gathers its own beam's cache + valid length
+    (same placement-invariance argument as
+    :func:`_segment_packed_attention`).  ``impl="pallas"`` routes the
+    flash-decode kernel (self K/V written into the cache row, ``lengths +
+    1``); every other impl runs the reference-structured jnp formulation
+    below (exact at serving scale: the chunked scoring path routes to
+    reference for decode-sized shapes)."""
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    if k_scale is not None or v_scale is not None \
+            or k_hist.dtype != q.dtype:
+        k_hist, v_hist = _dequant_gather(k_hist, v_hist, k_scale, v_scale,
+                                         None, q.dtype)
+    b, m, h, d = q.shape
+    s = k_hist.shape[1]
+    hkv = k_cand.shape[2]
+    g = h // hkv
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if row_index is not None:
+        if jnp.ndim(row_index) != 2:
+            raise ValueError("decode attention row_index must be [B, M] "
+                             "(per-candidate beam steer) when given")
+        seg = jnp.asarray(row_index, jnp.int32)
+        kh = jnp.take(k_hist, seg, axis=0)         # [B, M, S, Hkv, D]
+        vh = jnp.take(v_hist, seg, axis=0)
+        lens = jnp.take(lengths, seg)              # [B, M]
+        if impl == "pallas":
+            return _kernel_decode_attention(q, kh, vh, k_cand, v_cand, lens)
+        qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d)
+        s_hist = jnp.einsum("bmhgd,bmshd->bhgms", qf,
+                            kh.astype(jnp.float32)) / np.sqrt(d)
+        s_cand = jnp.einsum("bmhgd,bkhd->bhgmk", qf,
+                            k_cand.astype(jnp.float32)) / np.sqrt(d)
+        scores = jnp.concatenate([s_hist, s_cand], axis=-1)
+        base = A.make_mask(m, s + m, "sumi", n_history=s, q_offset=s)
+        hist_ok = jnp.arange(s)[None, None, :] < lens[:, :, None]  # [B,M,S]
+        ok = jnp.concatenate(
+            [hist_ok, jnp.ones((b, m, m), bool)], axis=-1)
+        mask = base[None, None, None] & ok[:, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        vc = jnp.broadcast_to(v_cand.astype(jnp.float32)[:, None],
+                              (b, m, m, hkv, d))
+        v_all = jnp.concatenate([vh.astype(jnp.float32), vc], axis=2)
+        o = jnp.einsum("bhgmk,bmkhd->bmhgd", w, v_all)
+        return o.reshape(b, m, h, d).astype(q.dtype)
+    if impl == "pallas":
+        kh = jnp.broadcast_to(k_hist[:, None], (b, m) + k_hist.shape[1:])
+        vh = jnp.broadcast_to(v_hist[:, None], (b, m) + v_hist.shape[1:])
+        lens = jnp.broadcast_to(lengths[:, None], (b, m))
+        return _kernel_decode_attention(q, kh, vh, k_cand, v_cand, lens)
+    # per-row cache: mirror cached_candidate_attention's reference route
+    # (concat + reference_attention ops) with the valid-length mask folded
+    # into the SUMI mask — at lengths == S the fold is the identity, so
+    # this is bitwise the score_candidates attention
+    k = jnp.concatenate([k_hist, k_cand], axis=1)
+    v = jnp.concatenate([v_hist, v_cand], axis=1)
+    qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    base = A.make_mask(m, s + m, "sumi", n_history=s, q_offset=s)
+    ok = jnp.concatenate(
+        [jnp.arange(s)[None, :] < lengths[:, None],
+         jnp.ones((b, m), bool)], axis=-1)                      # [B, S+M]
+    mask = base[None, None, None] & ok[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, m, h, d).astype(q.dtype)
+
+
 def extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,
                      impl: str = "reference", temperature=None,
                      k_scale=None, v_scale=None, row_index=None):

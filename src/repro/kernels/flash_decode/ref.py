@@ -6,6 +6,39 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def decode_with_self(q, k_cache, v_cache, lengths, k_self, v_self):
+    """fp32 ground truth for one generative-decode scoring step.
+
+    ``q``/``k_self``/``v_self`` [B,M,H(kv),D] are M candidate next-token
+    projections per row, each hypothetically extending the row's cache at
+    position ``lengths[b]``; ``k_cache``/``v_cache`` [B,S,Hkv,D] hold the
+    row's valid prefix in positions ``< lengths[b]`` (padding beyond is
+    ignored).  Every candidate attends to the valid prefix plus itself and
+    never to the other candidates — the SUMI mask specialized to a
+    per-row valid length.  This is what ``sumi.decode_candidate_attention``
+    must compute; the kernel route realizes it by writing each candidate's
+    own K/V into its cache row and calling :func:`reference` /
+    ``flash_decode`` with ``lengths + 1``."""
+    b, m, h, d = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d)
+    s_hist = jnp.einsum("bmhgd,bkhd->bhgmk", qf,
+                        k_cache.astype(jnp.float32)) / np.sqrt(d)
+    s_self = jnp.einsum("bmhgd,bmhd->bhgm", qf,
+                        k_self.astype(jnp.float32))[..., None] / np.sqrt(d)
+    valid = (jnp.arange(s)[None, :] < lengths[:, None])[:, None, None, None]
+    scores = jnp.concatenate(
+        [jnp.where(valid, s_hist, -1e30), s_self], axis=-1)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgmk,bkhd->bmhgd", w[..., :s],
+                   v_cache.astype(jnp.float32)) \
+        + w[..., s:].transpose(0, 3, 1, 2, 4) \
+        * v_self.astype(jnp.float32).reshape(b, m, hkv, 1, d)
+    return o.reshape(b, m, h, d).astype(q.dtype)
+
+
 def reference(q, k_cache, v_cache, lengths, *, window: int = 0):
     """q [B,H,D]; caches [B,S,Hkv,D]; lengths [B] (valid prefix per seq).
 

@@ -4,6 +4,10 @@
         --requests 32 --buckets 64,32,16 --distribution jittered
     PYTHONPATH=src python -m repro.launch.serve --engine flame \
         --history-cache --pool-slots 128 --users 8 --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --engine flame \
+        --generate topk --gen-steps 8     # generative candidate decode
+    PYTHONPATH=src python -m repro.launch.serve --engine flame \
+        --generate beam --beam-width 4
     PYTHONPATH=src python -m repro.launch.serve --engine implicit
     PYTHONPATH=src python -m repro.launch.serve --engine text --arch gemma3-12b
 
@@ -22,6 +26,7 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.models import build_model
 from repro.serving import ServeRequest, available_engines, create_engine
+from repro.serving.api import BeamConfig, TopKConfig
 from repro.serving.scheduler import (TrafficConfig, generate_traffic,
                                      run_workload_async)
 from repro.training import checkpoint
@@ -65,6 +70,16 @@ def serve_rec(args):
         params, step = checkpoint.restore(args.ckpt, params)
         print(f"[serve] restored checkpoint @ step {step}")
 
+    gen_mode = getattr(args, "generate", "none")
+    if gen_mode != "none" and args.engine == "flame":
+        if not args.history_cache:
+            print("[serve] --generate implies --history-cache (beams live "
+                  "in the pooled-KV plane); enabling it")
+            args.history_cache = True
+        if args.impl == "fused":
+            raise SystemExit("[serve] --generate does not support "
+                             "--impl fused yet (ROADMAP: fused decode)")
+
     kw = dict(n_history=args.history, feature_mode=args.feature_mode,
               max_pending=args.max_pending, impl=args.impl)
     if args.engine == "flame":
@@ -92,6 +107,8 @@ def serve_rec(args):
                   pack_tails=args.pack_tails,
                   pack_rows=args.pack_rows if args.pack_rows > 0 else None,
                   deadline_s=args.deadline_ms * 1e-3)
+        if gen_mode != "none":
+            kw.update(generate=args.gen_steps, gen_vocab=args.gen_vocab)
     else:
         kw.update(n_workers=args.concurrency)
     eng = create_engine(args.engine, bundle, params, **kw)
@@ -120,11 +137,29 @@ def serve_rec(args):
         distribution=args.distribution, n_requests=args.requests,
         n_history=args.history, seed=0, n_users=args.users)
     reqs = generate_traffic(tc, n_items=cfg.vocab_size)
+    if gen_mode != "none":
+        # generative decode: the traffic's ragged candidate slates become
+        # per-request token universes (zipf/jittered slate sizes -> ragged
+        # decode dispatches), and each request asks for top-k or beam
+        # generation instead of scoring
+        gen_cfg = (TopKConfig(k=args.beam_width, steps=args.gen_steps)
+                   if gen_mode == "topk" else
+                   BeamConfig(width=args.beam_width, steps=args.gen_steps))
+        for r in reqs:
+            r["generate"] = gen_cfg
+        print(f"[serve] generative decode: {gen_mode} width "
+              f"{args.beam_width} x {args.gen_steps} steps, per-request "
+              f"token universes from the candidate slates")
     res = run_workload_async(eng, reqs, arrival_gap_s=args.arrival_gap_ms * 1e-3)
+    unit = "gen tokens/s" if gen_mode != "none" else "items/s"
     print(f"[serve] {res['requests']} requests | "
-          f"{res['throughput_items_per_s']:.0f} items/s | "
+          f"{res['throughput_items_per_s']:.0f} {unit} | "
           f"p50 {res['p50_latency_ms']:.1f} ms | "
           f"p99 {res['p99_latency_ms']:.1f} ms")
+    if gen_mode != "none":
+        for i, out in enumerate(res["outputs"][:3]):
+            best = [t for t in out[0].tolist() if t >= 0]
+            print(f"[serve] req {i}: best sequence {best}")
     _print_metrics("engine metrics", eng.metrics())
     eng.shutdown()
 
@@ -204,6 +239,23 @@ def main():
                          "model says waiting longer would miss the "
                          "earliest deadline (0 = no deadlines; misses "
                          "surface as the deadline_misses metric)")
+    ap.add_argument("--generate", default="none",
+                    choices=["none", "topk", "beam"],
+                    help="generative candidate decode (needs "
+                         "--history-cache, auto-enabled): serve "
+                         "autoregressive top-k / beam generation over the "
+                         "item vocabulary from pooled history KV instead "
+                         "of scoring candidate slates; the traffic's "
+                         "candidate ids become per-request token universes")
+    ap.add_argument("--gen-steps", type=int, default=8,
+                    help="generated sequence length (also sizes the "
+                         "decode executors' KV headroom)")
+    ap.add_argument("--beam-width", type=int, default=4,
+                    help="hypotheses kept per step (beam width for "
+                         "--generate beam, k for --generate topk)")
+    ap.add_argument("--gen-vocab", type=int, default=512,
+                    help="fallback token-universe size when a generative "
+                         "request carries no candidate restriction")
     ap.add_argument("--mesh", default="",
                     help="serve the flame executors over a 'data,model' "
                          "device mesh, e.g. --mesh 2,2: the request batch "

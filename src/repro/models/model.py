@@ -46,6 +46,11 @@ class ModelBundle:
     # incremental suffix extension: re-encode only the changed window suffix
     # + side token against a cached HistoryKV (PDA v2 stale-hit path)
     extend_history: Optional[Callable] = None   # (params, kv, batch, *, prefix_len) -> HistoryKV
+    # generative decode surface (ISSUE 8): one vocab-scoring step against
+    # padded beam caches + the KV append that grows them — a decode step is
+    # score_candidates(M=V) at the beam's current length plus append_token
+    decode_logits: Optional[Callable] = None    # (params, kv, cand, lengths) -> probs [B,M,T]
+    append_token: Optional[Callable] = None     # (params, kv, tok, lengths) -> HistoryKV
 
 
 def cross_entropy(logits, targets, mask):

@@ -35,6 +35,29 @@ _REQUEST_IDS = itertools.count()
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class TopKConfig:
+    """Generative decode: grow ``k`` sequences greedily for ``steps`` steps
+    (each step keeps the top-k single-token continuations of each sequence's
+    own greedy path — k independent greedy beams seeded by the top-k first
+    tokens)."""
+
+    k: int = 4
+    steps: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamConfig:
+    """Generative decode: beam search of ``width`` hypotheses for ``steps``
+    steps, ranked by cumulative log-probability; ``eos`` (an item id)
+    finishes a hypothesis early — finished beams keep their score and are
+    never re-expanded."""
+
+    width: int = 4
+    steps: int = 8
+    eos: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeRequest:
     """One upstream request.
 
@@ -55,6 +78,12 @@ class ServeRequest:
     history: np.ndarray
     candidates: Optional[np.ndarray] = None
     n_tokens: int = 16
+    # generative decode (ISSUE 8): a TopKConfig/BeamConfig here asks the
+    # engine to GENERATE candidate sequences over the item vocabulary
+    # instead of scoring a provided list; ``candidates``, when also given,
+    # restricts the per-step token universe to those ids.  The response
+    # ``output`` is then ``[width, steps]`` generated item ids, best-first.
+    generate: Optional[object] = None
     user_id: Optional[int] = None
     deadline_s: Optional[float] = None
     request_id: int = dataclasses.field(

@@ -213,7 +213,9 @@ class _PipelinedEngine:
                 t_done = time.perf_counter()
                 latency = t_done - t_submit
                 timings = {"queue_s": t_deq - t_submit, **timings}
-                n_items = req.m if req.candidates is not None else len(output)
+                n_items = req.m if req.candidates is not None \
+                    and getattr(req, "generate", None) is None \
+                    else len(output)
                 self._metrics.record(n_items, latency)
                 dl = req.deadline_s if req.deadline_s is not None \
                     else self._deadline_s
@@ -243,12 +245,20 @@ class _SideFeatureMixin:
         """Reject malformed requests before their chunks reach the shared
         coalescing queue — a bad shape there would fail every co-rider
         batched into the same dispatch, not just this request."""
-        if req.candidates is None or req.candidates.ndim != 1 or req.m < 1:
+        generative = getattr(req, "generate", None) is not None
+        if not generative and (req.candidates is None
+                               or req.candidates.ndim != 1 or req.m < 1):
             raise ValueError(
                 f"request {req.request_id}: candidates must be a non-empty "
                 f"1-D id array, got "
                 f"{None if req.candidates is None else req.candidates.shape}")
-        if req.m and int(np.min(
+        if generative and req.candidates is not None \
+                and (req.candidates.ndim != 1 or req.m < 1):
+            raise ValueError(
+                f"request {req.request_id}: a generative request's "
+                f"candidates (its token universe) must be a non-empty 1-D "
+                f"id array, got {req.candidates.shape}")
+        if req.candidates is not None and req.m and int(np.min(
                 req.candidates)) < 0:  # flamecheck: host-sync-ok(admission validation over the caller's host id array)
             raise ValueError(
                 f"request {req.request_id}: candidate ids must be >= 0 "
@@ -269,6 +279,30 @@ class _SideFeatureMixin:
 
     def _admit_hook(self, request: ServeRequest):
         self.features.prefetch([int(i) for i in request.history])
+
+
+class _Beam:
+    """Host-side state of one in-flight hypothesis (ISSUE 8).
+
+    ``leaves`` holds the beam's padded KV cache locally ONLY while the
+    pool has rejected (or not yet accepted) it — the steady state is
+    ``leaves is None`` with the cache living in the :class:`HistoryKVPool`
+    under ``pool_key``/``pool_fp``, where it is subject to the same LRU /
+    byte-budget discipline as every history entry.  An evicted beam is
+    recovered by replaying its appends from a re-encoded base (counted in
+    ``gen_replays``)."""
+
+    __slots__ = ("tokens", "cum", "finished", "leaves", "pool_key",
+                 "pool_fp")
+
+    def __init__(self, tokens, cum, finished=False, leaves=None,
+                 pool_key=None, pool_fp=None):
+        self.tokens = tokens            # tuple of generated item ids
+        self.cum = cum                  # cumulative log-probability
+        self.finished = finished
+        self.leaves = leaves
+        self.pool_key = pool_key
+        self.pool_fp = pool_fp
 
 
 @register_engine("flame")
@@ -407,7 +441,9 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  pack_tails: bool = False,
                  pack_rows: Optional[int] = None,
                  deadline_s: float = 0.0,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 generate: int = 0,
+                 gen_vocab: int = 256):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
@@ -513,6 +549,49 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             self._encode_lock = threading.Lock()
             self._key_memo: Dict[int, tuple] = {}   # request_id -> (key, fp)
 
+        # generative candidate decode (ISSUE 8): ``generate`` is the
+        # engine's per-request generation CAPACITY in steps — beam caches
+        # are padded by this many extra sequence slots up front so every
+        # append is a fixed-shape in-place write (one compiled executor,
+        # no recompiles as beams grow)
+        self._generate = int(generate)
+        self._gen_vocab = int(gen_vocab)
+        self._gen_lock = threading.Lock()
+        self._gen_t0: Optional[float] = None
+        self._gen_last = 0.0
+        self._gen_tokens = 0
+        self._beams_in_flight = 0
+        if self._generate:
+            if not history_cache:
+                raise ValueError(
+                    "generate>0 needs history_cache=True: in-flight beams "
+                    "live in the HistoryKVPool as growing entries and the "
+                    "decode step reads pooled history KV as its prompt")
+            if self._fused:
+                raise ValueError(
+                    "generate>0 under impl='fused' is not supported yet: "
+                    "the decode executors consume dequantized padded beam "
+                    "caches; the raw-row fused decode epilogue rides "
+                    "ROADMAP item 3 (fused history encode)")
+            if mesh is not None:
+                raise ValueError(
+                    "generate>0 under a mesh is not supported yet: beam "
+                    "caches are per-request host-orchestrated state and "
+                    "would reshard on every append")
+            if bundle.decode_logits is None or bundle.append_token is None:
+                raise ValueError(
+                    "generate>0 needs a bundle with the decode_logits/"
+                    "append_token generative serving surface")
+            # decode/append executors speak PADDED beam caches: the cached
+            # row specs with ``generate`` extra slots on the sequence axis,
+            # filled one per appended token (valid prefix = lengths)
+            self._decode_row_specs = tuple(
+                jax.ShapeDtypeStruct(
+                    s.shape[:2] + (s.shape[2] + self._generate,)
+                    + s.shape[3:], s.dtype)
+                for s in self._cached_row_specs)
+            self._s0 = int(self._cached_row_specs[0].shape[2])
+
         # baseline for the packed_kernel_reroutes delta counter: the ops
         # module count is process-wide and may predate this engine
         self._reroutes_seen = packed_reroute_count()
@@ -526,6 +605,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             for s in specs)
         cached_row_shapes = lambda batch: _batched(  # noqa: E731
             self._cached_row_specs, batch)
+        decode_row_shapes = lambda batch: _batched(  # noqa: E731
+            getattr(self, "_decode_row_specs", ()), batch)
 
         def build_fn(kind: str, bucket: int, batch: int):
             if kind == "full":
@@ -614,6 +695,54 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                             impl=self.impl)
                     shapes = cached_row_shapes(batch) + (
                         jax.ShapeDtypeStruct((batch, bucket), jnp.int32),)
+            elif kind == "decode":
+                # one generative-decode step: score ``bucket`` next-token
+                # candidates per row against padded beam caches with valid
+                # prefix ``lengths``.  Under pack_tails the family is
+                # SEGMENT-PACKED exactly like "cached" — in-flight beams
+                # from different requests (at different lengths) bin-pack
+                # into shared rows, each candidate steered to its own
+                # beam's stacked cache row AND its own valid length by the
+                # per-candidate seg index; ``lengths`` rides as an extra
+                # packable lead arg alongside the KV leaves.
+                if self._pack_tails:
+                    def fn(*args):
+                        *kv_leaves, lengths, seg_idx, candidates = args
+                        kv = jax.tree.unflatten(self._cached_treedef,
+                                                list(kv_leaves))
+                        return bundle.decode_logits(
+                            self.params, kv, jnp.maximum(candidates, 0),
+                            lengths, impl=self.impl, row_index=seg_idx)
+                    rows = policy.rows
+                    shapes = decode_row_shapes(batch) + (
+                        jax.ShapeDtypeStruct((batch,), jnp.int32),
+                        jax.ShapeDtypeStruct((rows, bucket), jnp.int32),
+                        jax.ShapeDtypeStruct((rows, bucket), jnp.int32))
+                else:
+                    def fn(*args):
+                        *kv_leaves, lengths, candidates = args
+                        kv = jax.tree.unflatten(self._cached_treedef,
+                                                list(kv_leaves))
+                        return bundle.decode_logits(
+                            self.params, kv, jnp.maximum(candidates, 0),
+                            lengths, impl=self.impl)
+                    shapes = decode_row_shapes(batch) + (
+                        jax.ShapeDtypeStruct((batch,), jnp.int32),
+                        jax.ShapeDtypeStruct((batch, bucket), jnp.int32))
+            elif kind == "append":
+                # grow a beam cache by its chosen token's K/V at position
+                # ``lengths`` — a fixed-shape scatter into the padded cache,
+                # so every step of every beam reuses this one executor
+                def fn(*args):
+                    *kv_leaves, lengths, tokens = args
+                    kv = jax.tree.unflatten(self._cached_treedef,
+                                            list(kv_leaves))
+                    return bundle.append_token(
+                        self.params, kv, jnp.maximum(tokens, 0), lengths,
+                        impl=self.impl)
+                shapes = decode_row_shapes(batch) + (
+                    jax.ShapeDtypeStruct((batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((batch, 1), jnp.int32))
             else:
                 raise ValueError(kind)
             if self.mesh is not None:
@@ -652,12 +781,23 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 packed_kinds = {"cached": len(self._cached_row_specs)}
             elif kv_dedup:
                 dedup_kinds = {"cached": len(self._cached_row_specs)}
+            if self._generate:
+                families["decode"] = tuple(buckets)
+                families["append"] = (1,)
+                if self._pack_tails:
+                    # the beam's valid length packs alongside its KV leaves
+                    # (one lead-arg tuple per unique beam -> one stacked
+                    # slot), so a packed row mixes beams at different
+                    # lengths without padding any of them
+                    packed_kinds["decode"] = len(self._cached_row_specs) + 1
             if pool_placement == "device" and jax.default_backend() != "cpu":
                 # encode/extend outputs feed the pool: keep them on device.
                 # On the CPU backend host and device memory coincide, so the
                 # numpy scatter path is the same placement without the
                 # per-row device-slice dispatch overhead.
                 device_output_kinds = ("encode", "extend")
+                if self._generate:
+                    device_output_kinds += ("append",)
         else:
             families = {"full": tuple(buckets)}
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
@@ -713,7 +853,9 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         return key, fp
 
     def _admit_hook(self, request: ServeRequest):
-        if self.history_pool is not None and request.candidates is not None:
+        if self.history_pool is not None and (
+                request.candidates is not None
+                or request.generate is not None):
             key, fp = self._pool_key(request)
             # stash for _execute so the O(n_history) hash runs once; the
             # memo is written on the submitter thread and consumed on a
@@ -744,6 +886,16 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         if kind == "full":
             history, candidates, side = request
             return history, self._slice_candidates(candidates, chunk), side
+        if kind == "append":
+            kv_leaves, lengths, tokens = request
+            return tuple(kv_leaves) + (lengths, tokens)
+        if kind == "decode":
+            kv_leaves, lengths, candidates = request
+            if self._pack_tails:
+                sl = candidates[:, chunk.start:chunk.start + chunk.valid]
+                return tuple(kv_leaves) + (lengths, sl)
+            return tuple(kv_leaves) + (
+                lengths, self._slice_candidates(candidates, chunk))
         kv_leaves, candidates = request          # cached
         if self._pack_tails:
             # packed family: hand the dispatcher the UNPADDED segment —
@@ -755,7 +907,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
 
     def _gather(self, rows, chunks: List[DSO.Chunk], m: int,
                 kind: str = "full"):
-        if kind in ("encode", "extend"):
+        if kind in ("encode", "extend", "append"):
             return rows[0]                      # one chunk: the KV pytree
         parts = [r[:, :c.valid] for r, c in zip(rows, chunks)]
         return np.concatenate(parts, axis=1)
@@ -888,6 +1040,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             with self._encode_lock:
                 memo = self._key_memo.pop(req.request_id, None)
         self._check_request(req)
+        if req.generate is not None:
+            return self._execute_generate(req, memo)
         t0 = time.perf_counter()
         dl = req.deadline_s if req.deadline_s is not None else self._deadline_s
         deadline = (req.arrival_t + dl) if dl else None
@@ -933,6 +1087,281 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                         "pool_hit": 1.0 if path == "hit" else 0.0,
                         "execute_s": t2 - t1}
 
+    # ---- generative candidate decode (ISSUE 8) ----
+    def _pad_beam_leaves(self, kv_leaves) -> tuple:
+        """Pad base (s0-row) cache leaves to the decode executors' S_pad =
+        s0 + generate slots — once per request root, on the host; every
+        subsequent append is a fixed-shape in-place write."""
+        pad = ((0, 0), (0, 0), (0, self._generate), (0, 0), (0, 0))
+        return tuple(
+            np.pad(np.asarray(a), pad) for a in
+            kv_leaves)  # flamecheck: host-sync-ok(one-time root-cache padding; beam orchestration is host-side by design)
+
+    def _copy_kv_rows(self, kv_tree) -> tuple:
+        """Flatten an executor KV result and copy host VIEWS out of the
+        padded stacked dispatch parent (same rule as the encode path)."""
+        return tuple(
+            np.array(a) if isinstance(a, np.ndarray) else a
+            for a in jax.tree.leaves(
+                kv_tree))  # flamecheck: host-sync-ok(copies host VIEWS out of the padded stacked parent so holding them cannot pin it)
+
+    def _note_gen_tokens(self, n: int):
+        now = time.perf_counter()
+        with self._gen_lock:
+            if self._gen_t0 is None:
+                self._gen_t0 = now
+            self._gen_last = now
+            self._gen_tokens += n
+        self._metrics.incr("gen_tokens", n)
+
+    def _shift_beams_in_flight(self, delta: int):
+        with self._gen_lock:
+            self._beams_in_flight += delta
+            n = self._beams_in_flight
+        self._metrics.set_gauge("beams_in_flight", n)
+
+    def _beam_leaves(self, req, hist, memo, beam: _Beam, deadline) -> tuple:
+        """The beam's padded KV cache: local copy if the pool rejected it,
+        else a pool lookup — and, when the entry was LRU-evicted
+        mid-generation, a replay (re-encode the history base, re-append
+        every generated token; ``gen_replays`` counts these)."""
+        if beam.leaves is not None:
+            return beam.leaves
+        kv, status, _ = self.history_pool.lookup(beam.pool_key, beam.pool_fp)
+        if status == "hit":
+            return tuple(jax.tree.leaves(kv))
+        self._metrics.incr("gen_replays")
+        base, _, _ = self._lookup_or_encode(req, hist, memo, deadline)
+        leaves = self._pad_beam_leaves(base)
+        for i, tok in enumerate(beam.tokens):
+            kv_tree = self.dso.score(
+                (leaves, np.full((1,), self._s0 + i, np.int32),
+                 np.asarray(
+                     [[tok]],
+                     np.int32)),  # flamecheck: host-sync-ok(replayed tokens are host python ints; beam orchestration is host-side by design)
+                1, kind="append", deadline=deadline)
+            leaves = self._copy_kv_rows(kv_tree)
+        return leaves
+
+    def _park_beam(self, req, slot: int, beam: _Beam, leaves: tuple,
+                   hist_fp) -> None:
+        """Hand a beam's cache to the pool (key = (\"g\", request id, beam
+        slot); fingerprint = the token path, so a slot overwritten by a
+        different hypothesis next step reads as a miss, not a wrong hit).
+        On accept the local copy is dropped — the pool's LRU/byte budget
+        governs the beam like any user entry; on reject it stays local."""
+        key = ("g", req.request_id, slot)
+        fp = (hist_fp,) + beam.tokens
+        if self.history_pool.put(key, fp, leaves):
+            beam.pool_key, beam.pool_fp, beam.leaves = key, fp, None
+        else:
+            beam.leaves = leaves
+
+    def _execute_generate(self, req: ServeRequest, memo: Optional[tuple]):
+        from repro.serving import generate as G
+        from repro.serving.api import BeamConfig, TopKConfig
+        gen = req.generate
+        if isinstance(gen, TopKConfig):
+            width, steps, eos, beam_mode = int(gen.k), int(gen.steps), None, \
+                False
+        elif isinstance(gen, BeamConfig):
+            width, steps, eos, beam_mode = int(gen.width), int(gen.steps), \
+                gen.eos, True
+        else:
+            raise ValueError(
+                f"request {req.request_id}: generate must be a TopKConfig "
+                f"or BeamConfig, got {type(gen).__name__}")
+        if not self._generate:
+            raise ValueError(
+                "this engine was built without generative capacity; "
+                "construct it with generate=<max steps>")
+        if not 1 <= steps <= self._generate:
+            raise ValueError(
+                f"request {req.request_id}: steps={steps} outside the "
+                f"engine's generate capacity [1, {self._generate}]")
+        if req.candidates is not None:
+            # np.unique sorts AND dedups: duplicate ids would make two
+            # "distinct" hypotheses identical, breaking beam uniqueness
+            universe = np.unique(np.asarray(
+                req.candidates,
+                np.int32))  # flamecheck: host-sync-ok(admission-time canonicalization of the caller's host id array)
+        else:
+            universe = np.arange(self._gen_vocab, dtype=np.int32)
+        # top-k seeds k INDEPENDENT greedy beams from the k best first
+        # tokens, so k is capped by the universe; beam search may run wider
+        # than the universe (hypotheses multiply V-fold per step — step 0
+        # seeds min(width, V) beams and beam_step grows toward width)
+        if width < 1 or (not beam_mode and width > len(universe)):
+            raise ValueError(
+                f"request {req.request_id}: width={width} must be in "
+                f"[1, |universe|={len(universe)}] for top-k decode")
+        t0 = time.perf_counter()
+        dl = req.deadline_s if req.deadline_s is not None else self._deadline_s
+        deadline = (req.arrival_t + dl) if dl else None
+        hist = np.asarray(
+            req.history[None, :self.n_history],
+            np.int32)  # flamecheck: host-sync-ok(request arrays arrive as host numpy; dtype canonicalized once at admission)
+        key_fp = memo if memo is not None else self._pool_key(req)
+        hist_fp = key_fp[1]
+        base, path, features_s = self._lookup_or_encode(req, hist, key_fp,
+                                                        deadline)
+        root_leaves = self._pad_beam_leaves(base)
+        t1 = time.perf_counter()
+        self._shift_beams_in_flight(width)
+        try:
+            beams = self._generate_loop(
+                req, hist, key_fp, root_leaves, universe, width, steps,
+                eos, beam_mode, deadline, G)
+        finally:
+            self._shift_beams_in_flight(-width)
+        # best-first [width, steps] id matrix; -1 pads rows finished early
+        order = np.argsort(
+            -np.asarray([b.cum for b in beams]),
+            kind="stable")  # flamecheck: host-sync-ok(final ranking over host python floats; beam orchestration is host-side by design)
+        out = np.full((width, steps), -1, np.int32)
+        for r, o in enumerate(order):
+            toks = beams[o].tokens
+            out[r, :len(toks)] = toks
+        t2 = time.perf_counter()
+        build_s = (t1 - t0) - features_s
+        return out, {"features_s": features_s,
+                     "encode_s": build_s if path == "encode" else 0.0,
+                     "extend_s": build_s if path == "extend" else 0.0,
+                     "pool_hit": 1.0 if path == "hit" else 0.0,
+                     "execute_s": t2 - t1}
+
+    def _generate_loop(self, req, hist, memo, root_leaves, universe,
+                       width, steps, eos, beam_mode, deadline, G):
+        """Run ``steps`` decode rounds; returns the final beam list.
+
+        Each round: fetch every live beam's cache (local / pool / replay),
+        submit ALL their vocab-scoring chunks to the ``decode`` family at
+        once (under ``pack_tails`` beams from this and other in-flight
+        requests bin-pack into shared ragged rows), rank continuations
+        host-side (greedy per-beam for top-k, global beam_step for beam
+        search), then submit the surviving children's KV appends as one
+        coalesced ``append`` round and park the grown caches in the pool."""
+        rid = req.request_id
+        v = len(universe)
+        # ---- step 0: one decode from the shared history root ----
+        fut = self.dso.submit((root_leaves,
+                               np.full((1,), self._s0, np.int32),
+                               universe[None]),
+                              v, kind="decode",
+                              dedup_token=("g", rid, "root"),
+                              deadline=deadline)
+        probs = np.asarray(
+            fut.result(),
+            np.float32)[0]  # flamecheck: host-sync-ok(beam ranking is host-side search logic by design)
+        self._metrics.incr("decode_steps")
+        lp = G.log_softmax(probs.sum(-1))
+        order = np.argsort(-lp, kind="stable")[:width]
+        beams = [
+            _Beam(tokens=(int(universe[o]),), cum=float(lp[o]),
+                  finished=(eos is not None and int(universe[o]) == eos))
+            for o in order]
+        self._note_gen_tokens(len(beams))
+        parent_leaves = {i: root_leaves for i in range(len(beams))}
+        parent_of = {i: i for i in range(len(beams))}
+        for step in range(1, steps + 1):
+            # ---- append round: grow every unfinished child's cache ----
+            if step < steps:     # the final round's tokens are never scored
+                afuts = []
+                for i, b in enumerate(beams):
+                    if b.finished:
+                        continue
+                    plv = parent_leaves[parent_of[i]]
+                    afuts.append((i, self.dso.submit(
+                        (plv,
+                         np.full((1,), self._s0 + len(b.tokens) - 1,
+                                 np.int32),
+                         np.asarray(
+                             [[b.tokens[-1]]],
+                             np.int32)),  # flamecheck: host-sync-ok(chosen tokens are host python ints; beam orchestration is host-side by design)
+                        1, kind="append", deadline=deadline)))
+                for i, f in afuts:
+                    leaves = self._copy_kv_rows(f.result())
+                    self._park_beam(req, i, beams[i], leaves, memo[1])
+            if step == steps:
+                break
+            # ---- decode round over the live hypotheses ----
+            live = [i for i, b in enumerate(beams) if not b.finished]
+            if not live:
+                break
+            leaves_of = {}
+            dfuts = []
+            for i in live:
+                leaves_of[i] = self._beam_leaves(req, hist, memo, beams[i],
+                                                 deadline)
+                dfuts.append((i, self.dso.submit(
+                    (leaves_of[i],
+                     np.full((1,), self._s0 + len(beams[i].tokens),
+                             np.int32),
+                     universe[None]),
+                    v, kind="decode",
+                    dedup_token=("g", rid, i, len(beams[i].tokens)),
+                    deadline=deadline)))
+            self._metrics.incr("decode_steps")
+            step_lp = np.zeros((len(beams), v))
+            for i, f in dfuts:
+                probs = np.asarray(
+                    f.result(),
+                    np.float32)[0]  # flamecheck: host-sync-ok(beam ranking is host-side search logic by design)
+                step_lp[i] = G.log_softmax(probs.sum(-1))
+            if beam_mode:
+                cum = np.asarray(
+                    [b.cum for b in beams])  # flamecheck: host-sync-ok(beam scores are host python floats; ranking is host-side by design)
+                seqs = [b.tokens for b in beams]
+                fin = np.asarray(
+                    [b.finished for b in beams])  # flamecheck: host-sync-ok(beam flags are host python bools; ranking is host-side by design)
+                new_cum, new_seqs, new_fin, parents = G.beam_step(
+                    cum, seqs, fin, step_lp, width, eos, universe)
+                new_beams = []
+                parent_of = {}
+                grew_n = 0
+                for slot in range(len(new_cum)):
+                    p = int(parents[slot])
+                    grew_n += len(new_seqs[slot]) > len(seqs[p])
+                    parent_of[slot] = p
+                    new_beams.append(
+                        _Beam(tokens=new_seqs[slot],
+                              cum=float(new_cum[slot]),
+                              finished=bool(new_fin[slot])))
+                self._note_gen_tokens(grew_n)
+                # the next append round reads each UNFINISHED child's
+                # parent cache: keep those addressable host-side (decode
+                # already fetched live parents; a pool-parked one rides
+                # its pooled entry via _beam_leaves)
+                parent_leaves = {}
+                for slot, nb in enumerate(new_beams):
+                    p = parent_of[slot]
+                    if nb.finished or p in parent_leaves:
+                        continue
+                    plv = leaves_of.get(p)
+                    if plv is None:
+                        plv = beams[p].leaves
+                    if plv is None:
+                        plv = self._beam_leaves(req, hist, memo, beams[p],
+                                                deadline)
+                    parent_leaves[p] = plv
+                beams = new_beams
+            else:
+                # top-k: each hypothesis follows its own greedy path
+                parent_of = {i: i for i in range(len(beams))}
+                parent_leaves = leaves_of
+                appended = 0
+                for i in live:
+                    j = int(np.argmax(
+                        step_lp[i]))  # flamecheck: host-sync-ok(argmax over a host fp64 ranking buffer; greedy selection is host-side by design)
+                    tok = int(universe[j])
+                    beams[i] = _Beam(
+                        tokens=beams[i].tokens + (tok,),
+                        cum=beams[i].cum + float(step_lp[i][j]),
+                        finished=(eos is not None and tok == eos))
+                    appended += 1
+                self._note_gen_tokens(appended)
+        return beams
+
     def _extra_metrics(self):
         st = self.dso.stats()
         # surface the DSO v2 dispatch-economics gauges through ServeMetrics
@@ -947,6 +1376,15 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         self._metrics.set_gauge(
             "padded_fraction", 1.0 - valid / slots if slots else 0.0)
         self._metrics.set_gauge("queue_delay_ms", st["queue_delay_ms"])
+        if self._generate:
+            with self._gen_lock:
+                toks = self._gen_tokens
+                dt = self._gen_last - self._gen_t0 \
+                    if self._gen_t0 is not None else 0.0
+            # first-to-last appended-token wall clock; one lone step
+            # reports 0 rather than a meaningless infinite rate
+            self._metrics.set_gauge(
+                "gen_tokens_per_s", toks / dt if dt > 0 else 0.0)
         # satellite observability for the packed-seg kernel->jnp reroute:
         # the ops-module count is process-wide, so fold in deltas only
         reroutes = packed_reroute_count()

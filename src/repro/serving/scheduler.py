@@ -117,12 +117,18 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
         if arrival_gap_s > 0:
             time.sleep(float(rng.uniform(0, arrival_gap_s)))
         futs.append(engine.submit(ServeRequest(
-            history=r["history"], candidates=r["candidates"],
-            user_id=r.get("user_id"), deadline_s=r.get("deadline_s"))))
+            history=r["history"], candidates=r.get("candidates"),
+            user_id=r.get("user_id"), deadline_s=r.get("deadline_s"),
+            generate=r.get("generate"))))
     resps = [f.result() for f in futs]
     total = time.perf_counter() - t0
     la = np.array([r.latency_s for r in resps])
-    items = sum(len(r["candidates"]) for r in requests)
+    # generative requests count generated tokens; scoring requests count
+    # scored candidates
+    items = sum(int((r.output >= 0).sum())
+                if requests[i].get("generate") is not None
+                else len(requests[i]["candidates"])
+                for i, r in enumerate(resps))
     return {
         "requests": len(requests),
         "total_s": total,
