@@ -69,6 +69,15 @@ batch-invariant) and the gen-tokens/s gate is cpu-count-aware: speedup
 on multi-core, parity floor on a single core.  Run standalone with
 ``--profile decode`` (a CI gate).
 
+Profile 10 (overload): SLO-tiered EDF admission + load shedding vs the
+PR-1 FIFO discipline under sustained overload (every request submitted at
+once against a small worker pool), gated on interactive-tier
+goodput-under-SLO (median per-round, cpu-count-aware floor); plus a chaos
+pass under deterministic fault injection (transient dispatch failures,
+worker stalls, pool eviction storms) gated on ZERO hung futures — every
+submission resolves, result or error.  Run standalone with
+``--profile overload`` (a CI gate).
+
 All profiles run against a warmed PDA cache (hot steady state) so the
 measurement reflects dispatch economics, not feature-fetch cost.
 
@@ -219,6 +228,39 @@ DECODE_ROUNDS = 5
 DECODE_WORKERS = 4
 DECODE_REQUESTS = 24
 DECODE_SPEEDUP_MIN = 1.1 if (os.cpu_count() or 1) > 1 else 0.9
+# overload profile (ISSUE 9): sustained arrival rate > service rate —
+# every request submits at once against a small worker pool, so the
+# admission queue stays saturated and ordering policy decides who makes
+# their SLO.  A/B: FIFO admission + blocking backpressure (the PR-1
+# discipline) vs EDF admission + tiered shedding.  The gate is
+# goodput-under-SLO on the INTERACTIVE tier (requests completing inside
+# their deadline, from the goodput_interactive counter): EDF serves the
+# tight-deadline work first while FIFO makes it wait behind bulk.  The
+# ratio smooths +1 on both sides (rounds where FIFO strands every
+# interactive request would otherwise divide by zero) and gates on the
+# median per-round value.  Single-core boxes keep a reduced floor: the
+# ordering win survives serialization, but one poisoned round of two
+# workers time-slicing one core adds noise the multicore floor would
+# flake on.
+OVERLOAD_HISTORY = 96
+OVERLOAD_COUNTS = (8, 16, 32)
+OVERLOAD_REQUESTS = 48
+OVERLOAD_ROUNDS = 5
+OVERLOAD_WORKERS = 2
+OVERLOAD_PENDING = 16
+OVERLOAD_TIER_MIX = {"interactive": 0.3, "standard": 0.4, "bulk": 0.3}
+# interactive SLO sits between EDF's interactive-clear time (~0.3x the
+# full-round wall time: EDF front-runs the ~30% interactive slice) and
+# FIFO's full-round wall time (~0.11 s here), so FIFO strands most
+# late-arriving interactive work past deadline while EDF meets all of it
+OVERLOAD_TIER_SLO = {"interactive": 0.04, "standard": 1.5, "bulk": 10.0}
+OVERLOAD_GOODPUT_MIN = 1.2 if (os.cpu_count() or 1) > 1 else 1.05
+# chaos arm of the overload profile: transient dispatch faults (exercising
+# the DSO retry loop), worker stalls (exercising the watchdog), and pool
+# eviction storms (forcing re-encodes) — the gate is LIVENESS: zero hung
+# futures, every submission resolves (result or error) inside the timeout
+OVERLOAD_FAULT_SPEC = "dispatch:0.15,stall:0.1:0.005,evict:0.1"
+OVERLOAD_WATCHDOG_GRACE_S = 2.0
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
 
 
@@ -899,6 +941,171 @@ def run_decode_profile(bundle, params, csv=True):
     }
 
 
+def run_overload_profile(bundle, params, csv=True):
+    """Profile 10 (overload): SLO-tiered EDF admission + shedding vs FIFO
+    under sustained overload, plus a chaos pass under fault injection.
+    Gates: EDF interactive-tier goodput-under-SLO >= OVERLOAD_GOODPUT_MIN x
+    FIFO (median per-round, +1-smoothed), zero hung futures everywhere,
+    and the chaos arms actually firing."""
+    from repro.serving.api import DegradationPolicy
+    from repro.serving.faults import FaultInjector
+
+    print("\n=== Overload: EDF admission + tiered shedding vs FIFO "
+          f"(lognormal traffic, {OVERLOAD_REQUESTS} reqs -> "
+          f"{OVERLOAD_WORKERS} workers, queue {OVERLOAD_PENDING}, "
+          f"SLOs {OVERLOAD_TIER_SLO}) ===")
+    tc = TrafficConfig(candidate_counts=OVERLOAD_COUNTS,
+                       distribution="lognormal",
+                       n_requests=OVERLOAD_REQUESTS,
+                       n_history=OVERLOAD_HISTORY, seed=37,
+                       n_users=REPEAT_USERS, tier_mix=OVERLOAD_TIER_MIX)
+    reqs = generate_traffic(tc, n_items=N_ITEMS)
+
+    def overload_engine(admission, shed, faults=None, degradation=None,
+                        watchdog=0.0):
+        eng = create_engine(
+            "flame", bundle, params, n_history=OVERLOAD_HISTORY,
+            buckets=BUCKETS, n_streams=2, feature_mode="sync",
+            store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+            coalesce=True, max_batch=MAX_BATCH, window_s=0.002,
+            n_workers=OVERLOAD_WORKERS, max_pending=OVERLOAD_PENDING,
+            history_cache=True, pool_slots=POOL_SLOTS,
+            admission=admission, shed_policy=shed,
+            slo_tier_defaults=dict(OVERLOAD_TIER_SLO),
+            faults=faults, degradation=degradation,
+            watchdog_grace_s=watchdog)
+        eng.features.query(list(range(N_ITEMS)))
+        return eng
+
+    eng_fifo = overload_engine("fifo", "none")
+    eng_edf = overload_engine("edf", "tiered")
+    # warm both sides (executors compiled, pool encoded), then interleave
+    # measured rounds; goodput is a COUNTER, so each round reads the delta
+    run_workload_async(eng_fifo, reqs, tolerate_errors=True)
+    run_workload_async(eng_edf, reqs, tolerate_errors=True)
+    sides = [dict(eng=eng_fifo, name="fifo", good=[], missed=[], shed=0,
+                  hung=0),
+             dict(eng=eng_edf, name="edf", good=[], missed=[], shed=0,
+                  hung=0)]
+    ratios = []
+    for _ in range(OVERLOAD_ROUNDS):
+        round_good = [0, 0]
+        for i, s in enumerate(sides):
+            m0 = s["eng"].metrics()
+            r = run_workload_async(s["eng"], reqs, tolerate_errors=True)
+            m1 = s["eng"].metrics()
+            s["hung"] += r["hung"]
+            g = int(m1.get("goodput_interactive", 0)
+                    - m0.get("goodput_interactive", 0))
+            s["good"].append(g)
+            s["missed"].append(int(
+                m1.get("deadline_misses_interactive", 0)
+                - m0.get("deadline_misses_interactive", 0)))
+            round_good[i] = g
+        ratios.append((round_good[1] + 1) / (round_good[0] + 1))
+    summary = {}
+    for s in sides:
+        m = s["eng"].metrics()
+        summary[s["name"]] = {
+            "goodput_interactive_per_round": s["good"],
+            "misses_interactive_per_round": s["missed"],
+            "goodput_interactive": int(sum(s["good"])),
+            "shed_total": int(m.get("shed_total", 0)),
+            "shed_bulk": int(m.get("shed_bulk", 0)),
+            "shed_standard": int(m.get("shed_standard", 0)),
+            "shed_interactive": int(m.get("shed_interactive", 0)),
+            "hung": s["hung"],
+        }
+        s["eng"].shutdown()
+    goodput_ratio = float(np.median(ratios))
+    print(f"{'policy':<22}{'good(int)':>10}{'miss(int)':>10}{'shed':>7}")
+    for name in ("fifo", "edf"):
+        r = summary[name]
+        print(f"{name:<22}{r['goodput_interactive']:>10}"
+              f"{sum(r['misses_interactive_per_round']):>10}"
+              f"{r['shed_total']:>7}")
+    print(f"-> EDF+shed: interactive goodput-under-SLO x{goodput_ratio:.2f} "
+          f"median per-round vs FIFO (per-round "
+          f"{[round(r, 2) for r in ratios]}); EDF shed "
+          f"{summary['edf']['shed_total']} low-priority requests to get "
+          f"there; hung futures fifo={summary['fifo']['hung']} "
+          f"edf={summary['edf']['hung']}")
+
+    # ---- chaos pass: injected faults must never hang a future ----
+    faults = FaultInjector.parse(OVERLOAD_FAULT_SPEC, seed=41)
+    eng_chaos = overload_engine(
+        "edf", "tiered", faults=faults,
+        degradation=DegradationPolicy(threshold_s=0.05),
+        watchdog=OVERLOAD_WATCHDOG_GRACE_S)
+    chaos_hung = 0
+    chaos = {}
+    for _ in range(2):
+        r = run_workload_async(eng_chaos, reqs, tolerate_errors=True)
+        chaos_hung += r["hung"]
+        chaos = {k: r[k] for k in
+                 ("resolved", "rejected", "failed", "hung")}
+    mc = eng_chaos.metrics()
+    chaos.update(
+        hung_total=chaos_hung,
+        fault_dispatch_fired=int(mc.get("fault_dispatch_fired", 0)),
+        fault_stall_fired=int(mc.get("fault_stall_fired", 0)),
+        fault_evict_fired=int(mc.get("fault_evict_fired", 0)),
+        dispatch_retries=int(mc.get("dso_dispatch_retries", 0)),
+        dispatch_failures=int(mc.get("dso_dispatch_failures", 0)),
+        watchdog_timeouts=int(mc.get("watchdog_timeouts", 0)),
+        encode_recoveries=int(mc.get("encode_recoveries", 0)),
+        degrade_steps=int(mc.get("degrade_steps", 0)))
+    eng_chaos.shutdown()
+    print(f"-> chaos ({OVERLOAD_FAULT_SPEC}): "
+          f"{chaos['fault_dispatch_fired']} dispatch faults "
+          f"({chaos['dispatch_retries']} retried, "
+          f"{chaos['dispatch_failures']} fatal), "
+          f"{chaos['fault_stall_fired']} stalls, "
+          f"{chaos['fault_evict_fired']} eviction storms, "
+          f"{chaos['watchdog_timeouts']} watchdog fails; "
+          f"hung futures: {chaos_hung}")
+    if csv:
+        print(f"serving/overload_fifo,0,"
+              f"goodput_int={summary['fifo']['goodput_interactive']}")
+        print(f"serving/overload_edf,0,"
+              f"goodput_int={summary['edf']['goodput_interactive']}")
+
+    total_hung = (summary['fifo']['hung'] + summary['edf']['hung']
+                  + chaos_hung)
+    if total_hung:
+        raise AssertionError(
+            f"{total_hung} future(s) never resolved — the zero-hung "
+            f"liveness gate failed")
+    if goodput_ratio < OVERLOAD_GOODPUT_MIN:
+        raise AssertionError(
+            f"EDF+shed interactive goodput x{goodput_ratio:.2f} < "
+            f"{OVERLOAD_GOODPUT_MIN} vs FIFO (per-round ratios "
+            f"{[round(r, 2) for r in ratios]}) — overload gate failed")
+    if chaos["fault_dispatch_fired"] < 1 or chaos["fault_evict_fired"] < 1:
+        raise AssertionError(
+            "chaos pass fired no dispatch/evict faults — the injector is "
+            "not engaging (seed/spec drift?)")
+    return {
+        "workload": {"distribution": "lognormal",
+                     "counts": list(OVERLOAD_COUNTS),
+                     "n_requests": OVERLOAD_REQUESTS,
+                     "history": OVERLOAD_HISTORY, "n_users": REPEAT_USERS,
+                     "tier_mix": dict(OVERLOAD_TIER_MIX),
+                     "tier_slo_s": dict(OVERLOAD_TIER_SLO),
+                     "n_workers": OVERLOAD_WORKERS,
+                     "max_pending": OVERLOAD_PENDING,
+                     "cpu_count": int(os.cpu_count() or 1)},
+        "fifo": summary["fifo"],
+        "edf": summary["edf"],
+        "goodput_ratio_median_per_round": goodput_ratio,
+        "per_round_ratios": [float(r) for r in ratios],
+        "chaos": dict(chaos, fault_spec=OVERLOAD_FAULT_SPEC),
+        "gates": {"overload_goodput_min": OVERLOAD_GOODPUT_MIN,
+                  "zero_hung_futures": True,
+                  "chaos_faults_fired": True},
+    }
+
+
 def _merge_report(section: str, payload: dict):
     """Update one section of BENCH_serving.json in place (standalone
     profile runs must not clobber the other profiles' trajectory)."""
@@ -921,6 +1128,7 @@ PROFILE_RUNNERS = {
     "dso_nonuniform": run_dso_nonuniform_profile,
     "sharded": run_sharded_profile,
     "decode": run_decode_profile,
+    "overload": run_overload_profile,
 }
 
 
@@ -1092,6 +1300,7 @@ def main(csv=True, profile: str = "all"):
     dso_nonuniform = run_dso_nonuniform_profile(bundle, params, csv)
     sharded = run_sharded_profile(bundle, params, csv)
     decode = run_decode_profile(bundle, params, csv)
+    overload = run_overload_profile(bundle, params, csv)
 
     report = {
         "workload": {"distribution": "jittered", "counts": list(COUNTS),
@@ -1140,6 +1349,7 @@ def main(csv=True, profile: str = "all"):
         "dso_nonuniform": dso_nonuniform,
         "sharded": sharded,
         "decode": decode,
+        "overload": overload,
         "gates": {
             "coalesced_bitwise": True,
             "pool_tolerance": 2e-3,
@@ -1153,6 +1363,7 @@ def main(csv=True, profile: str = "all"):
             "sharded_parity_min": SHARDED_PARITY_MIN,
             "sharded_tolerance": SHARDED_TOL,
             "decode_speedup_min": DECODE_SPEEDUP_MIN,
+            "overload_goodput_min": OVERLOAD_GOODPUT_MIN,
         },
     }
     path = os.path.abspath(OUT_PATH)

@@ -43,6 +43,16 @@ python -m repro.launch.serve --engine flame --generate topk \
     --gen-steps 4 --beam-width 2 --pool-slots 64 --users 4 \
     --requests 12 --history 64 --buckets 16,8 --counts 8,16 --d-model 64
 
+echo "== smoke: chaos serving (fault injection, shed, degrade, watchdog) =="
+python -m repro.launch.serve --engine flame --history-cache \
+    --fault-spec "dispatch:0.2,stall:0.1:0.005,evict:0.15" --fault-seed 7 \
+    --shed-policy tiered --slo-tier-defaults \
+    "interactive=250,standard=1500,bulk=10000" \
+    --slo-mix "interactive=0.3,standard=0.4,bulk=0.3" --degrade 50 \
+    --watchdog-grace-ms 2000 --distribution lognormal \
+    --pool-slots 64 --users 4 --requests 16 --history 64 \
+    --buckets 16,8 --counts 8,16 --d-model 64
+
 echo "== smoke: mesh-sharded serving (forced 4-device host mesh, 2x2) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 python -m repro.launch.serve --engine flame --history-cache --mesh 2,2 \
@@ -60,5 +70,8 @@ python -m benchmarks.bench_serving --profile sharded
 
 echo "== bench gate: packed decode bitwise + gen-tokens/s vs unpacked =="
 python -m benchmarks.bench_serving --profile decode
+
+echo "== bench gate: EDF goodput-under-SLO vs FIFO + chaos liveness =="
+python -m benchmarks.bench_serving --profile overload
 
 echo "CI OK"

@@ -18,8 +18,8 @@ import os
 import sys
 from typing import Dict, List, Sequence
 
-from repro.analysis import host_sync, kernel_contracts, lock_discipline, \
-    recompile
+from repro.analysis import future_leak, host_sync, kernel_contracts, \
+    lock_discipline, recompile
 from repro.analysis.common import Finding, ModuleSource
 
 PASSES = {
@@ -27,12 +27,14 @@ PASSES = {
     "host-sync": host_sync.run,
     "recompile": recompile.run,
     "kernel-contract": kernel_contracts.run,
+    "future-leak": future_leak.run,
 }
 
 #: the repo modules flamecheck gates by default
 DEFAULT_TARGETS = (
     "src/repro/serving/api.py",
     "src/repro/serving/engine.py",
+    "src/repro/serving/faults.py",
     "src/repro/serving/kv_cache.py",
     "src/repro/serving/scheduler.py",
     "src/repro/core/dso.py",

@@ -23,6 +23,7 @@ lock-discipline     ``unguarded-ok``
 host-sync           ``host-sync-ok``
 recompile           ``recompile-ok``
 kernel-contract     ``kernel-ok``
+future-leak         ``future-ok``
 ==================  =====================
 
 A pragma suppresses a finding when it sits on the finding's line, on the
@@ -55,6 +56,7 @@ SUPPRESS_TOKENS = {
     "host-sync": "host-sync-ok",
     "recompile": "recompile-ok",
     "kernel-contract": "kernel-ok",
+    "future-leak": "future-ok",
 }
 #: tokens with semantics beyond suppression (never "unused")
 SEMANTIC_TOKENS = {"locked-by-caller"}

@@ -254,13 +254,22 @@ class CoalescePolicy:
     per-device (local) shape is also what makes sharded serving bitwise
     against a single-device engine on CPU CI: XLA's kernel selection (and
     hence FP reduction order) depends on the local batch shape, so equal
-    local shapes mean identical per-row arithmetic."""
+    local shapes mean identical per-row arithmetic.
+
+    ``tier_windows`` (SLO-tiered serving, ISSUE 9) maps an SLO tier name to
+    a multiplier on ``window_s`` — the per-tier pack/flush policy: an
+    interactive chunk should flush almost immediately (scale ~0) while bulk
+    work may wait longer than the default window for better packing.  The
+    collect loop uses the MINIMUM scale across the chunks it has collected,
+    so one interactive co-rider flushes the whole dispatch.  ``None``
+    (and unknown tiers / tier-less chunks) means scale 1.0."""
 
     enabled: bool = True
     max_batch: int = 4
     window_s: float = 0.002
     pack_rows: Optional[int] = None
     data_ways: int = 1
+    tier_windows: Optional[Dict[str, float]] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -289,6 +298,12 @@ class CoalescePolicy:
             self.max_batch
         return per_dev * self.data_ways
 
+    def tier_scale(self, tier: Optional[str]) -> float:
+        """Flush-window multiplier for one chunk's SLO tier."""
+        if self.tier_windows is None or tier is None:
+            return 1.0
+        return self.tier_windows.get(tier, 1.0)
+
 
 _SEQ = itertools.count()
 
@@ -301,6 +316,7 @@ class _PendingChunk:
     valid: int = 0                    # real candidates in this chunk
     deadline: Optional[float] = None  # absolute perf_counter deadline
     remaining: int = 0                # request work left incl. this chunk
+    tier: Optional[str] = None        # owning request's SLO tier (flush policy)
     seq: int = dataclasses.field(default_factory=lambda: next(_SEQ))
     enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -461,7 +477,10 @@ class CoalescingOrchestrator:
                  dedup_kinds: Optional[Dict[str, int]] = None,
                  device_output_kinds: Sequence[str] = (),
                  packed_kinds: Optional[Dict[str, int]] = None,
-                 serialize_dispatch: bool = False):
+                 serialize_dispatch: bool = False,
+                 fault_hook: Optional[Callable[[str, int], None]] = None,
+                 dispatch_retries: int = 2,
+                 retry_backoff_s: float = 0.001):
         self._legacy = families is None
         if families is None:
             # adapt the single-family callbacks to the kinds signatures once
@@ -500,6 +519,22 @@ class CoalescingOrchestrator:
         self.queue_delay_count = 0
         self.kind_chunks: Dict[str, int] = {k: 0 for k in self.families}
         self.kind_dispatches: Dict[str, int] = {k: 0 for k in self.families}
+        # fault tolerance (ISSUE 9): ``fault_hook(kind, bucket)`` runs just
+        # before every executor launch (the chaos injection point); a raised
+        # exception with a truthy ``.transient`` retries with exponential
+        # backoff up to ``dispatch_retries`` times before failing the batch.
+        self._fault_hook = fault_hook
+        self._dispatch_retries = max(0, int(dispatch_retries))
+        self._retry_backoff_s = float(retry_backoff_s)
+        self.dispatch_retry_count = 0      # transient failures retried
+        self.dispatch_failure_count = 0    # batches failed into futures
+        # per-family deadline misses: chunks whose dispatch completed past
+        # their absolute deadline (degradation decisions read these)
+        self.deadline_miss_chunks: Dict[str, int] = {
+            k: 0 for k in self.families}
+        # graceful degradation: a non-None override caps the effective
+        # flush window (level >= 1 sets 0.0 — flush immediately)
+        self._window_override: Optional[float] = None
         # per-(kind, bucket) candidate-slot occupancy: slots dispatched vs
         # real candidates in them — 1 - valid/slots is the padded fraction
         self.slot_count: Dict[Tuple[str, int], int] = {}
@@ -549,7 +584,8 @@ class CoalescingOrchestrator:
     # ---- submission ----
     def submit(self, request, m: int, kind: Optional[str] = None,
                dedup_token: Optional[Hashable] = None,
-               deadline: Optional[float] = None):
+               deadline: Optional[float] = None,
+               tier: Optional[str] = None):
         """Non-blocking: split into chunks, enqueue each onto its
         (kind, bucket) coalescing queue; returns a lazy future gathering the
         chunk rows.  ``dedup_token``, when given, is a stable identity for
@@ -557,7 +593,8 @@ class CoalescingOrchestrator:
         docstring); ``deadline`` is an absolute ``time.perf_counter``
         instant the request's dispatch should start by — chunks carrying
         one pop earliest-deadline-first and flush early when the cost model
-        says waiting longer would miss it."""
+        says waiting longer would miss it.  ``tier`` (SLO tier name) scales
+        the flush window per ``CoalescePolicy.tier_windows``."""
         if kind is None:
             kind = next(iter(self.families))
         plan = split_request(m, self.families[kind])
@@ -574,7 +611,8 @@ class CoalescingOrchestrator:
                 heapq.heappush(
                     self._pending[(kind, c.bucket)],
                     _PendingChunk(args, f, dedup_token, valid=c.valid,
-                                  deadline=deadline, remaining=m - c.start))
+                                  deadline=deadline, remaining=m - c.start,
+                                  tier=tier))
                 cond.notify()
 
         def resolve():
@@ -585,8 +623,16 @@ class CoalescingOrchestrator:
 
     def score(self, request, m: int, kind: Optional[str] = None,
               dedup_token: Optional[Hashable] = None,
-              deadline: Optional[float] = None):
-        return self.submit(request, m, kind, dedup_token, deadline).result()
+              deadline: Optional[float] = None,
+              tier: Optional[str] = None):
+        return self.submit(request, m, kind, dedup_token, deadline,
+                           tier).result()
+
+    def set_window_override(self, window_s: Optional[float]):
+        """Degradation hook: cap the effective flush window at ``window_s``
+        (0.0 == flush immediately); ``None`` restores the policy window."""
+        with self._stat_lock:
+            self._window_override = window_s
 
     # ---- dispatcher ----
     @staticmethod
@@ -595,20 +641,25 @@ class CoalescingOrchestrator:
             else tuple(id(a) for a in c.args[:n_lead])
 
     def _collect(self, kind: str, bucket: int,
-                 pending: List[_PendingChunk], cond: threading.Condition
-                 ) -> Tuple[List[_PendingChunk], Optional[SegmentPacker]]:
-        """Pop the first chunk and keep collecting co-riders (caller holds
-        ``cond``).  The flush decision is deadline/cost-aware: with no
-        deadlines in the collected set this is the v1 window policy (the
-        window opens when collection starts, not at enqueue — a chunk that
-        already sat in the queue past ``window_s`` would otherwise always
-        dispatch solo); once any collected chunk carries a deadline, the
-        wait is additionally capped at ``earliest_deadline - est_cost``."""
+                 pending: List[_PendingChunk], cond: threading.Condition,
+                 batch: List[_PendingChunk]) -> Optional[SegmentPacker]:
+        """Pop the first chunk and keep collecting co-riders into the
+        CALLER-OWNED ``batch`` list (caller holds ``cond``; filling the
+        caller's list means a mid-collect exception can never strand the
+        already-popped chunks — the worker fails exactly what was taken).
+        The flush decision is deadline/cost-aware: with no deadlines in the
+        collected set this is the v1 window policy (the window opens when
+        collection starts, not at enqueue — a chunk that already sat in the
+        queue past ``window_s`` would otherwise always dispatch solo); once
+        any collected chunk carries a deadline, the wait is additionally
+        capped at ``earliest_deadline - est_cost``.  The window itself is
+        scaled by the minimum SLO-tier scale of the collected chunks
+        (``CoalescePolicy.tier_windows``) and capped by the degradation
+        override (``set_window_override``)."""
         pol = self.policy
         n_lead = self._packed.get(kind)
         packer = SegmentPacker(bucket, pol.rows, pol.batch) \
             if n_lead is not None else None
-        batch: List[_PendingChunk] = []
 
         def take() -> bool:
             """Place the earliest-deadline pending chunk that FITS this
@@ -639,7 +690,11 @@ class CoalescingOrchestrator:
         took = take()
         assert took, "first chunk must always fit an empty dispatch"
         if pol.enabled and (pol.max_batch > 1 or packer is not None):
-            window_end = time.perf_counter() + pol.window_s
+            with self._stat_lock:
+                override = self._window_override
+            base_window = pol.window_s if override is None \
+                else min(pol.window_s, override)
+            t_open = time.perf_counter()
             while not self._stop:
                 full = packer.is_full() if packer is not None \
                     else len(batch) >= pol.max_batch
@@ -659,7 +714,8 @@ class CoalescingOrchestrator:
                     # through the take() loop above without ever waiting.
                     break
                 now = time.perf_counter()
-                target = window_end
+                scale = min(pol.tier_scale(c.tier) for c in batch)
+                target = t_open + base_window * scale
                 dls = [c.deadline for c in batch if c.deadline is not None]
                 if dls:
                     with self._stat_lock:
@@ -674,19 +730,31 @@ class CoalescingOrchestrator:
         with self._stat_lock:
             self.queue_delay_total_s += delay
             self.queue_delay_count += len(batch)
-        return batch, packer
+        return packer
 
     def _worker(self, kind: str, bucket: int, ex: Executor):
         key = (kind, bucket)
         cond, pending = (self._cond[key], self._pending[key]
                          )  # flamecheck: unguarded-ok(dicts frozen after __init__; the heap is only touched under cond)
         while True:
+            batch: List[_PendingChunk] = []
             with cond:
                 while not pending and not self._stop:
                     cond.wait()
                 if not pending and self._stop:
                     return
-                batch, packer = self._collect(kind, bucket, pending, cond)
+                try:
+                    packer = self._collect(kind, bucket, pending, cond,
+                                           batch)
+                except BaseException as e:  # noqa: BLE001 — never strand
+                    # a mid-collect failure (e.g. a poisoned packer state)
+                    # must fail exactly the chunks already popped off the
+                    # heap and keep the stream thread alive; anything still
+                    # pending stays queued for the next round
+                    for c in batch:
+                        if not c.future.done():
+                            c.future.set_exception(e)
+                    continue
             if packer is not None:
                 self._dispatch_packed(kind, bucket, ex, batch, packer)
             else:
@@ -705,7 +773,7 @@ class CoalescingOrchestrator:
 
     def _note_dispatch(self, kind: str, bucket: int, n_chunks: int,
                        rows_used: int, valid: int, saved: int,
-                       cost_s: float, packed: bool):
+                       cost_s: float, packed: bool, missed: int = 0):
         key = (kind, bucket)
         with self._stat_lock:
             self.dispatch_count += 1
@@ -714,12 +782,20 @@ class CoalescingOrchestrator:
             self.dedup_rows_saved += saved
             self.slot_count[key] += rows_used * bucket
             self.valid_count[key] += valid
+            self.deadline_miss_chunks[kind] += missed
             if packed:
                 self.packed_rows += rows_used
                 self.packed_segments += n_chunks
             old = self._cost.get(key)
             self._cost[key] = cost_s if old is None else \
                 (1 - self._COST_EWMA) * old + self._COST_EWMA * cost_s
+
+    @staticmethod
+    def _count_missed(batch: List[_PendingChunk]) -> int:
+        """Chunks whose dispatch completed past their absolute deadline."""
+        now = time.perf_counter()
+        return sum(1 for c in batch
+                   if c.deadline is not None and now > c.deadline)
 
     def _run_executor(self, ex: Executor, stacked) -> Tuple[object, float]:  # flamecheck: host-sync-ok(dispatch boundary: the wait must happen inside the timed region — and inside the dispatch lock when executables are multi-device)
         """Launch + wait, timed; serialized under the dispatch lock when the
@@ -734,6 +810,30 @@ class CoalescingOrchestrator:
         out = ex(*stacked)
         jax.block_until_ready(out)
         return out, time.perf_counter() - t0
+
+    def _run_attempts(self, kind: str, bucket: int, ex: Executor, stacked
+                      ) -> Tuple[object, float]:
+        """Fault-tolerant executor run: fire the chaos hook, then the
+        executor; an exception with a truthy ``.transient`` attribute (the
+        :class:`serving.faults.FaultInjected` contract — real transient
+        infra errors can adopt it) retries with exponential backoff up to
+        ``dispatch_retries`` times.  Anything else — or an exhausted
+        budget — propagates to the caller, which fails every rider's
+        future with the ORIGINAL traceback."""
+        attempt = 0
+        while True:
+            try:
+                if self._fault_hook is not None:
+                    self._fault_hook(kind, bucket)
+                return self._run_executor(ex, stacked)
+            except BaseException as e:  # noqa: BLE001 — classified below
+                if not getattr(e, "transient", False) \
+                        or attempt >= self._dispatch_retries:
+                    raise
+                attempt += 1
+                with self._stat_lock:
+                    self.dispatch_retry_count += 1
+                time.sleep(self._retry_backoff_s * (2 ** (attempt - 1)))
 
     def _dispatch(self, kind: str, bucket: int, ex: Executor,
                   batch: List[_PendingChunk]
@@ -769,18 +869,21 @@ class CoalescingOrchestrator:
                 rests = [c.args for c in batch]
             for j in range(len(rests[0])):
                 stacked.append(self._stack_rows([r[j] for r in rests], B))
-            out, dt = self._run_executor(ex, stacked)
+            out, dt = self._run_attempts(kind, bucket, ex, stacked)
             if kind in self._device_output:
                 host = out        # stays device-resident (pool entries)
             else:
                 host = jax.tree.map(np.asarray, out)   # pytree outputs OK
             self._note_dispatch(kind, bucket, n, rows_used=n,
                                 valid=sum(c.valid for c in batch),
-                                saved=n - n_uniq, cost_s=dt, packed=False)
+                                saved=n - n_uniq, cost_s=dt, packed=False,
+                                missed=self._count_missed(batch))
             for i, c in enumerate(batch):
                 c.future.set_result(
                     jax.tree.map(lambda a: a[i:i + 1], host))
         except BaseException as e:  # noqa: BLE001 — fail every rider
+            with self._stat_lock:
+                self.dispatch_failure_count += 1
             for c in batch:
                 if not c.future.done():
                     c.future.set_exception(e)
@@ -811,16 +914,19 @@ class CoalescingOrchestrator:
                 cands[row, off:off + c.valid] = np.asarray(c.args[n_lead])[0]
                 seg_idx[row, off:off + c.valid] = slot
             stacked += [seg_idx, cands]
-            out, dt = self._run_executor(ex, stacked)
+            out, dt = self._run_attempts(kind, bucket, ex, stacked)
             host = jax.tree.map(np.asarray, out)
             self._note_dispatch(kind, bucket, n, rows_used=packer.n_rows,
                                 valid=sum(c.valid for c in batch),
                                 saved=n - packer.n_slots, cost_s=dt,
-                                packed=True)
+                                packed=True,
+                                missed=self._count_missed(batch))
             for c, (row, off, _) in zip(batch, packer.placements):
                 c.future.set_result(jax.tree.map(
                     lambda a: a[row:row + 1, off:off + c.valid], host))
         except BaseException as e:  # noqa: BLE001 — fail every rider
+            with self._stat_lock:
+                self.dispatch_failure_count += 1
             for c in batch:
                 if not c.future.done():
                     c.future.set_exception(e)
@@ -845,11 +951,17 @@ class CoalescingOrchestrator:
                 "padded_fraction": 1.0 - valid / slots if slots else 0.0,
                 "queue_delay_ms": (1e3 * self.queue_delay_total_s
                                    / max(self.queue_delay_count, 1)),
+                "dispatch_retries": self.dispatch_retry_count,
+                "dispatch_failures": self.dispatch_failure_count,
+                "deadline_miss_chunks": sum(
+                    self.deadline_miss_chunks.values()),
             }
             if not self._legacy:
                 for kind in self.families:
                     out[f"chunks_{kind}"] = self.kind_chunks[kind]
                     out[f"dispatches_{kind}"] = self.kind_dispatches[kind]
+                    out[f"deadline_miss_chunks_{kind}"] = \
+                        self.deadline_miss_chunks[kind]
                     out[f"cand_slots_{kind}"] = sum(
                         s for (k, _), s in self.slot_count.items()
                         if k == kind)

@@ -26,7 +26,8 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.models import build_model
 from repro.serving import ServeRequest, available_engines, create_engine
-from repro.serving.api import BeamConfig, TopKConfig
+from repro.serving.api import BeamConfig, DegradationPolicy, TopKConfig
+from repro.serving.faults import FaultInjector
 from repro.serving.scheduler import (TrafficConfig, generate_traffic,
                                      run_workload_async)
 from repro.training import checkpoint
@@ -37,6 +38,18 @@ def _print_metrics(tag: str, m: dict):
     print(f"[serve] {tag}: " + ", ".join(
         f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
         for k, v in sorted(m.items())))
+
+
+def _parse_kv_floats(spec: str, what: str) -> dict:
+    """Parse ``name=value,name=value`` CLI maps (tier deadlines, mixes)."""
+    out = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        if "=" not in part:
+            raise SystemExit(f"[serve] bad {what} entry {part!r} "
+                             f"(want name=value)")
+        k, v = part.split("=", 1)
+        out[k.strip()] = float(v)
+    return out
 
 
 def serve_text(args):
@@ -107,6 +120,22 @@ def serve_rec(args):
                   pack_tails=args.pack_tails,
                   pack_rows=args.pack_rows if args.pack_rows > 0 else None,
                   deadline_s=args.deadline_ms * 1e-3)
+        # ---- overload discipline / fault tolerance (ISSUE 9) ----
+        tier_defaults = None
+        if args.slo_tier_defaults.strip():
+            tier_defaults = {k: v * 1e-3 for k, v in _parse_kv_floats(
+                args.slo_tier_defaults, "--slo-tier-defaults").items()}
+        degradation = None
+        if args.degrade > 0:
+            degradation = DegradationPolicy(threshold_s=args.degrade * 1e-3)
+        faults = None
+        if args.fault_spec.strip():
+            faults = FaultInjector.parse(args.fault_spec,
+                                         seed=args.fault_seed)
+        kw.update(admission=args.admission, shed_policy=args.shed_policy,
+                  slo_tier_defaults=tier_defaults,
+                  watchdog_grace_s=args.watchdog_grace_ms * 1e-3,
+                  degradation=degradation, faults=faults)
         if gen_mode != "none":
             kw.update(generate=args.gen_steps, gen_vocab=args.gen_vocab)
     else:
@@ -132,10 +161,13 @@ def serve_rec(args):
                   f"placement {args.pool_placement}, incremental="
                   f"{'on' if args.incremental_history else 'off'}")
 
+    tier_mix = _parse_kv_floats(args.slo_mix, "--slo-mix") \
+        if args.slo_mix.strip() else None
     tc = TrafficConfig(
         candidate_counts=tuple(int(c) for c in args.counts.split(",")),
         distribution=args.distribution, n_requests=args.requests,
-        n_history=args.history, seed=0, n_users=args.users)
+        n_history=args.history, seed=0, n_users=args.users,
+        tier_mix=tier_mix)
     reqs = generate_traffic(tc, n_items=cfg.vocab_size)
     if gen_mode != "none":
         # generative decode: the traffic's ragged candidate slates become
@@ -150,12 +182,27 @@ def serve_rec(args):
         print(f"[serve] generative decode: {gen_mode} width "
               f"{args.beam_width} x {args.gen_steps} steps, per-request "
               f"token universes from the candidate slates")
-    res = run_workload_async(eng, reqs, arrival_gap_s=args.arrival_gap_ms * 1e-3)
+    # chaos / overload runs tolerate rejections and injected failures —
+    # the liveness contract they DO assert is zero hung futures: every
+    # submitted request resolves, errors included, inside the timeout
+    chaos = args.engine == "flame" and (bool(args.fault_spec.strip())
+                                        or args.shed_policy != "none")
+    res = run_workload_async(eng, reqs,
+                             arrival_gap_s=args.arrival_gap_ms * 1e-3,
+                             tolerate_errors=chaos)
     unit = "gen tokens/s" if gen_mode != "none" else "items/s"
     print(f"[serve] {res['requests']} requests | "
           f"{res['throughput_items_per_s']:.0f} {unit} | "
           f"p50 {res['p50_latency_ms']:.1f} ms | "
           f"p99 {res['p99_latency_ms']:.1f} ms")
+    if chaos:
+        print(f"[serve] overload/chaos accounting: "
+              f"resolved={res['resolved']} rejected={res['rejected']} "
+              f"failed={res['failed']} hung={res['hung']}")
+        if res["hung"]:
+            _print_metrics("engine metrics", eng.metrics())
+            raise SystemExit(f"[serve] LIVENESS VIOLATION: {res['hung']} "
+                             f"future(s) never resolved")
     if gen_mode != "none":
         for i, out in enumerate(res["outputs"][:3]):
             best = [t for t in out[0].tolist() if t >= 0]
@@ -239,6 +286,45 @@ def main():
                          "model says waiting longer would miss the "
                          "earliest deadline (0 = no deadlines; misses "
                          "surface as the deadline_misses metric)")
+    ap.add_argument("--admission", default="edf", choices=["edf", "fifo"],
+                    help="admission queue order: edf serves earliest "
+                         "absolute deadline first (ties: better SLO tier, "
+                         "then arrival); fifo is the arrival-order baseline")
+    ap.add_argument("--slo-tier-defaults", default="",
+                    help="per-tier default deadline budgets in ms, e.g. "
+                         "'interactive=50,standard=250,bulk=2000'; applied "
+                         "when a request carries no explicit deadline "
+                         "(empty = only --deadline-ms applies)")
+    ap.add_argument("--shed-policy", default="none",
+                    choices=["none", "tiered"],
+                    help="tiered: when the queue is at depth or the "
+                         "EWMA-predicted wait blows an arrival's budget, "
+                         "fail the worst lower-priority queued request "
+                         "(ShedError, shed_{tier} counters) instead of "
+                         "blocking everyone")
+    ap.add_argument("--degrade", type=float, default=0.0,
+                    help="graceful-degradation queue-delay threshold in ms "
+                         "(0 = off): a sustained delay EWMA above it steps "
+                         "the service level down — 1: flush coalescing "
+                         "windows immediately, 2: + bulk generation at "
+                         "half width/steps, 3: + bulk encodes become "
+                         "cached-hit-or-shed; recovery reverses the steps")
+    ap.add_argument("--slo-mix", default="",
+                    help="traffic tier mix as weights, e.g. "
+                         "'interactive=0.2,standard=0.5,bulk=0.3' "
+                         "(empty = all standard)")
+    ap.add_argument("--watchdog-grace-ms", type=float, default=0.0,
+                    help="fail any future still unresolved this long past "
+                         "its deadline with WatchdogTimeout (0 = no "
+                         "watchdog); the liveness backstop under faults")
+    ap.add_argument("--fault-spec", default="",
+                    help="chaos injection arms, e.g. "
+                         "'dispatch:0.2,stall:0.1:0.02,evict:0.1' "
+                         "(see repro.serving.faults); deterministic per "
+                         "--fault-seed.  The launcher then tolerates "
+                         "failures but exits non-zero if any future hangs")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="PRNG seed for --fault-spec arms")
     ap.add_argument("--generate", default="none",
                     choices=["none", "topk", "beam"],
                     help="generative candidate decode (needs "

@@ -31,6 +31,29 @@ _REQUEST_IDS = itertools.count()
 
 
 # ---------------------------------------------------------------------------
+# SLO tiers
+# ---------------------------------------------------------------------------
+
+#: Service tiers, best-first.  ``interactive`` is user-facing traffic with a
+#: tight budget, ``standard`` is the default, ``bulk`` is background re-rank
+#: work that tolerates queueing.  Under overload the engine sheds/degrades
+#: bulk first and interactive last (see ``engine._AdmissionQueue``).
+SLO_TIERS = ("interactive", "standard", "bulk")
+
+#: Tier -> shed/EDF priority rank (lower = more protected).
+TIER_RANK = {t: i for i, t in enumerate(SLO_TIERS)}
+
+#: Tier -> default ``deadline_s`` applied by tier-aware engines when a
+#: request carries no explicit deadline (engine-overridable via the
+#: ``slo_tier_defaults`` knob / ``--slo-tier-defaults`` CLI flag).
+DEFAULT_TIER_DEADLINES = {
+    "interactive": 0.05,
+    "standard": 0.25,
+    "bulk": 2.0,
+}
+
+
+# ---------------------------------------------------------------------------
 # value types
 # ---------------------------------------------------------------------------
 
@@ -73,6 +96,12 @@ class ServeRequest:
     queues earliest-deadline-first against it and count overruns in the
     ``deadline_misses`` metric; ``None`` defers to the engine's default
     budget (which may be "no deadline").
+
+    ``slo_tier`` (one of :data:`SLO_TIERS`) places the request on a service
+    tier: tier-aware engines derive a default deadline from it (when
+    ``deadline_s`` is None), order EDF admission ties by tier, shed
+    lowest-tier work first under overload, and degrade bulk-tier service
+    first under sustained pressure.
     """
 
     history: np.ndarray
@@ -86,6 +115,7 @@ class ServeRequest:
     generate: Optional[object] = None
     user_id: Optional[int] = None
     deadline_s: Optional[float] = None
+    slo_tier: str = "standard"
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     arrival_t: float = dataclasses.field(default_factory=time.perf_counter)
@@ -140,16 +170,43 @@ class ResponseFuture:
         self._f.set_exception(exc)
 
 
-class AdmissionQueueFull(RuntimeError):
+class RejectedError(RuntimeError):
+    """Base of every admission-side rejection (overload discipline): the
+    engine refused to spend compute on the request.  Callers that tolerate
+    shedding catch this one type; the concrete subclasses say why."""
+
+
+class AdmissionQueueFull(RejectedError):
     """Raised by ``submit`` when the bounded admission queue stays full past
     the caller's timeout (the backpressure signal)."""
 
 
-class DeadlineExceeded(RuntimeError):
+class DeadlineExceeded(RejectedError):
     """Raised by ``submit`` when the request's deadline budget has already
     passed at admission time (counted in the ``deadline_shed`` metric):
     executing it would burn an executor slot on a guaranteed miss, so
     deadline-aware engines shed it instead."""
+
+
+class ShedError(RejectedError):
+    """The overloaded engine dropped this request to protect higher-tier /
+    earlier-deadline work (counted per tier in ``shed_{tier}``).  Raised
+    from ``submit`` when the incoming request itself is the lowest-priority
+    work in sight, or delivered through a queued victim's
+    :class:`ResponseFuture` when a higher-priority arrival displaced it."""
+
+
+class DegradedError(RejectedError):
+    """A degraded engine (level >= 3) refused the expensive path for a
+    bulk-tier request — pool re-encode fell back to cached-hit-or-shed and
+    the pool had no fresh entry.  Delivered through the request's future."""
+
+
+class WatchdogTimeout(RuntimeError):
+    """The engine watchdog failed this future ``grace`` seconds past its
+    deadline without a response — the no-request-ever-hangs backstop for
+    wedged workers / lost dispatches.  Not a :class:`RejectedError`: the
+    request was admitted, then lost to a fault."""
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +271,79 @@ class ServeMetrics:
                 **self.gauges,
                 **self.counters,
             }
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+class DegradationPolicy:
+    """Steps service down under sustained pressure instead of failing.
+
+    Pipeline workers feed every request's queue delay into ``observe``; the
+    policy keeps an EWMA and walks a ladder of degradation levels with
+    hysteresis (a dwell time between steps, and a lower recovery threshold
+    so the level is reversible without flapping):
+
+      level 0  full service
+      level 1  flush immediately — coalescing/tail-packing windows collapse
+               to zero, trading batch fill for latency
+      level 2  + bulk-tier generation shrinks (beam width and gen steps
+               halve), bounding worst-case work per bulk request
+      level 3  + bulk-tier history encode falls back to cached-hit-or-shed
+               (pool miss => DegradedError instead of an encode dispatch)
+
+    Engines surface the current level as the ``degrade_level`` gauge and
+    count transitions in ``degrade_steps``.  Thread-safe; ``observe`` is
+    called from every worker."""
+
+    MAX_LEVEL = 3
+
+    def __init__(self, threshold_s: float = 0.05, *,
+                 recover_s: Optional[float] = None, alpha: float = 0.3,
+                 max_level: int = MAX_LEVEL, dwell_s: float = 0.25):
+        if threshold_s <= 0:
+            raise ValueError(f"threshold_s must be > 0, got {threshold_s}")
+        self.threshold_s = float(threshold_s)
+        self.recover_s = float(recover_s if recover_s is not None
+                               else threshold_s * 0.5)
+        self.alpha = float(alpha)
+        self.max_level = int(max_level)
+        self.dwell_s = float(dwell_s)
+        self._lock = threading.Lock()
+        self._ewma: Optional[float] = None
+        self._level = 0
+        self._last_step_t: Optional[float] = None
+
+    @property
+    def level(self) -> int:
+        with self._lock:
+            return self._level
+
+    @property
+    def ewma_s(self) -> float:
+        with self._lock:
+            return self._ewma or 0.0
+
+    def observe(self, delay_s: float, now: Optional[float] = None) -> int:
+        """Fold one queue-delay sample in; returns the (possibly stepped)
+        level.  Steps are rate-limited to one per ``dwell_s`` so a single
+        burst doesn't slam the ladder to the floor."""
+        if now is None:
+            now = time.perf_counter()
+        with self._lock:
+            self._ewma = delay_s if self._ewma is None else \
+                self.alpha * delay_s + (1.0 - self.alpha) * self._ewma
+            dwelled = (self._last_step_t is None
+                       or now - self._last_step_t >= self.dwell_s)
+            if dwelled and self._ewma > self.threshold_s \
+                    and self._level < self.max_level:
+                self._level += 1
+                self._last_step_t = now
+            elif dwelled and self._ewma < self.recover_s and self._level > 0:
+                self._level -= 1
+                self._last_step_t = now
+            return self._level
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
+import itertools
+import math
 import queue
 import threading
 import time
@@ -65,41 +68,228 @@ from repro.core import dso as DSO
 from repro.core import pda as PDA
 from repro.core.climber import N_SIDE_FEATURES
 from repro.models.model import ModelBundle
-from repro.serving.api import (AdmissionQueueFull, DeadlineExceeded,
+from repro.serving.api import (SLO_TIERS, TIER_RANK, AdmissionQueueFull,
+                               DeadlineExceeded, DegradedError,
                                ResponseFuture, ServeMetrics, ServeRequest,
-                               ServeResponse, register_engine)
+                               ServeResponse, ShedError, WatchdogTimeout,
+                               register_engine)
 from repro.kernels.fused_score.ops import packed_reroute_count
 from repro.serving.kv_cache import (HistoryKVPool, KVCacheManager,
                                     quantize_kv, raw_kv_specs, raw_kv_view)
 
 _STOP = object()
 
+#: per-tier flush-window multipliers handed to ``CoalescePolicy``: an
+#: interactive chunk flushes almost immediately, bulk may wait past the
+#: default window for better packing.  Tier-less chunks (and "standard")
+#: keep scale 1.0, so tier-agnostic callers see the v1 window exactly.
+_TIER_WINDOW_SCALE = {"interactive": 0.25, "standard": 1.0, "bulk": 2.0}
 
-def _try_fail(fut: ResponseFuture, exc: BaseException):
+#: service-time EWMA smoothing for admission-time wait prediction
+_SERVICE_EWMA = 0.3
+
+
+def _try_fail(fut: ResponseFuture, exc: BaseException) -> bool:
     """Best-effort set_exception: the future may have been resolved by a
-    worker in the same race window."""
+    worker in the same race window.  Returns True when the exception was
+    actually delivered (callers count sheds/timeouts only on delivery)."""
     try:
         fut.set_exception(exc)
+        return True
     except Exception:  # InvalidStateError — already resolved, fine
-        pass
+        return False
+
+
+class _AdmissionRecord:
+    """One queued submission: the priority key, the request's future, its
+    submit timestamp, and the SLO/deadline facts shedding decisions read."""
+
+    __slots__ = ("key", "fut", "t_submit", "tier", "deadline_abs", "shed")
+
+    def __init__(self, key: tuple, fut: ResponseFuture, t_submit: float,
+                 tier: str, deadline_abs: Optional[float]):
+        self.key = key
+        self.fut = fut
+        self.t_submit = t_submit
+        self.tier = tier
+        self.deadline_abs = deadline_abs
+        self.shed = False              # lazy-deletion marker (see shed_victim)
+
+
+class _AdmissionQueue:
+    """Bounded deadline-ordered (EDF) admission queue with tiered shedding.
+
+    Replaces the FIFO ``queue.Queue`` of PR 1: records pop in priority-key
+    order — ``(absolute deadline | inf, tier rank, seq)`` under ``edf``
+    (deadline-less work sorts last, ties break best-tier-first then FIFO),
+    or pure arrival order under ``fifo`` (the A/B baseline the overload
+    bench gates against).
+
+    One mutex guards the heap, with two condition variables over it
+    (``not_empty`` for workers, ``not_full`` for blocked submitters) so a
+    completed get wakes exactly a submitter and a put wakes exactly a
+    worker.  Shedding removes a queued victim *lazily*: ``shed_victim``
+    marks the worst strictly-lower-priority record and frees its capacity
+    slot; ``get`` skips marked records when they surface at the heap root.
+
+    ``close()`` is the stop signal: getters return ``None`` immediately
+    (they do NOT drain — shutdown must not wait out a deep queue) and
+    blocked putters raise; ``drain()`` then hands shutdown the leftovers
+    to fail."""
+
+    def __init__(self, maxsize: int, mode: str = "edf"):
+        if mode not in ("edf", "fifo"):
+            raise ValueError(f"admission mode must be edf|fifo, got {mode!r}")
+        self.maxsize = maxsize
+        self.mode = mode
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._heap: List[Tuple[tuple, _AdmissionRecord]] = []
+        self._seq = itertools.count()
+        self._live = 0                 # unshed records (capacity accounting)
+        self._closed = False
+
+    def key_for(self, deadline_abs: Optional[float], tier: str) -> tuple:
+        """Priority key for one submission (smaller = served sooner)."""
+        if self.mode == "fifo":
+            return (next(self._seq),)
+        return (deadline_abs if deadline_abs is not None else math.inf,
+                TIER_RANK.get(tier, 1), next(self._seq))
+
+    def put(self, rec: _AdmissionRecord, timeout: Optional[float] = None):
+        """Enqueue; blocks while at capacity (``timeout=0`` = non-blocking).
+        Raises ``queue.Full`` past the timeout and ``RuntimeError`` when
+        closed."""
+        with self._not_full:
+            if timeout == 0:
+                if self._live >= self.maxsize and not self._closed:
+                    raise queue.Full
+            else:
+                end = None if timeout is None \
+                    else time.perf_counter() + timeout
+                while self._live >= self.maxsize and not self._closed:
+                    left = None if end is None else end - time.perf_counter()
+                    if left is not None and left <= 0:
+                        raise queue.Full
+                    self._not_full.wait(timeout=left)
+            if self._closed:
+                raise RuntimeError("admission queue closed")
+            heapq.heappush(self._heap, (rec.key, rec))
+            self._live += 1
+            self._not_empty.notify()
+
+    def get(self) -> Optional[_AdmissionRecord]:
+        """Pop the best live record (blocking); ``None`` once closed — the
+        worker stop signal (leftovers are failed by ``drain``, not served)."""
+        with self._not_empty:
+            while True:
+                while self._heap and self._heap[0][1].shed:
+                    heapq.heappop(self._heap)      # lazy-deleted victims
+                if self._closed:
+                    return None
+                if self._heap:
+                    _, rec = heapq.heappop(self._heap)
+                    self._live -= 1
+                    self._not_full.notify()
+                    return rec
+                self._not_empty.wait()
+
+    def shed_victim(self, key: tuple
+                    ) -> Optional[_AdmissionRecord]:
+        """Remove and return the WORST queued record strictly lower-priority
+        than ``key`` (latest deadline, lowest tier), or ``None`` when
+        everything queued outranks the caller.  O(n) scan — the queue is
+        admission-bounded, and shedding only runs under overload."""
+        with self._lock:
+            worst: Optional[_AdmissionRecord] = None
+            for _, rec in self._heap:
+                if not rec.shed and rec.key > key \
+                        and (worst is None or rec.key > worst.key):
+                    worst = rec
+            if worst is None:
+                return None
+            worst.shed = True
+            self._live -= 1
+            self._not_full.notify()
+            return worst
+
+    def qsize(self) -> int:
+        with self._lock:
+            return self._live
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    def drain(self) -> List[_AdmissionRecord]:
+        """Pop every remaining live record (shutdown fails them)."""
+        with self._lock:
+            out = [rec for _, rec in self._heap if not rec.shed]
+            self._heap.clear()
+            self._live = 0
+            return out
 
 
 class _PipelinedEngine:
     """API v2 pipeline scaffolding shared by all engines.
 
-    ``submit`` admits into a bounded queue (blocking when full is the
-    backpressure signal; a timeout raises :class:`AdmissionQueueFull`);
-    ``n_workers`` threads drain it and run the engine-specific ``_execute``.
-    Subclasses must finish their own setup *before* calling ``__init__``
-    here — workers start immediately."""
+    ``submit`` admits into a bounded deadline-ordered queue (blocking when
+    full is the backpressure signal; a timeout raises
+    :class:`AdmissionQueueFull`); ``n_workers`` threads drain it in EDF
+    order and run the engine-specific ``_execute``.  Subclasses must finish
+    their own setup *before* calling ``__init__`` here — workers start
+    immediately.
+
+    Overload discipline (all off by default — v1 semantics preserved):
+
+    * ``admission="fifo"`` reverts to arrival-order service (A/B baseline).
+    * ``slo_tier_defaults`` maps tier → default deadline seconds, used when
+      a request carries no explicit ``deadline_s`` (falls back to the
+      engine-wide default for unlisted tiers).
+    * ``shed_policy="tiered"`` enables admission-time load shedding: when
+      the queue is at depth or the EWMA-predicted wait blows the incoming
+      request's budget, the worst strictly-lower-priority queued victim is
+      failed with :class:`ShedError` (or the incoming request itself when
+      nothing queued ranks below it).
+    * ``watchdog_grace_s > 0`` starts a watchdog thread that fails any
+      future still unresolved ``grace`` past its deadline with
+      :class:`WatchdogTimeout` — under fault injection no request ever
+      hangs.
+    * ``degradation`` (a :class:`DegradationPolicy`) observes queue delay
+      from the workers; level transitions invoke the ``_on_degrade`` hook.
+    * ``faults`` (a :class:`FaultInjector`) arms the worker-stall hook here
+      (subclasses wire its dispatch/pool arms)."""
 
     def __init__(self, *, max_pending: int = 64, n_workers: int = 4,
-                 name: str = "engine"):
+                 name: str = "engine", admission: str = "edf",
+                 shed_policy: str = "none",
+                 slo_tier_defaults: Optional[Dict[str, float]] = None,
+                 watchdog_grace_s: float = 0.0,
+                 degradation=None, faults=None):
         # engine-default deadline budget (seconds; 0 = none): subclasses
         # that support deadlines set it BEFORE calling __init__ here
         self._deadline_s = getattr(self, "_deadline_s", 0.0)
+        if shed_policy not in ("none", "tiered"):
+            raise ValueError(
+                f"shed_policy must be none|tiered, got {shed_policy!r}")
+        if slo_tier_defaults is not None:
+            bad = set(slo_tier_defaults) - set(SLO_TIERS)
+            if bad:
+                raise ValueError(f"unknown SLO tiers in defaults: {bad}")
         self._metrics = ServeMetrics()
-        self._admission: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._admission = _AdmissionQueue(max_pending, mode=admission)
+        self._shed = shed_policy == "tiered"
+        self._tier_defaults = dict(slo_tier_defaults) \
+            if slo_tier_defaults else None
+        self._degradation = degradation
+        self._degrade_applied = 0
+        self._faults = faults
+        self._ewma_lock = threading.Lock()
+        self._service_ewma_s: Optional[float] = None
+        self._n_workers = max(int(n_workers), 1)
         self._open = True
         self._workers: List[threading.Thread] = []
         for i in range(n_workers):
@@ -107,6 +297,16 @@ class _PipelinedEngine:
                                   name=f"{name}-worker-{i}", daemon=True)
             th.start()
             self._workers.append(th)
+        self._watchdog_grace_s = float(watchdog_grace_s)
+        self._watchdog_stop = threading.Event()
+        self._watchdog_lock = threading.Lock()
+        self._watchdog_futs: Dict[int, Tuple[ResponseFuture, float]] = {}
+        self._watchdog_th: Optional[threading.Thread] = None
+        if self._watchdog_grace_s > 0:
+            th = threading.Thread(target=self._watchdog_loop,
+                                  name=f"{name}-watchdog", daemon=True)
+            th.start()
+            self._watchdog_th = th
 
     # ---- engine-specific hooks ----
     def _execute(self, request: ServeRequest
@@ -124,12 +324,61 @@ class _PipelinedEngine:
         """Engine-specific teardown after the workers have drained."""
 
     # ---- ServingEngine protocol ----
+    def _effective_deadline(self, req: ServeRequest) -> float:
+        """Deadline budget (seconds, 0 = none): explicit ``deadline_s``
+        wins, then the engine's per-tier default, then the global one."""
+        if req.deadline_s is not None:
+            return req.deadline_s
+        tier = getattr(req, "slo_tier", "standard")
+        if self._tier_defaults is not None and tier in self._tier_defaults:
+            return self._tier_defaults[tier]
+        return self._deadline_s
+
+    def _predicted_wait_s(self, depth: int) -> float:
+        """EWMA service-time estimate of queue wait at the given depth."""
+        with self._ewma_lock:
+            s = self._service_ewma_s
+        return 0.0 if s is None else depth * s / self._n_workers
+
+    def _shed_for(self, rec: _AdmissionRecord):
+        """Tiered admission-time shedding: under overload (queue at depth,
+        or predicted wait past the incoming budget) drop the lowest-value
+        work in sight — a strictly worse queued victim if one exists, else
+        the incoming request itself (raises :class:`ShedError`)."""
+        depth = self._admission.qsize()
+        overloaded = depth >= self._admission.maxsize
+        if not overloaded and rec.deadline_abs is not None:
+            wait = self._predicted_wait_s(depth)
+            overloaded = time.perf_counter() + wait > rec.deadline_abs
+        if not overloaded:
+            return
+        victim = self._admission.shed_victim(rec.key)
+        if victim is not None:
+            if _try_fail(victim.fut, ShedError(
+                    f"request {victim.fut.request.request_id} "
+                    f"({victim.tier}) shed: displaced by a higher-priority "
+                    f"arrival under overload")):
+                self._metrics.incr(f"shed_{victim.tier}")
+                self._metrics.incr("shed_total")
+            return
+        # nothing queued ranks below the incoming request: it IS the
+        # lowest-value work — shed it before it burns a queue slot
+        self._metrics.incr(f"shed_{rec.tier}")
+        self._metrics.incr("shed_total")
+        raise ShedError(
+            f"request {rec.fut.request.request_id} ({rec.tier}) shed at "
+            f"admission: queue overloaded and no lower-priority victim")
+
     def submit(self, request: ServeRequest, *,
                timeout: Optional[float] = None) -> ResponseFuture:
         if not self._open:
             raise RuntimeError("engine is shut down")
-        dl = request.deadline_s if request.deadline_s is not None \
-            else self._deadline_s
+        tier = getattr(request, "slo_tier", "standard")
+        if tier not in TIER_RANK:
+            raise ValueError(
+                f"request {request.request_id}: unknown slo_tier {tier!r}; "
+                f"expected one of {SLO_TIERS}")
+        dl = self._effective_deadline(request)
         if dl and time.perf_counter() > request.arrival_t + dl:
             # admission-time shedding: the latency budget is already blown,
             # so executing would burn an executor slot on a guaranteed miss
@@ -139,21 +388,28 @@ class _PipelinedEngine:
             raise DeadlineExceeded(
                 f"request {request.request_id}: deadline budget "
                 f"{dl * 1e3:.3g} ms already exhausted at admission")
+        deadline_abs = (request.arrival_t + dl) if dl else None
         fut = ResponseFuture(request)
         self._admit_hook(request)
         t_submit = time.perf_counter()
+        rec = _AdmissionRecord(self._admission.key_for(deadline_abs, tier),
+                               fut, t_submit, tier, deadline_abs)
+        if self._shed:
+            self._shed_for(rec)        # may raise ShedError for `rec` itself
         try:
-            if timeout == 0:
-                self._admission.put_nowait((fut, t_submit))
-            else:
-                self._admission.put((fut, t_submit), timeout=timeout)
+            self._admission.put(rec, timeout=timeout)
         except queue.Full:
             raise AdmissionQueueFull(
                 f"admission queue full ({self._admission.maxsize} pending)"
             ) from None
+        except RuntimeError:
+            # queue closed mid-put: shutdown raced us
+            _try_fail(fut, RuntimeError("engine shut down during submit"))
+            return fut
+        self._watchdog_register(fut, deadline_abs)
         if not self._open:
             # lost the race with shutdown(): the workers may already have
-            # drained their stop sentinels, so nobody will resolve this
+            # observed the close signal, so nobody will resolve this
             # future — fail it rather than hang the caller
             _try_fail(fut, RuntimeError("engine shut down during submit"))
         return fut
@@ -180,35 +436,72 @@ class _PipelinedEngine:
         if not self._open:
             return
         self._open = False
-        for _ in self._workers:
-            try:
-                # bounded: with wedged workers and a full queue an
-                # untimed put would hang shutdown before the joins below
-                self._admission.put(_STOP, timeout=5.0)
-            except queue.Full:
-                break
+        self._admission.close()        # workers see None and exit
         for th in self._workers:
             th.join(timeout=10.0)
-        # fail any request that raced past the stop sentinels
-        while True:
-            try:
-                item = self._admission.get_nowait()
-            except queue.Empty:
-                break
-            if item is not _STOP:
-                _try_fail(item[0], RuntimeError("engine shut down"))
+        # fail any request that raced past the close signal
+        for rec in self._admission.drain():
+            _try_fail(rec.fut, RuntimeError("engine shut down"))
+        self._watchdog_stop.set()
+        if self._watchdog_th is not None:
+            self._watchdog_th.join(timeout=5.0)
         self._close()
+
+    # ---- watchdog (liveness backstop under fault injection) ----
+    def _watchdog_register(self, fut: ResponseFuture,
+                           deadline_abs: Optional[float]):
+        if self._watchdog_th is None or deadline_abs is None:
+            return
+        fail_at = deadline_abs + self._watchdog_grace_s
+        with self._watchdog_lock:
+            self._watchdog_futs[id(fut)] = (fut, fail_at)
+        fut.add_done_callback(self._watchdog_forget)
+
+    def _watchdog_forget(self, fut):
+        with self._watchdog_lock:
+            self._watchdog_futs.pop(id(fut), None)
+
+    def _watchdog_loop(self):
+        interval = min(max(self._watchdog_grace_s / 2, 0.01), 0.25)
+        grace_ms = self._watchdog_grace_s * 1e3
+        while not self._watchdog_stop.wait(interval):
+            now = time.perf_counter()
+            with self._watchdog_lock:
+                due = [fut for fut, t in self._watchdog_futs.values()
+                       if now > t]
+            for fut in due:
+                # a worker may resolve it in this window — count only wins
+                if _try_fail(fut, WatchdogTimeout(
+                        f"request {fut.request.request_id} unresolved "
+                        f"{grace_ms:.3g} ms past its deadline")):
+                    self._metrics.incr("watchdog_timeouts")
+
+    # ---- graceful degradation plumbing ----
+    def _observe_pressure(self, queue_delay_s: float):
+        level = self._degradation.observe(queue_delay_s)
+        if level != self._degrade_applied:
+            # benign race: concurrent workers converge on the same level
+            self._degrade_applied = level
+            self._metrics.set_gauge("degrade_level", float(level))
+            self._metrics.incr("degrade_steps")
+            self._on_degrade(level)
+
+    def _on_degrade(self, level: int):
+        """Engine-specific degradation effects (subclass hook); called on a
+        worker thread whenever the applied level changes."""
 
     # ---- worker side ----
     def _worker_loop(self):
         while True:
-            item = self._admission.get()
-            if item is _STOP:
+            rec = self._admission.get()
+            if rec is None:            # queue closed: stop signal
                 return
-            fut, t_submit = item
+            fut, t_submit = rec.fut, rec.t_submit
             t_deq = time.perf_counter()
             req = fut.request
             try:
+                if self._faults is not None:
+                    self._faults.worker_stall()
                 output, timings = self._execute(req)
                 t_done = time.perf_counter()
                 latency = t_done - t_submit
@@ -217,16 +510,26 @@ class _PipelinedEngine:
                     and getattr(req, "generate", None) is None \
                     else len(output)
                 self._metrics.record(n_items, latency)
-                dl = req.deadline_s if req.deadline_s is not None \
-                    else self._deadline_s
+                dl = self._effective_deadline(req)
                 if dl:
-                    self._metrics.incr(
-                        "deadline_misses"
-                        if t_done > req.arrival_t + dl else "deadline_met")
+                    if t_done > req.arrival_t + dl:
+                        self._metrics.incr("deadline_misses")
+                        self._metrics.incr(f"deadline_misses_{rec.tier}")
+                    else:
+                        self._metrics.incr("deadline_met")
+                        self._metrics.incr(f"goodput_{rec.tier}")
                 fut.set_result(ServeResponse(req.request_id, output,
                                              latency, timings))
             except BaseException as e:  # noqa: BLE001 — surface via future
                 _try_fail(fut, e)
+            finally:
+                dt = time.perf_counter() - t_deq
+                with self._ewma_lock:
+                    s = self._service_ewma_s
+                    self._service_ewma_s = dt if s is None \
+                        else _SERVICE_EWMA * dt + (1 - _SERVICE_EWMA) * s
+                if self._degradation is not None:
+                    self._observe_pressure(t_deq - t_submit)
 
 
 def _make_features(feature_mode: str, store, cache_capacity: int,
@@ -443,7 +746,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  deadline_s: float = 0.0,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  generate: int = 0,
-                 gen_vocab: int = 256):
+                 gen_vocab: int = 256,
+                 admission: str = "edf",
+                 shed_policy: str = "none",
+                 slo_tier_defaults: Optional[Dict[str, float]] = None,
+                 watchdog_grace_s: float = 0.0,
+                 degradation=None,
+                 faults=None,
+                 dispatch_retries: int = 2):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
@@ -803,7 +1113,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
                                     window_s=window_s,
                                     pack_rows=self._pack_rows,
-                                    data_ways=self._data_ways)
+                                    data_ways=self._data_ways,
+                                    tier_windows=dict(_TIER_WINDOW_SCALE))
         self.dso = DSO.CoalescingOrchestrator(
             build_fn, pad_slice_fn=self._pad_slice, gather_fn=self._gather,
             policy=policy, n_streams=n_streams, families=families,
@@ -812,9 +1123,15 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             # multi-device executables must not overlap their collectives
             # (XLA rendezvous has no cross-computation ordering — see
             # CoalescingOrchestrator); a 1x1 mesh stays fully concurrent
-            serialize_dispatch=mesh is not None and mesh.size > 1)
+            serialize_dispatch=mesh is not None and mesh.size > 1,
+            fault_hook=None if faults is None else faults.dispatch,
+            dispatch_retries=dispatch_retries)
         super().__init__(max_pending=max_pending, n_workers=n_workers,
-                         name="flame")
+                         name="flame", admission=admission,
+                         shed_policy=shed_policy,
+                         slo_tier_defaults=slo_tier_defaults,
+                         watchdog_grace_s=watchdog_grace_s,
+                         degradation=degradation, faults=faults)
 
     # back-compat alias: callers used to read eng.pool.build_time_s
     @property
@@ -941,7 +1258,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
 
     def _lookup_or_encode(self, req: ServeRequest, hist: np.ndarray,
                           memo: Optional[tuple] = None,
-                          deadline: Optional[float] = None
+                          deadline: Optional[float] = None,
+                          _retry: bool = True
                           ) -> Tuple[tuple, str, float]:
         """Returns (kv_leaves, path, features_s) with path one of ``hit`` /
         ``encode`` / ``extend`` / ``wait``; encodes (or, on an extendable
@@ -972,7 +1290,20 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 fut = Future()
                 self._encode_inflight[(key, fp)] = fut
         if not leader:
-            return fut.result(), "wait", 0.0
+            try:
+                return fut.result(), "wait", 0.0
+            except BaseException:
+                # single-flight recovery: the leader we coalesced behind
+                # died (e.g. a poisoned request or an injected fault) — its
+                # failure is ITS OWN, not ours.  Re-enter once: the dead
+                # leader has deregistered, so we either become the new
+                # leader or join a healthy one.  One retry only, so a
+                # deterministically-failing encode still fails everyone.
+                if not _retry:
+                    raise
+                self._metrics.incr("encode_recoveries")
+                return self._lookup_or_encode(req, hist, memo, deadline,
+                                              _retry=False)
         try:
             t0 = time.perf_counter()
             side = self._side_features(req.history)
@@ -994,13 +1325,15 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     basis_leaves = tuple(jax.tree.leaves(basis.kv))
                     kv_tree = self.dso.score((basis_leaves, hist, side),
                                              bucket, kind="extend",
-                                             deadline=deadline)
+                                             deadline=deadline,
+                                             tier=req.slo_tier)
                     path = "extend"
                     refreshes = basis.refreshes + 1
                     self.history_pool.count_extension()
             if kv_tree is None:
                 kv_tree = self.dso.score((hist, side), self.n_history,
-                                         kind="encode", deadline=deadline)
+                                         kind="encode", deadline=deadline,
+                                         tier=req.slo_tier)
             # device-resident rows arrive as fresh device buffers (XLA
             # slices of the stacked dispatch output); host rows are numpy
             # VIEWS into the (max_batch, ...) stacked parent — copy those so
@@ -1034,16 +1367,24 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 self._encode_inflight.pop((key, fp), None)
         return kv, path, t1 - t0
 
+    def _degrade_level(self) -> int:
+        return 0 if self._degradation is None else self._degradation.level
+
     def _execute(self, req: ServeRequest):
         memo = None
         if self.history_pool is not None:
             with self._encode_lock:
                 memo = self._key_memo.pop(req.request_id, None)
+            if self._faults is not None:
+                # eviction-storm arm: pressure-spike / cold-restart stand-in
+                dropped = self._faults.pool_storm(self.history_pool)
+                if dropped:
+                    self._metrics.incr("fault_pool_evictions", dropped)
         self._check_request(req)
         if req.generate is not None:
             return self._execute_generate(req, memo)
         t0 = time.perf_counter()
-        dl = req.deadline_s if req.deadline_s is not None else self._deadline_s
+        dl = self._effective_deadline(req)
         deadline = (req.arrival_t + dl) if dl else None
         hist = np.asarray(req.history[None, :self.n_history],
                           np.int32)  # flamecheck: host-sync-ok(request arrays arrive as host numpy; dtype canonicalized once at admission)
@@ -1053,12 +1394,25 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             side = self._side_features(req.history)
             t1 = time.perf_counter()
             out = self.dso.score((hist, cand, side), req.m, kind="full",
-                                 deadline=deadline)
+                                 deadline=deadline, tier=req.slo_tier)
             t2 = time.perf_counter()
             return out[0], {"features_s": t1 - t0, "execute_s": t2 - t1}
         key_fp = memo if memo is not None else self._pool_key(req)
-        kv, path, features_s = self._lookup_or_encode(req, hist, key_fp,
-                                                      deadline)
+        if req.slo_tier == "bulk" and self._degrade_level() >= 3:
+            # level-3 degradation: bulk-tier encodes are suppressed — serve
+            # only from cache, shed the rest (cached-hit-or-shed)
+            kv_raw = self.history_pool.peek(key_fp[0], key_fp[1],
+                                            raw=self._fused)
+            if kv_raw is None:
+                self._metrics.incr("degrade_shed")
+                raise DegradedError(
+                    f"request {req.request_id} (bulk) shed: level-3 "
+                    f"degradation suppresses encodes and the pool has no "
+                    f"entry for this session")
+            kv, path, features_s = self._cached_rows(kv_raw), "hit", 0.0
+        else:
+            kv, path, features_s = self._lookup_or_encode(req, hist, key_fp,
+                                                          deadline)
         t1 = time.perf_counter()
         # On a HIT the (key, fingerprint) pair is a stable content identity
         # for the loaded rows (every hit dequantizes the same payload), so
@@ -1078,7 +1432,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 and (self._fused or path == "hit"):
             token = ("kv",) + key_fp[0] + (key_fp[1],)
         out = self.dso.score((kv, cand), req.m, kind="cached",
-                             dedup_token=token, deadline=deadline)
+                             dedup_token=token, deadline=deadline,
+                             tier=req.slo_tier)
         t2 = time.perf_counter()
         build_s = (t1 - t0) - features_s
         return out[0], {"features_s": features_s,
@@ -1139,7 +1494,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  np.asarray(
                      [[tok]],
                      np.int32)),  # flamecheck: host-sync-ok(replayed tokens are host python ints; beam orchestration is host-side by design)
-                1, kind="append", deadline=deadline)
+                1, kind="append", deadline=deadline, tier=req.slo_tier)
             leaves = self._copy_kv_rows(kv_tree)
         return leaves
 
@@ -1195,8 +1550,15 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             raise ValueError(
                 f"request {req.request_id}: width={width} must be in "
                 f"[1, |universe|={len(universe)}] for top-k decode")
+        if req.slo_tier == "bulk" and self._degrade_level() >= 2:
+            # level-2 degradation: bulk-tier generation runs at half beam
+            # width and half the steps — a cheaper, shorter answer beats a
+            # shed one, and the freed decode slots drain the backlog
+            width = max(1, width // 2)
+            steps = max(1, steps // 2)
+            self._metrics.incr("degrade_gen_shrunk")
         t0 = time.perf_counter()
-        dl = req.deadline_s if req.deadline_s is not None else self._deadline_s
+        dl = self._effective_deadline(req)
         deadline = (req.arrival_t + dl) if dl else None
         hist = np.asarray(
             req.history[None, :self.n_history],
@@ -1249,7 +1611,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                                universe[None]),
                               v, kind="decode",
                               dedup_token=("g", rid, "root"),
-                              deadline=deadline)
+                              deadline=deadline, tier=req.slo_tier)
         probs = np.asarray(
             fut.result(),
             np.float32)[0]  # flamecheck: host-sync-ok(beam ranking is host-side search logic by design)
@@ -1278,7 +1640,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                          np.asarray(
                              [[b.tokens[-1]]],
                              np.int32)),  # flamecheck: host-sync-ok(chosen tokens are host python ints; beam orchestration is host-side by design)
-                        1, kind="append", deadline=deadline)))
+                        1, kind="append", deadline=deadline,
+                        tier=req.slo_tier)))
                 for i, f in afuts:
                     leaves = self._copy_kv_rows(f.result())
                     self._park_beam(req, i, beams[i], leaves, memo[1])
@@ -1300,7 +1663,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                      universe[None]),
                     v, kind="decode",
                     dedup_token=("g", rid, i, len(beams[i].tokens)),
-                    deadline=deadline)))
+                    deadline=deadline, tier=req.slo_tier)))
             self._metrics.incr("decode_steps")
             step_lp = np.zeros((len(beams), v))
             for i, f in dfuts:
@@ -1399,7 +1762,15 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         if self.history_pool is not None:
             out.update({f"pool_{k}": v
                         for k, v in self.history_pool.stats().items()})
+        if self._faults is not None:
+            out.update(self._faults.stats())
         return out
+
+    def _on_degrade(self, level: int):
+        # level >= 1: stop waiting for co-riders — flush every coalescing
+        # window immediately (tail-packing windows add latency the backlog
+        # can no longer afford); reversible when pressure recedes
+        self.dso.set_window_override(0.0 if level >= 1 else None)
 
     def _close(self):
         self.features.shutdown()

@@ -650,6 +650,24 @@ class HistoryKVPool:
         with self._lock:
             return len(self._entries)
 
+    def drop(self, key: Hashable) -> bool:
+        """Force-evict one key from BOTH tiers (fault injection / admin
+        invalidation — ``serving.faults`` eviction storms drive this).
+        Returns True when an entry was actually dropped; counted in
+        ``evictions`` so storm pressure shows up in the pool stats."""
+        with self._lock:
+            e = self._entries.pop(key, None)
+            if e is not None:
+                self.bytes_used -= e.nbytes
+                self.shard_bytes_used -= e.shard_nbytes
+            sp = self._spill.pop(key, None)
+            if sp is not None:
+                self.spill_bytes_used -= sp.nbytes
+            if e is None and sp is None:
+                return False
+            self.evictions += 1
+            return True
+
     def release(self) -> None:
         """Drop every entry (engine shutdown); counters survive for metrics."""
         with self._lock:

@@ -11,11 +11,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List, Sequence
+from concurrent.futures import TimeoutError as FuturesTimeout
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.api import ServeRequest, ServingEngine
+from repro.serving.api import (SLO_TIERS, RejectedError, ServeRequest,
+                               ServingEngine)
 
 
 @dataclasses.dataclass
@@ -37,12 +39,25 @@ class TrafficConfig:
     # the regime where a history-KV pool converts full passes into
     # candidate-only passes.  0 keeps the legacy one-user-per-request shape.
     n_users: int = 0
+    # SLO tier mix: weights over {interactive, standard, bulk} — each
+    # request draws its ``slo_tier`` from this distribution (the overload
+    # bench's tiered traffic).  None keeps every request tier-less
+    # ("standard"), the pre-overload-discipline shape.
+    tier_mix: Optional[Dict[str, float]] = None
 
 
 def generate_traffic(tc: TrafficConfig, n_items: int = 100_000
                      ) -> List[Dict[str, np.ndarray]]:
     rng = np.random.default_rng(tc.seed)
     user_hist = {}
+    tiers, tier_p = None, None
+    if tc.tier_mix:
+        bad = set(tc.tier_mix) - set(SLO_TIERS)
+        if bad:
+            raise ValueError(f"unknown SLO tiers in tier_mix: {bad}")
+        tiers = sorted(tc.tier_mix)
+        w = np.array([tc.tier_mix[t] for t in tiers], float)
+        tier_p = w / w.sum()
     reqs = []
     for _ in range(tc.n_requests):
         if tc.distribution == "uniform":
@@ -58,6 +73,8 @@ def generate_traffic(tc: TrafficConfig, n_items: int = 100_000
             base = int(rng.choice(tc.candidate_counts))
             m = max(1, base - int(rng.integers(0, base // 3)))
         req = {"candidates": rng.integers(0, n_items, m).astype(np.int32)}
+        if tiers is not None:
+            req["slo_tier"] = tiers[int(rng.choice(len(tiers), p=tier_p))]
         if tc.n_users > 0:
             uid = int(rng.integers(tc.n_users))
             if uid not in user_hist:
@@ -100,7 +117,9 @@ def run_workload(serve_fn: Callable, requests: List[Dict], concurrency: int = 4
 
 
 def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
-                       arrival_gap_s: float = 0.0, seed: int = 0
+                       arrival_gap_s: float = 0.0, seed: int = 0,
+                       tolerate_errors: bool = False,
+                       result_timeout_s: float = 120.0
                        ) -> Dict[str, object]:
     """Drive an API v2 engine through ``submit`` — all requests in flight
     together, which is the condition under which the coalescing DSO can
@@ -109,28 +128,63 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
     ``arrival_gap_s`` > 0 sleeps a uniform random gap in [0, arrival_gap_s)
     between submits (open-loop jittered arrivals).  Returns the run_workload
     metric keys plus ``outputs`` (per-request score arrays, request order)
-    so callers can compare result correctness across engine configs."""
+    so callers can compare result correctness across engine configs.
+
+    ``tolerate_errors=True`` is the overload/chaos mode: admission-side
+    :class:`RejectedError`\\ s and failed futures are COUNTED instead of
+    raised (``rejected`` / ``failed`` in the result; latency metrics cover
+    the ``resolved`` survivors), and any future still unresolved after
+    ``result_timeout_s`` counts as ``hung`` — the liveness number the
+    chaos gate asserts is zero.  The default (False) keeps the strict v1
+    contract: any rejection or failure raises."""
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     futs = []
+    rejected = 0
     for r in requests:
         if arrival_gap_s > 0:
             time.sleep(float(rng.uniform(0, arrival_gap_s)))
-        futs.append(engine.submit(ServeRequest(
-            history=r["history"], candidates=r.get("candidates"),
-            user_id=r.get("user_id"), deadline_s=r.get("deadline_s"),
-            generate=r.get("generate"))))
-    resps = [f.result() for f in futs]
+        try:
+            futs.append(engine.submit(ServeRequest(
+                history=r["history"], candidates=r.get("candidates"),
+                user_id=r.get("user_id"), deadline_s=r.get("deadline_s"),
+                generate=r.get("generate"),
+                slo_tier=r.get("slo_tier", "standard"))))
+        except RejectedError:
+            if not tolerate_errors:
+                raise
+            rejected += 1
+            futs.append(None)
+    resps, out_reqs, failed, hung = [], [], 0, 0
+    for i, f in enumerate(futs):
+        if f is None:
+            continue
+        try:
+            resps.append(f.result(result_timeout_s if tolerate_errors
+                                  else None))
+            out_reqs.append(requests[i])
+        except FuturesTimeout:
+            if not tolerate_errors:
+                raise
+            hung += 1
+        except BaseException:
+            if not tolerate_errors:
+                raise
+            failed += 1
     total = time.perf_counter() - t0
-    la = np.array([r.latency_s for r in resps])
+    la = np.array([r.latency_s for r in resps]) if resps else np.zeros(1)
     # generative requests count generated tokens; scoring requests count
     # scored candidates
     items = sum(int((r.output >= 0).sum())
-                if requests[i].get("generate") is not None
-                else len(requests[i]["candidates"])
+                if out_reqs[i].get("generate") is not None
+                else len(out_reqs[i]["candidates"])
                 for i, r in enumerate(resps))
     return {
         "requests": len(requests),
+        "resolved": len(resps),
+        "rejected": rejected,
+        "failed": failed,
+        "hung": hung,
         "total_s": total,
         "throughput_items_per_s": items / total,
         "mean_latency_ms": float(la.mean() * 1e3),

@@ -1,4 +1,4 @@
-"""flamecheck (repro.analysis) — fixture coverage for all four passes.
+"""flamecheck (repro.analysis) — fixture coverage for every pass.
 
 Each test writes a minimal fixture module, runs the relevant pass through
 the library API, and asserts (a) the violation is found, (b) the matching
@@ -133,6 +133,45 @@ def test_lock_condition_shares_wrapped_lock(tmp_path):
         """)
     assert not _findings(tmp_path, "m.py", code,
                          passes=("lock-discipline",))
+
+
+def test_lock_admission_queue_cv_discipline(tmp_path):
+    """The engine's _AdmissionQueue shape: two CVs wrapping one mutex.
+    Holding either CV counts as holding the mutex; an access outside all
+    three is flagged."""
+    code = textwrap.dedent("""
+        import heapq
+        import threading
+
+        class AdmissionQueue:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._not_empty = threading.Condition(self._lock)
+                self._not_full = threading.Condition(self._lock)
+                self._heap = []
+                self._live = 0
+
+            def put(self, rec):
+                with self._not_full:
+                    heapq.heappush(self._heap, rec)
+                    self._live += 1
+
+            def get(self):
+                with self._not_empty:
+                    self._live -= 1
+                    return heapq.heappop(self._heap)
+
+            def shed_victim(self):
+                with self._lock:
+                    self._heap.sort()
+
+            def qsize(self):
+                return self._live
+        """)
+    fs = _active(_findings(tmp_path, "m.py", code,
+                           passes=("lock-discipline",)))
+    assert len(fs) == 1 and fs[0].code == "FC-LOCK"
+    assert "qsize" in fs[0].message and "_live" in fs[0].message
 
 
 def test_lock_alias_and_heappush_tracked(tmp_path):
@@ -379,6 +418,89 @@ def test_kernel_prefetch_arity_mismatch_found(tmp_path):
                            passes=("kernel-contract",)))
     assert len(fs) == 1 and fs[0].code == "FC-PREFETCH-ARITY"
     assert "2 grid indices + 2 prefetch" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# pass 5: ResponseFuture leak lint
+# ---------------------------------------------------------------------------
+
+FUTURE_LEAK_FIXTURE = """
+from repro.serving.api import ResponseFuture
+
+class Engine:
+    def submit(self, request):
+        fut = ResponseFuture(request){pragma}
+        self.accepted += 1
+        return None
+"""
+
+
+def test_future_leak_found(tmp_path):
+    code = FUTURE_LEAK_FIXTURE.replace("{pragma}", "")
+    fs = _active(_findings(tmp_path, "m.py", code,
+                           passes=("future-leak",)))
+    assert len(fs) == 1 and fs[0].code == "FC-FUTURE"
+    assert "'fut'" in fs[0].message and "submit" in fs[0].message
+
+
+def test_future_leak_pragma_suppresses(tmp_path):
+    code = FUTURE_LEAK_FIXTURE.replace(
+        "{pragma}", "  # flamecheck: future-ok(fixture builds a dead one)")
+    fs = _findings(tmp_path, "m.py", code, passes=("future-leak",))
+    assert len(fs) == 1 and fs[0].suppressed
+    assert not _active(fs)
+
+
+def test_future_bare_drop_found(tmp_path):
+    code = textwrap.dedent("""
+        from repro.serving.api import ResponseFuture
+
+        def probe(request):
+            ResponseFuture(request)
+        """)
+    fs = _active(_findings(tmp_path, "m.py", code,
+                           passes=("future-leak",)))
+    assert len(fs) == 1 and fs[0].code == "FC-FUTURE"
+    assert "dropped" in fs[0].message
+
+
+def test_future_discharged_forms_clean(tmp_path):
+    """Every legitimate way out of the obligation: resolve it, return it,
+    hand it to a call (positionally, by keyword, inside a tuple), store it
+    into shared state, or resolve it from a nested closure."""
+    code = textwrap.dedent("""
+        from repro.serving.api import ResponseFuture
+
+        class Engine:
+            def resolved(self, request):
+                fut = ResponseFuture(request)
+                fut.set_exception(RuntimeError("shed"))
+
+            def returned(self, request):
+                fut = ResponseFuture(request)
+                return fut
+
+            def handed_positional(self, request):
+                fut = ResponseFuture(request)
+                self._register(fut)
+
+            def handed_keyword(self, request):
+                fut = ResponseFuture(request)
+                self._record(key=(1, 2), fut=fut)
+
+            def stored(self, request):
+                fut = ResponseFuture(request)
+                self._futs[id(request)] = fut
+
+            def closure_resolves(self, request):
+                fut = ResponseFuture(request)
+
+                def on_timeout():
+                    fut.set_exception(TimeoutError())
+                self._watchdog.append(on_timeout)
+        """)
+    assert not _active(_findings(tmp_path, "m.py", code,
+                                 passes=("future-leak",)))
 
 
 # ---------------------------------------------------------------------------
