@@ -228,6 +228,25 @@ DECODE_ROUNDS = 5
 DECODE_WORKERS = 4
 DECODE_REQUESTS = 24
 DECODE_SPEEDUP_MIN = 1.1 if (os.cpu_count() or 1) > 1 else 0.9
+# decode_fused profile (ISSUE 10, FKE v2): fused generative decode — the
+# lengths-masked fused kernel scores every decode step in one executor
+# call against stored pool KV — vs the chunked per-pass formulation, both
+# packed and over the same int8 pool, so the only delta is the decode
+# formulation itself.  Correctness is gated on a NATIVE-pool parity pass
+# (exact f32 math on both sides: sequences must match token for token);
+# the timed A/B runs on int8 where the fused side's in-kernel dequant
+# pays off.  Multi-core boxes must show the speedup; a single-core box
+# holds parity (the fused formulation must at least pay for itself).
+DECODE_FUSED_SPEEDUP_MIN = 1.2 if (os.cpu_count() or 1) > 1 else 0.9
+# chaos arm shared by the decode profiles: dispatch faults retrying
+# decode-step dispatches plus pool eviction storms that evict PARKED beam
+# caches mid-generation — the liveness gate is zero hung futures and the
+# recovery gate is gen_replays > 0 (evicted beams re-decoded from the
+# root, not failed).  Storms roll per decode round (the engine fires the
+# evict arm between a round's beam parks and the next round's lookups —
+# the only window where an eviction can force a replay), so a modest
+# probability still lands many mid-generation evictions
+DECODE_FAULT_SPEC = "dispatch:0.1,evict:0.15"
 # overload profile (ISSUE 9): sustained arrival rate > service rate —
 # every request submits at once against a small worker pool, so the
 # admission queue stays saturated and ordering policy decides who makes
@@ -809,6 +828,82 @@ def run_sharded_profile(bundle, params, csv=True):
     }
 
 
+def _decode_traffic(seed):
+    """Zipf repeat-user decode traffic, alternating top-k and beam
+    requests so one executor set serves both ranking policies."""
+    from repro.serving.api import BeamConfig, TopKConfig
+
+    tc = TrafficConfig(candidate_counts=DECODE_COUNTS, distribution="zipf",
+                       n_requests=DECODE_REQUESTS, n_history=DECODE_HISTORY,
+                       seed=seed, n_users=REPEAT_USERS)
+    reqs = generate_traffic(tc, n_items=N_ITEMS)
+    for i, r in enumerate(reqs):
+        r["generate"] = (TopKConfig(k=DECODE_BEAM, steps=DECODE_STEPS)
+                         if i % 2 == 0 else
+                         BeamConfig(width=DECODE_BEAM, steps=DECODE_STEPS))
+    return reqs
+
+
+def _decode_engine(bundle, params, *, pack, impl="chunked", pool_dtype=None,
+                   faults=None):
+    kw = {"pool_dtype": pool_dtype} if pool_dtype else {}
+    eng = create_engine(
+        "flame", bundle, params, n_history=DECODE_HISTORY,
+        buckets=BUCKETS, n_streams=2, feature_mode="sync",
+        store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+        coalesce=True, max_batch=REPEAT_MAX_BATCH, window_s=0.008,
+        n_workers=DECODE_WORKERS, history_cache=True,
+        pool_slots=POOL_SLOTS, generate=DECODE_STEPS, pack_tails=pack,
+        impl=impl, faults=faults, **kw)
+    eng.features.query(list(range(N_ITEMS)))
+    return eng
+
+
+def _decode_chaos_pass(bundle, params, reqs, *, impl):
+    """Chaos arm shared by the decode profiles: DECODE_FAULT_SPEC injects
+    transient dispatch faults into decode-step dispatches and pool
+    eviction storms that evict parked beam caches mid-generation.  Gates:
+    zero hung futures (liveness) and ``gen_replays`` > 0 (an evicted beam
+    re-decodes from the root instead of failing the request)."""
+    from repro.serving.faults import FaultInjector
+
+    faults = FaultInjector.parse(DECODE_FAULT_SPEC, seed=43)
+    eng = _decode_engine(bundle, params, pack=True, impl=impl,
+                         pool_dtype="int8", faults=faults)
+    hung = 0
+    last = {}
+    for _ in range(2):
+        r = run_workload_async(eng, reqs, tolerate_errors=True)
+        hung += r["hung"]
+        last = {k: r[k] for k in ("resolved", "rejected", "failed")}
+    m = eng.metrics()
+    eng.shutdown()
+    chaos = dict(
+        last, hung_total=hung, impl=impl, fault_spec=DECODE_FAULT_SPEC,
+        fault_dispatch_fired=int(m.get("fault_dispatch_fired", 0)),
+        fault_evict_fired=int(m.get("fault_evict_fired", 0)),
+        dispatch_retries=int(m.get("dso_dispatch_retries", 0)),
+        gen_replays=int(m.get("gen_replays", 0)))
+    print(f"-> decode chaos ({impl}, {DECODE_FAULT_SPEC}): "
+          f"{chaos['fault_dispatch_fired']} dispatch faults "
+          f"({chaos['dispatch_retries']} retried), "
+          f"{chaos['fault_evict_fired']} eviction storms, "
+          f"{chaos['gen_replays']} beam replays; hung futures: {hung}")
+    if hung:
+        raise AssertionError(
+            f"{hung} decode future(s) never resolved under fault "
+            f"injection — the zero-hung liveness gate failed")
+    if chaos["fault_dispatch_fired"] < 1 or chaos["fault_evict_fired"] < 1:
+        raise AssertionError(
+            "decode chaos pass fired no dispatch/evict faults — the "
+            "injector is not engaging (seed/spec drift?)")
+    if chaos["gen_replays"] < 1:
+        raise AssertionError(
+            "eviction storms never forced a mid-generation beam replay — "
+            "the parked-beam recovery path is not being exercised")
+    return chaos
+
+
 def run_decode_profile(bundle, params, csv=True):
     """Profile 9: generative decode — DSO-packed beam decode vs per-request
     dispatch on zipf repeat-user traffic with alternating top-k and beam
@@ -818,35 +913,14 @@ def run_decode_profile(bundle, params, csv=True):
     equality (both sides run the same row-wise batch-invariant AOT
     executables, so sequences must match bitwise), median per-round
     gen-tokens/s ratio >= DECODE_SPEEDUP_MIN (cpu-count-aware, see the
-    constant), and the packer actually engaging (packed segments > 0)."""
-    from repro.serving.api import BeamConfig, TopKConfig
-
+    constant), the packer actually engaging (packed segments > 0), and
+    the shared chaos arm (zero hung futures, beam replays firing)."""
     print("\n=== Generative decode: DSO-packed beam rows vs per-request "
           f"dispatch (history {DECODE_HISTORY}, universes {DECODE_COUNTS} "
           f"zipf, {DECODE_STEPS} steps, width {DECODE_BEAM}) ===")
-    tc = TrafficConfig(candidate_counts=DECODE_COUNTS, distribution="zipf",
-                       n_requests=DECODE_REQUESTS, n_history=DECODE_HISTORY,
-                       seed=23, n_users=REPEAT_USERS)
-    reqs = generate_traffic(tc, n_items=N_ITEMS)
-    for i, r in enumerate(reqs):
-        # alternate modes so one executor set serves both ranking policies
-        r["generate"] = (TopKConfig(k=DECODE_BEAM, steps=DECODE_STEPS)
-                         if i % 2 == 0 else
-                         BeamConfig(width=DECODE_BEAM, steps=DECODE_STEPS))
-
-    def decode_engine(pack):
-        eng = create_engine(
-            "flame", bundle, params, n_history=DECODE_HISTORY,
-            buckets=BUCKETS, n_streams=2, feature_mode="sync",
-            store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
-            coalesce=True, max_batch=REPEAT_MAX_BATCH, window_s=0.008,
-            n_workers=DECODE_WORKERS, history_cache=True,
-            pool_slots=POOL_SLOTS, generate=DECODE_STEPS, pack_tails=pack)
-        eng.features.query(list(range(N_ITEMS)))
-        return eng
-
-    eng_packed = decode_engine(True)
-    eng_plain = decode_engine(False)
+    reqs = _decode_traffic(seed=23)
+    eng_packed = _decode_engine(bundle, params, pack=True)
+    eng_plain = _decode_engine(bundle, params, pack=False)
     # warm both sides (compiles the decode/append executors and encodes
     # every user's history into the pool), then interleave measured rounds
     # — same drift-cancelling protocol as _ab_interleaved_ratios, but the
@@ -923,6 +997,7 @@ def run_decode_profile(bundle, params, csv=True):
         raise AssertionError(
             "packed engine reported no packed segments during decode — "
             "the beam packer is not engaging on this traffic")
+    chaos = _decode_chaos_pass(bundle, params, reqs, impl="chunked")
     return {
         "workload": {"distribution": "zipf", "counts": list(DECODE_COUNTS),
                      "n_requests": DECODE_REQUESTS,
@@ -935,9 +1010,147 @@ def run_decode_profile(bundle, params, csv=True):
         "speedup_median_per_round": speedup,
         "per_round_ratios": [float(r) for r in ratios],
         "sequences_bitwise": bool(seq_bitwise),
+        "chaos": chaos,
         "gates": {"decode_speedup_min": DECODE_SPEEDUP_MIN,
                   "decode_sequences_bitwise": True,
-                  "decode_packed_segments_nonzero": True},
+                  "decode_packed_segments_nonzero": True,
+                  "decode_chaos_zero_hung": True,
+                  "decode_chaos_gen_replays_nonzero": True},
+    }
+
+
+def run_decode_fused_profile(bundle, params, csv=True):
+    """Profile 11 (FKE v2): fused generative decode — the lengths-masked
+    fused kernel scores each decode step in ONE executor call against
+    stored pool KV — vs the chunked per-pass decode, both segment-packed.
+    Two passes: a NATIVE-pool parity pass (exact f32 math on both sides;
+    every generated sequence must match token for token) and an int8-pool
+    timed A/B (interleaved rounds, median per-round gen-tokens/s ratio
+    >= DECODE_FUSED_SPEEDUP_MIN, cpu-count-aware).  The fused side must
+    report zero ``packed_kernel_reroutes`` (the bq-alignment contract
+    holds end to end) and the shared chaos arm runs against the fused
+    engine (zero hung futures, beam replays firing)."""
+    print("\n=== Fused generative decode (FKE v2): fused vs chunked "
+          f"decode formulation (history {DECODE_HISTORY}, universes "
+          f"{DECODE_COUNTS} zipf, {DECODE_STEPS} steps, width "
+          f"{DECODE_BEAM}) ===")
+    reqs = _decode_traffic(seed=31)
+
+    # ---- native-pool parity pass: token-for-token sequence gate ----
+    eng_ch = _decode_engine(bundle, params, pack=False, impl="chunked")
+    eng_fu = _decode_engine(bundle, params, pack=False, impl="fused")
+    want = run_workload_async(eng_ch, reqs)["outputs"]
+    got = run_workload_async(eng_fu, reqs)["outputs"]
+    seq_ok = all(np.array_equal(a, b) for a, b in zip(want, got))
+    eng_ch.shutdown()
+    eng_fu.shutdown()
+    print(f"-> native-pool parity: fused sequences token-for-token equal "
+          f"to chunked: {seq_ok} ({len(want)} requests)")
+
+    # ---- int8-pool timed pass: interleaved A/B rounds ----
+    eng_fused = _decode_engine(bundle, params, pack=True, impl="fused",
+                               pool_dtype="int8")
+    eng_chunk = _decode_engine(bundle, params, pack=True, impl="chunked",
+                               pool_dtype="int8")
+    run_workload_async(eng_fused, reqs)        # warm: compile + encode pool
+    run_workload_async(eng_chunk, reqs)
+    m0 = [eng_fused.metrics(), eng_chunk.metrics()]
+    agg = [dict(t=0.0, p50=[], p99=[]), dict(t=0.0, p50=[], p99=[])]
+    outs = [None, None]
+    ratios = []
+    for _ in range(DECODE_ROUNDS):
+        pair_t = [0.0, 0.0]
+        for i, eng in enumerate((eng_fused, eng_chunk)):
+            r = run_workload_async(eng, reqs)
+            outs[i] = r.pop("outputs")
+            agg[i]["t"] += r["total_s"]
+            pair_t[i] = r["total_s"]
+            agg[i]["p50"].append(r["p50_latency_ms"])
+            agg[i]["p99"].append(r["p99_latency_ms"])
+        ratios.append(pair_t[1] / max(pair_t[0], 1e-9))  # chunked_t/fused_t
+    res = []
+    for i, eng in enumerate((eng_fused, eng_chunk)):
+        tokens_per_pass = sum(int((o >= 0).sum()) for o in outs[i])
+        m1 = eng.metrics()
+        res.append({
+            "requests": len(reqs) * DECODE_ROUNDS,
+            "gen_tokens_per_s": (DECODE_ROUNDS * tokens_per_pass
+                                 / max(agg[i]["t"], 1e-9)),
+            "p50_latency_ms": float(np.median(agg[i]["p50"])),
+            "p99_latency_ms": float(np.median(agg[i]["p99"])),
+            "decode_dispatches": (m1.get("dso_dispatches_decode", 0)
+                                  - m0[i].get("dso_dispatches_decode", 0)),
+            "packed_segments": (m1.get("dso_packed_segments", 0)
+                                - m0[i].get("dso_packed_segments", 0)),
+            "packed_kernel_reroutes": int(
+                m1.get("packed_kernel_reroutes", 0)),
+            **_pool_delta(m0[i], m1),
+        })
+        eng.shutdown()
+    fused, chunked = res
+    # int8 pools: the two formulations round differently, so sequences may
+    # legitimately diverge where quantized logits tie — report, don't gate
+    int8_match = float(np.mean([np.array_equal(a, b)
+                                for a, b in zip(outs[0], outs[1])]))
+    speedup = float(np.median(ratios))
+    speedup_agg = (fused["gen_tokens_per_s"]
+                   / max(chunked["gen_tokens_per_s"], 1e-9))
+    print(f"{'config':<26}{'gen tok/s':>10}{'p50 ms':>9}{'p99 ms':>9}"
+          f"{'decode':>8}{'packed':>8}")
+    for name, r in (("chunked decode (int8)", chunked),
+                    ("fused decode (int8)", fused)):
+        print(f"{name:<26}{r['gen_tokens_per_s']:>10.0f}"
+              f"{r['p50_latency_ms']:>9.1f}{r['p99_latency_ms']:>9.1f}"
+              f"{r['decode_dispatches']:>8}{r['packed_segments']:>8}")
+    print(f"-> fused decode: x{speedup:.2f} median per-round "
+          f"(x{speedup_agg:.2f} aggregate) vs chunked; int8 sequence "
+          f"agreement {int8_match:.2f}; packed kernel reroutes "
+          f"{fused['packed_kernel_reroutes']}")
+    if csv:
+        print(f"serving/decode_chunked_int8,"
+              f"{chunked['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={chunked['gen_tokens_per_s']:.0f}")
+        print(f"serving/decode_fused_int8,"
+              f"{fused['p50_latency_ms'] * 1e3:.1f},"
+              f"tput={fused['gen_tokens_per_s']:.0f}")
+
+    if not seq_ok:
+        raise AssertionError(
+            "fused decode generated different token sequences than the "
+            "chunked engine on the NATIVE pool — correctness gate failed "
+            "(both sides run exact f32 math over the same stored values)")
+    if fused["packed_kernel_reroutes"]:
+        raise AssertionError(
+            f"{fused['packed_kernel_reroutes']} packed kernel dispatch(es) "
+            f"rerouted to the jnp formulation — the bq-alignment contract "
+            f"is not holding on the fused engine")
+    if speedup < DECODE_FUSED_SPEEDUP_MIN:
+        raise AssertionError(
+            f"fused decode median per-round speedup x{speedup:.2f} < "
+            f"{DECODE_FUSED_SPEEDUP_MIN} vs chunked (per-round ratios "
+            f"{[round(r, 2) for r in ratios]}) — perf gate failed")
+    chaos = _decode_chaos_pass(bundle, params, reqs, impl="fused")
+    return {
+        "workload": {"distribution": "zipf", "counts": list(DECODE_COUNTS),
+                     "n_requests": DECODE_REQUESTS,
+                     "history": DECODE_HISTORY, "n_users": REPEAT_USERS,
+                     "steps": DECODE_STEPS, "width": DECODE_BEAM,
+                     "max_batch": REPEAT_MAX_BATCH,
+                     "pool_dtype_timed": "int8",
+                     "cpu_count": int(os.cpu_count() or 1)},
+        "chunked": chunked,
+        "fused": fused,
+        "speedup_gen_tokens_per_s": speedup_agg,
+        "speedup_median_per_round": speedup,
+        "per_round_ratios": [float(r) for r in ratios],
+        "native_sequences_token_for_token": bool(seq_ok),
+        "int8_sequence_agreement": int8_match,
+        "chaos": chaos,
+        "gates": {"decode_fused_speedup_min": DECODE_FUSED_SPEEDUP_MIN,
+                  "decode_fused_native_sequences": True,
+                  "decode_fused_zero_reroutes": True,
+                  "decode_fused_chaos_zero_hung": True,
+                  "decode_fused_chaos_gen_replays_nonzero": True},
     }
 
 
@@ -1128,6 +1341,7 @@ PROFILE_RUNNERS = {
     "dso_nonuniform": run_dso_nonuniform_profile,
     "sharded": run_sharded_profile,
     "decode": run_decode_profile,
+    "decode_fused": run_decode_fused_profile,
     "overload": run_overload_profile,
 }
 
@@ -1300,6 +1514,7 @@ def main(csv=True, profile: str = "all"):
     dso_nonuniform = run_dso_nonuniform_profile(bundle, params, csv)
     sharded = run_sharded_profile(bundle, params, csv)
     decode = run_decode_profile(bundle, params, csv)
+    decode_fused = run_decode_fused_profile(bundle, params, csv)
     overload = run_overload_profile(bundle, params, csv)
 
     report = {
@@ -1349,6 +1564,7 @@ def main(csv=True, profile: str = "all"):
         "dso_nonuniform": dso_nonuniform,
         "sharded": sharded,
         "decode": decode,
+        "decode_fused": decode_fused,
         "overload": overload,
         "gates": {
             "coalesced_bitwise": True,
@@ -1363,6 +1579,7 @@ def main(csv=True, profile: str = "all"):
             "sharded_parity_min": SHARDED_PARITY_MIN,
             "sharded_tolerance": SHARDED_TOL,
             "decode_speedup_min": DECODE_SPEEDUP_MIN,
+            "decode_fused_speedup_min": DECODE_FUSED_SPEEDUP_MIN,
             "overload_goodput_min": OVERLOAD_GOODPUT_MIN,
         },
     }

@@ -43,6 +43,12 @@ python -m repro.launch.serve --engine flame --generate topk \
     --gen-steps 4 --beam-width 2 --pool-slots 64 --users 4 \
     --requests 12 --history 64 --buckets 16,8 --counts 8,16 --d-model 64
 
+echo "== smoke: fused generative decode (impl=fused, int8 pool) =="
+python -m repro.launch.serve --engine flame --generate topk --impl fused \
+    --pack-tails --pool-dtype int8 --gen-steps 4 --beam-width 2 \
+    --pool-slots 64 --users 4 --requests 12 --history 64 \
+    --buckets 16,8 --counts 8,16 --d-model 64
+
 echo "== smoke: chaos serving (fault injection, shed, degrade, watchdog) =="
 python -m repro.launch.serve --engine flame --history-cache \
     --fault-spec "dispatch:0.2,stall:0.1:0.005,evict:0.15" --fault-seed 7 \
@@ -70,6 +76,9 @@ python -m benchmarks.bench_serving --profile sharded
 
 echo "== bench gate: packed decode bitwise + gen-tokens/s vs unpacked =="
 python -m benchmarks.bench_serving --profile decode
+
+echo "== bench gate: fused decode parity + speedup + zero reroutes =="
+python -m benchmarks.bench_serving --profile decode_fused
 
 echo "== bench gate: EDF goodput-under-SLO vs FIFO + chaos liveness =="
 python -m benchmarks.bench_serving --profile overload

@@ -460,9 +460,14 @@ def append_token(params, history_kv, tokens, lengths, cfg: ModelConfig, *,
     """Write one chosen token's per-layer K/V into every block's padded
     beam cache at position ``lengths`` (the beam's next free slot).
 
-    ``tokens`` [B,1] ids; ``history_kv`` leaves must be PLAIN (dequantized)
-    [B,L,S_pad,Hkv,D] arrays with ``lengths < S_pad`` (the engine pads
-    caches by the generation budget up front; `dynamic_update_slice`
+    ``tokens`` [B,1] ids; ``history_kv`` leaves are [B,L,S_pad,Hkv,D] —
+    plain (dequantized) arrays under the chunked engine, or raw
+    ``(values, scale)`` pool views under ``impl="fused"`` (FKE v2: the
+    appended token is quantized IN-GRAPH against the entry's fixed
+    per-(row, layer, head) scale and scattered straight into the stored
+    int8 values, so the beam cache never leaves the pool's stored
+    precision).  ``lengths < S_pad`` is the caller's contract (the engine
+    pads caches by the generation budget up front; `dynamic_update_slice`
     clamps, so an unpadded full cache would silently overwrite its last
     history row).  The written K/V are computed by the same decode-pass
     layer chain that scored the token, so an incrementally-grown cache is
@@ -473,18 +478,29 @@ def append_token(params, history_kv, tokens, lengths, cfg: ModelConfig, *,
     new_kv = {}
     for i in range(cfg.climber.num_blocks):
         kv = history_kv[f"b{i}"]
-        kh, _ = _split_stored(kv["k"])
-        vh, _ = _split_stored(kv["v"])
+        kh, khs = _split_stored(kv["k"])
+        vh, vhs = _split_stored(kv["v"])
         _, (k_new, v_new) = _block_decode(
             params["blocks"][f"b{i}"], tok, kh, vh, lengths, cfg, impl,
-            collect_kv=True)
+            k_scale=khs, v_scale=vhs, collect_kv=True)
 
-        def scatter(cache, new):
+        def scatter(entry, new):
+            values, scale = entry if isinstance(entry, tuple) \
+                else (entry, None)
             new = jnp.moveaxis(new, 1, 0)               # [B,L,1,Hkv,D]
-            return jax.vmap(
+            if scale is not None:
+                # quantize against the entry's FIXED absmax scale
+                # ([B,L,1,Hkv,1]) — the stored rows keep their original
+                # codes, so only the appended slot rounds (and clips, if
+                # the token's K/V exceed the row's absmax)
+                new = jnp.clip(
+                    jnp.round(new.astype(jnp.float32) / scale * 127.0),
+                    -127, 127)
+            out = jax.vmap(
                 lambda c, t, n: jax.lax.dynamic_update_slice(
                     c, t.astype(c.dtype), (0, n, 0, 0)))(
-                cache, new, lengths)
+                values, new, lengths)
+            return out if not isinstance(entry, tuple) else (out, scale)
         new_kv[f"b{i}"] = {"k": scatter(kv["k"], k_new),
                            "v": scatter(kv["v"], v_new)}
     return new_kv

@@ -262,7 +262,18 @@ class CoalescePolicy:
     work may wait longer than the default window for better packing.  The
     collect loop uses the MINIMUM scale across the chunks it has collected,
     so one interactive co-rider flushes the whole dispatch.  ``None``
-    (and unknown tiers / tier-less chunks) means scale 1.0."""
+    (and unknown tiers / tier-less chunks) means scale 1.0.
+
+    ``pack_align`` rounds every packed segment's start offset up to a
+    multiple of this many candidate slots (FKE v2): the fused kernel
+    steers pooled-KV reads per ``bq``-sized q BLOCK through a scalar-
+    prefetched index sampled at each block's first candidate, so packed
+    rows feed ``path="kernel"`` only when no segment crosses a block
+    boundary.  1 (the default) packs densely — the jnp formulation does
+    not care; the engine raises it to the kernel ``bq`` under
+    ``impl="fused"`` (`fused_score.ops.set_packed_alignment` declares the
+    contract to the trace).  Alignment holes are dead slots: seg index 0 /
+    candidate -1, exactly like row-tail padding."""
 
     enabled: bool = True
     max_batch: int = 4
@@ -270,6 +281,7 @@ class CoalescePolicy:
     pack_rows: Optional[int] = None
     data_ways: int = 1
     tier_windows: Optional[Dict[str, float]] = None
+    pack_align: int = 1
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -280,6 +292,9 @@ class CoalescePolicy:
             raise ValueError(f"pack_rows must be >= 1, got {self.pack_rows}")
         if self.data_ways < 1:
             raise ValueError(f"data_ways must be >= 1, got {self.data_ways}")
+        if self.pack_align < 1:
+            raise ValueError(
+                f"pack_align must be >= 1, got {self.pack_align}")
 
     @property
     def batch(self) -> int:
@@ -342,17 +357,31 @@ class SegmentPacker:
     room (never splitting a segment across rows — a segment IS one
     request's chunk, so no segment ever crosses a request boundary by
     construction) and returns its ``(row, offset, kv_slot)`` placement, or
-    ``None`` when the segment doesn't fit this dispatch."""
+    ``None`` when the segment doesn't fit this dispatch.
 
-    def __init__(self, bucket: int, max_rows: int, max_kv: int):
-        assert bucket >= 1 and max_rows >= 1 and max_kv >= 1
+    ``align`` > 1 (FKE v2 kernel-path packing) rounds every segment's
+    start offset up to an ``align`` multiple before the fit check, so a
+    segment occupies ``[off, off + valid)`` with ``off % align == 0`` —
+    every ``align``-sized block a segment touches starts either at or
+    inside that segment, which is exactly the fused kernel's per-q-block
+    index-sampling contract (``bq == align``).  Alignment holes stay dead
+    slots (seg 0 / candidate -1 planes in ``_dispatch_packed``), same as
+    row-tail padding."""
+
+    def __init__(self, bucket: int, max_rows: int, max_kv: int,
+                 align: int = 1):
+        assert bucket >= 1 and max_rows >= 1 and max_kv >= 1 and align >= 1
         self.bucket = bucket
         self.max_rows = max_rows
         self.max_kv = max_kv
+        self.align = align
         self.fills: List[int] = []            # candidate slots used per row
         self.placements: List[Tuple[int, int, int]] = []  # (row, off, slot)
         self.slot_of: Dict[Hashable, int] = {}
         self.n_slots = 0
+
+    def _aligned(self, fill: int) -> int:
+        return -(-fill // self.align) * self.align
 
     def try_add(self, valid: int, ident: Hashable
                 ) -> Optional[Tuple[int, int, int]]:
@@ -363,7 +392,7 @@ class SegmentPacker:
         if slot is None and self.n_slots >= self.max_kv:
             return None
         row = next((i for i, f in enumerate(self.fills)
-                    if f + valid <= self.bucket), None)
+                    if self._aligned(f) + valid <= self.bucket), None)
         if row is None:
             if len(self.fills) >= self.max_rows:
                 return None
@@ -373,8 +402,8 @@ class SegmentPacker:
             slot = self.n_slots
             self.slot_of[ident] = slot
             self.n_slots += 1
-        off = self.fills[row]
-        self.fills[row] += valid
+        off = self._aligned(self.fills[row])
+        self.fills[row] = off + valid
         place = (row, off, slot)
         self.placements.append(place)
         return place
@@ -386,7 +415,8 @@ class SegmentPacker:
     def is_full(self) -> bool:
         """No further segment (not even a 1-candidate one) can be placed."""
         return (len(self.fills) == self.max_rows
-                and all(f >= self.bucket for f in self.fills))
+                and all(self._aligned(f) >= self.bucket
+                        for f in self.fills))
 
 
 class CoalescingOrchestrator:
@@ -658,7 +688,8 @@ class CoalescingOrchestrator:
         override (``set_window_override``)."""
         pol = self.policy
         n_lead = self._packed.get(kind)
-        packer = SegmentPacker(bucket, pol.rows, pol.batch) \
+        packer = SegmentPacker(bucket, pol.rows, pol.batch,
+                               align=pol.pack_align) \
             if n_lead is not None else None
 
         def take() -> bool:

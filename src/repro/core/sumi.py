@@ -187,11 +187,20 @@ def decode_candidate_attention(q, k_hist, v_hist, k_cand, v_cand, lengths, *,
     (same placement-invariance argument as
     :func:`_segment_packed_attention`).  ``impl="pallas"`` routes the
     flash-decode kernel (self K/V written into the cache row, ``lengths +
-    1``); every other impl runs the reference-structured jnp formulation
-    below (exact at serving scale: the chunked scoring path routes to
-    reference for decode-sized shapes)."""
+    1``); ``impl="fused"`` routes the FKE v2 lengths-masked two-segment
+    kernel (``fused_score.ops.fused_decode_attention``), which consumes
+    the STORED int8/bf16 cache plus scales directly — dequant folded into
+    the score/accumulator multiplies, no gather/concat materialization;
+    every other impl runs the reference-structured jnp formulation below
+    (exact at serving scale: the chunked scoring path routes to reference
+    for decode-sized shapes)."""
     if temperature is not None:
         q = q / jnp.asarray(temperature, q.dtype)
+    if impl == "fused":
+        from repro.kernels.fused_score import ops as fs_ops
+        return fs_ops.fused_decode_attention(
+            q, k_hist, v_hist, k_cand, v_cand, lengths, k_scale=k_scale,
+            v_scale=v_scale, row_index=row_index)
     if k_scale is not None or v_scale is not None \
             or k_hist.dtype != q.dtype:
         k_hist, v_hist = _dequant_gather(k_hist, v_hist, k_scale, v_scale,

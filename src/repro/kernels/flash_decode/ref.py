@@ -18,7 +18,12 @@ def decode_with_self(q, k_cache, v_cache, lengths, k_self, v_self):
     per-row valid length.  This is what ``sumi.decode_candidate_attention``
     must compute; the kernel route realizes it by writing each candidate's
     own K/V into its cache row and calling :func:`reference` /
-    ``flash_decode`` with ``lengths + 1``."""
+    ``flash_decode`` with ``lengths + 1``.  The FKE v2 fused decode route
+    (``kernels/fused_score``) computes the same function directly against
+    the pool's STORED int8/bf16 operand — its oracle,
+    ``fused_score.ref.decode_reference``, is this computation generalized
+    with in-front dequantization and 1-D/2-D ``row_index`` gathers, and
+    collapses to this function bitwise on plain operands."""
     b, m, h, d = q.shape
     s = k_cache.shape[1]
     hkv = k_cache.shape[2]

@@ -32,9 +32,20 @@ Two masking modes share the machinery:
                causal triangle of the suffix; ``steps = hist_steps + nq``
                with above-diagonal suffix blocks skipped via ``pl.when``.
 
-The per-(row, head) scales ride in scalar-prefetch (SMEM) next to the
-``row_index``; accumulators (m, l, acc) live in VMEM scratch across the
-sequential innermost grid axis, exactly like ``kernels/flash_attention``.
+A third serving workload — **generative decode** (FKE v2) — is cached
+mode with a per-row ``lengths`` bound on the history segment: the pooled
+operand is a PADDED, growing beam cache whose valid prefix per pool row
+is ``lengths[row]``, so the history mask tightens from the static
+``cols < s_hist`` to the prefetched ``cols < lens_ref[row]``.  Masked
+positions contribute exact zeros to the online softmax (the ``where``
+after ``exp`` is load-bearing for fully-masked blocks), so a padded
+cache scores bitwise-identically to a tight one — cached/extend callers
+pass ``lengths`` filled with ``s_hist``, making the bound a no-op.
+
+The per-(row, head) scales and the per-row lengths ride in scalar
+prefetch (SMEM) next to the ``row_index``; accumulators (m, l, acc) live
+in VMEM scratch across the sequential innermost grid axis, exactly like
+``kernels/flash_attention``.
 """
 from __future__ import annotations
 
@@ -48,7 +59,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _fused_kernel(idx_ref, ks_ref, vs_ref, q_ref, kh_ref, vh_ref,
+def _fused_kernel(idx_ref, lens_ref, ks_ref, vs_ref, q_ref, kh_ref, vh_ref,
                   kc_ref, vc_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   mode: str, h: int, g: int, bq: int, bk: int, sq: int,
                   s_hist: int, hist_steps: int, steps: int):
@@ -90,7 +101,11 @@ def _fused_kernel(idx_ref, ks_ref, vs_ref, q_ref, kh_ref, vh_ref,
         s = s * ks_ref[row, kvh]
         rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        _online_update(s, (rows < sq) & (cols < s_hist), v, vs_ref[row, kvh])
+        # per-row valid-prefix bound (decode: growing padded beam caches);
+        # cached/extend callers prefetch lens == s_hist, keeping this the
+        # static history mask bitwise
+        _online_update(s, (rows < sq) & (cols < lens_ref[row]), v,
+                       vs_ref[row, kvh])
 
     if mode == "cached":
         self_guard = kj == hist_steps
@@ -120,11 +135,13 @@ def _fused_kernel(idx_ref, ks_ref, vs_ref, q_ref, kh_ref, vh_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
-                       k_cand, v_cand, *, mode: str, sq: int, s_hist: int,
-                       bq: int = 128, bk: int = 128,
+def fused_score_kernel(row_index, lengths, k_scale, v_scale, q, k_hist,
+                       v_hist, k_cand, v_cand, *, mode: str, sq: int,
+                       s_hist: int, bq: int = 128, bk: int = 128,
                        interpret: bool = True):
     """q [B,H,Mp,D] (pre-scaled); k_hist/v_hist [U,Hkv,Sp,D] stored dtype;
+    lengths [U] int32 per-pool-row valid history prefix (<= s_hist; pass
+    ``full(s_hist)`` for the static cached/extend masks);
     k_scale/v_scale [U,Hkv] f32 multipliers (1.0 for unquantized);
     k_cand/v_cand [B,Hkv,Mp,D]; row_index [B, Mp//bq] int32 per-q-block
     pool-row gather (constant per row for plain dedup; per-segment for
@@ -151,10 +168,10 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
 
     grid = (b * h, nq, steps)
 
-    def q_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
+    def q_map(bh, qi, kj, idx_ref, lens_ref, ks_ref, vs_ref):
         return (bh // h, bh % h, qi, 0)
 
-    def kh_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
+    def kh_map(bh, qi, kj, idx_ref, lens_ref, ks_ref, vs_ref):
         # the dedup/packing gather, folded into the block read: q block qi
         # of batch row b pulls the blocks of pool row idx_ref[b, qi]
         # (clamped for self steps, whose loaded block is unused)
@@ -162,7 +179,7 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
                 jnp.minimum(kj, hist_steps - 1),
                 0)  # flamecheck: kernel-ok(pure scalar clamp of a grid index; Python min fails on the traced kj)
 
-    def kc_map(bh, qi, kj, idx_ref, ks_ref, vs_ref):
+    def kc_map(bh, qi, kj, idx_ref, lens_ref, ks_ref, vs_ref):
         if mode == "cached":
             cj = qi
         else:
@@ -171,7 +188,7 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
         return (bh // h, (bh % h) // g, cj, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,               # row_index, k_scale, v_scale
+        num_scalar_prefetch=4,       # row_index, lengths, k_scale, v_scale
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d), q_map),
@@ -192,4 +209,5 @@ def fused_score_kernel(row_index, k_scale, v_scale, q, k_hist, v_hist,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(row_index, k_scale, v_scale, q, k_hist, v_hist, k_cand, v_cand)
+    )(row_index, lengths, k_scale, v_scale, q, k_hist, v_hist, k_cand,
+      v_cand)

@@ -7,6 +7,9 @@ Entry points (model layout, [B,S,H,D]):
                               ``row_index`` welcome)
   ``fused_extend_attention``  causal suffix extension against pooled
                               prefix K/V
+  ``fused_decode_attention``  generative-decode candidate scoring: cached
+                              mode against PADDED growing beam caches,
+                              bounded per pool row by ``lengths`` (FKE v2)
   ``block_epilogue``          out-projection + residual + norm + FFN for
                               one transformer-block layer step, reusing
                               ``kernels/fused_ffn`` on TPU
@@ -82,6 +85,36 @@ def packed_reroute_count() -> int:
         return _packed_reroutes
 
 
+# Packed-dispatch alignment contract (process-wide, set by the engine
+# before its executors trace): a nonzero value declares that every
+# segment in a 2-D packed ``row_index`` starts at a multiple of that many
+# candidates — the SegmentPacker's ``align`` knob (core/dso.py) is the
+# producer.  With the contract declared, ``path="auto"`` keeps packed
+# calls on the kernel path (bq = the declared alignment, so sampling the
+# index at each q block's first candidate can never read across a
+# segment boundary) instead of rerouting to the jnp formulation.
+_packed_align = 0
+
+
+def set_packed_alignment(n: int) -> int:
+    """Declare the packed-segment alignment (0 clears). Returns the
+    previous value so callers can restore it."""
+    global _packed_align
+    n = int(n)
+    if n and (n < 8 or n % 8):
+        raise ValueError("packed alignment must be 0 or a multiple of 8 "
+                         f"(the f32 sublane tile), got {n}")
+    with _reroute_lock:
+        prev = _packed_align
+        _packed_align = n
+    return prev
+
+
+def packed_alignment() -> int:
+    with _reroute_lock:
+        return _packed_align
+
+
 # Segment-packed (2-D row_index) histories at/above this length skip the
 # per-candidate [B,M,S,Hkv,D] value gather and score via a dense all-rows
 # GEMM + exact one-hot selection instead.  The gather turns the score
@@ -121,12 +154,20 @@ def _segment_scores(qf, k_seg, scale):
 
 @functools.partial(jax.jit, static_argnames=("mode",))
 def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
-               row_index, mode: str):
+               row_index, lengths, mode: str):
     """Two-segment online-merged attention, no concat / no dense mask.
 
     ``cached``: history segment fully visible, self segment = one key per
     query (an O(M·D) einsum instead of the O(M²·D) masked block).
     ``extend``: prefix segment fully visible, suffix segment causal.
+
+    ``lengths`` (decode): per-pool-row valid history prefix over a padded
+    stored operand.  Masked columns are forced to exact -inf before the
+    segment max and exact 0 after the exp — both rewrites are bitwise
+    no-ops for fully-valid rows (``where(True, x, ·) == x``), which is
+    what keeps fused decode at zero generated tokens bitwise equal to
+    fused candidate scoring, and the post-exp zero is what keeps a fully
+    masked row (lengths == 0) exact rather than NaN.
     """
     b, m, h, d = q.shape
     hkv = k_cand.shape[2]
@@ -135,6 +176,18 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
     seg = row_index is not None and row_index.ndim == 2
     seg_gemm = seg and k_hist.shape[1] >= _SEG_GEMM_MIN_S
     onehot = None
+    hist_ok = None
+    if lengths is not None:
+        lens = jnp.asarray(lengths, jnp.int32)
+        if row_index is not None:
+            lens = jnp.take(lens, row_index, axis=0)     # [B] or [B,M]
+        pos = jnp.arange(k_hist.shape[1])
+        if lens.ndim == 2:
+            hist_ok = (pos[None, None, :] <
+                       lens[:, :, None])[:, None, None]  # [b,1,1,m,S]
+        else:
+            hist_ok = (pos[None, :] <
+                       lens[:, None])[:, None, None, None]   # [b,1,1,1,S]
     if row_index is not None:
         # the dedup gather runs on the STORED values (int8: 4x fewer
         # bytes than the dequantized rows the framework path gathered).
@@ -174,6 +227,8 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
                 k_scale, 2, 1)[:, :, None, :, None]      # [b,hkv,1,m,1]
     else:
         s_hist = _segment_scores(qf, k_hist, k_scale)    # [b,hkv,g,m,S]
+    if hist_ok is not None:
+        s_hist = jnp.where(hist_ok, s_hist, -1e30)
 
     if mode == "cached":
         # self segment: query i sees exactly key i — the diagonal einsum
@@ -181,6 +236,8 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
                             k_cand.astype(jnp.float32))
         m_all = jnp.maximum(s_hist.max(axis=-1), s_self)
         p_hist = jnp.exp(s_hist - m_all[..., None])
+        if hist_ok is not None:
+            p_hist = jnp.where(hist_ok, p_hist, 0.0)
         p_self = jnp.exp(s_self - m_all)
         l = p_hist.sum(axis=-1) + p_self
         if seg_gemm:
@@ -211,6 +268,8 @@ def _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
         s_suf = jnp.where(causal[None, None, None], s_suf, -1e30)
         m_all = jnp.maximum(s_hist.max(axis=-1), s_suf.max(axis=-1))
         p_hist = jnp.exp(s_hist - m_all[..., None])
+        if hist_ok is not None:
+            p_hist = jnp.where(hist_ok, p_hist, 0.0)
         p_suf = jnp.exp(s_suf - m_all[..., None])
         p_suf = jnp.where(causal[None, None, None], p_suf, 0.0)
         l = p_hist.sum(axis=-1) + p_suf.sum(axis=-1)
@@ -240,7 +299,7 @@ def _pad_to(x, axis, mult):
 @functools.partial(jax.jit, static_argnames=("mode", "bq", "bk",
                                              "interpret"))
 def _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
-                       row_index, mode: str, bq: int, bk: int,
+                       row_index, lengths, mode: str, bq: int, bk: int,
                        interpret: bool):
     b, m, h, d = q.shape
     u, s_hist, hkv, _ = k_hist.shape
@@ -273,8 +332,10 @@ def _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
         full = jnp.pad(row_index.astype(jnp.int32),
                        ((0, 0), (0, nq * bq - m)), mode="edge")
         idx = full[:, ::bq]
-    out = fused_score_kernel(idx, ks, vs, qp.astype(q.dtype), khp, vhp,
-                             kcp, vcp, mode=mode, sq=m, s_hist=s_hist,
+    lens = (jnp.full((u,), s_hist, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
+    out = fused_score_kernel(idx, lens, ks, vs, qp.astype(q.dtype), khp,
+                             vhp, kcp, vcp, mode=mode, sq=m, s_hist=s_hist,
                              bq=bq, bk=bk, interpret=interpret)
     return jnp.swapaxes(out[:, :, :m, :d], 1, 2)
 
@@ -285,13 +346,14 @@ def _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand, k_scale, v_scale,
 
 def _fused_attention(q, k_hist, v_hist, k_cand, v_cand, *, mode: str,
                      k_scale=None, v_scale=None, row_index=None,
-                     temperature=None, path: str = "auto",
+                     lengths=None, temperature=None, path: str = "auto",
                      interpret=None):
     if temperature is not None:
         q = q / jnp.asarray(temperature, q.dtype)
     u, hkv = k_hist.shape[0], k_hist.shape[2]
     ks = _norm_scale(k_scale, u, hkv)
     vs = _norm_scale(v_scale, u, hkv)
+    bq = 128
     if row_index is not None and row_index.ndim == 2:
         if mode != "cached":
             raise ValueError("per-candidate (segment-packed) row_index only "
@@ -299,17 +361,25 @@ def _fused_attention(q, k_hist, v_hist, k_cand, v_cand, *, mode: str,
         if row_index.shape != q.shape[:2]:
             raise ValueError(f"2-D row_index must be [B, M] = {q.shape[:2]}, "
                              f"got {row_index.shape}")
+        align = packed_alignment()
         if path == "auto":
-            # the kernel path steers KV per q BLOCK, so packed segments
-            # must be bq-aligned — a contract the serving packer does not
-            # yet guarantee (ROADMAP: packer `align` knob).  Sampling an
-            # unaligned index at block starts would silently score
-            # candidates against the wrong user's history, so auto routes
-            # per-candidate indices to the jnp formulation on every
-            # backend; explicit path="kernel" remains the tested
-            # aligned-segment contract.
-            path = "jnp"
-            _note_packed_reroute()
+            if align:
+                # the packer declared bq-aligned segments (SegmentPacker
+                # align knob), so per-q-block index sampling is safe: take
+                # the kernel path on TPU like any other fused call
+                path = _auto_path()
+            else:
+                # the kernel path steers KV per q BLOCK, so packed
+                # segments must be bq-aligned.  Sampling an unaligned
+                # index at block starts would silently score candidates
+                # against the wrong user's history, so auto routes
+                # per-candidate indices to the jnp formulation on every
+                # backend; explicit path="kernel" remains the tested
+                # aligned-segment contract.
+                path = "jnp"
+                _note_packed_reroute()
+        if align:
+            bq = align      # q blocks == declared segment alignment
     if k_hist.shape[1] == 0:
         raise ValueError("fused attention needs a non-empty history/prefix "
                          "segment (degenerate cases route to the framework "
@@ -320,12 +390,12 @@ def _fused_attention(q, k_hist, v_hist, k_cand, v_cand, *, mode: str,
         if interpret is None:
             interpret = default_interpret()
         return _fused_kernel_call(q, k_hist, v_hist, k_cand, v_cand,
-                                  ks, vs, row_index, mode, 128, 128,
-                                  interpret)
+                                  ks, vs, row_index, lengths, mode, bq,
+                                  128, interpret)
     if path != "jnp":
         raise ValueError(f"path must be auto|kernel|jnp, got {path!r}")
     return _fused_jnp(q, k_hist, v_hist, k_cand, v_cand, ks, vs,
-                      row_index, mode)
+                      row_index, lengths, mode)
 
 
 def fused_cached_attention(q, k_hist, v_hist, k_cand, v_cand, *,
@@ -342,6 +412,27 @@ def fused_cached_attention(q, k_hist, v_hist, k_cand, v_cand, *,
                             mode="cached", k_scale=k_scale, v_scale=v_scale,
                             row_index=row_index, temperature=temperature,
                             path=path, interpret=interpret)
+
+
+def fused_decode_attention(q, k_hist, v_hist, k_cand, v_cand, lengths, *,
+                           k_scale=None, v_scale=None, row_index=None,
+                           temperature=None, path: str = "auto",
+                           interpret=None):
+    """Generative-decode candidate scoring against padded beam caches.
+
+    Cached-mode fused attention with a per-pool-row valid-prefix bound:
+    ``k_hist``/``v_hist`` [U,S,Hkv,D] are PADDED growing caches (history
+    + appended generated tokens, S = s0 + max_steps) in the pool's stored
+    precision, and ``lengths`` [U] int32 bounds each row's valid prefix.
+    Candidates/queries follow :func:`fused_cached_attention` conventions,
+    including 1-D dedup and 2-D segment-packed ``row_index`` steering
+    (lengths are gathered per candidate through the same index).  At
+    ``lengths == S`` this is bitwise :func:`fused_cached_attention`."""
+    return _fused_attention(q, k_hist, v_hist, k_cand, v_cand,
+                            mode="cached", k_scale=k_scale, v_scale=v_scale,
+                            row_index=row_index, lengths=lengths,
+                            temperature=temperature, path=path,
+                            interpret=interpret)
 
 
 def fused_extend_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, *,

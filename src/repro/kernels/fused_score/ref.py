@@ -21,6 +21,9 @@ intermediate roundings).
 """
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
 from repro.models import attention as A
@@ -63,6 +66,47 @@ def cached_reference(q, k_hist, v_hist, k_cand, v_cand, *,
     v = jnp.concatenate([vh, v_cand.astype(dtype)], axis=1)
     return A.reference_attention(q, k, v, "sumi", n_history=n_history,
                                  q_offset=n_history)
+
+
+def decode_reference(q, k_hist, v_hist, k_cand, v_cand, lengths, *,
+                     k_scale=None, v_scale=None, row_index=None,
+                     kv_dtype=None, temperature=None):
+    """Generative-decode oracle: cached-candidate SUMI scoring over a
+    PADDED beam-cache operand whose valid prefix per pool row is
+    ``lengths[u]`` (<= S).  Dequantize -> gather (1-D per batch row or
+    2-D per candidate, lengths riding the same index) -> materialized
+    masked softmax: candidate i sees its row's valid history prefix plus
+    exactly its own key.  ``lengths == 0`` rows degenerate to a softmax
+    over the self key alone."""
+    dtype = kv_dtype or q.dtype
+    if temperature is not None:
+        q = q / jnp.asarray(temperature, q.dtype)
+    kh = dequantize_values(k_hist, k_scale, dtype)
+    vh = dequantize_values(v_hist, v_scale, dtype)
+    lens = jnp.asarray(lengths, jnp.int32)
+    if row_index is not None:
+        kh = jnp.take(kh, row_index, axis=0)
+        vh = jnp.take(vh, row_index, axis=0)
+        lens = jnp.take(lens, row_index, axis=0)
+    b, m, h, d = q.shape
+    hkv = k_cand.shape[2]
+    g = h // hkv
+    s = kh.shape[-3]
+    if kh.ndim == 4:                    # shared per batch row -> [B,M,...]
+        kh = jnp.broadcast_to(kh[:, None], (b, m) + kh.shape[1:])
+        vh = jnp.broadcast_to(vh[:, None], (b, m) + vh.shape[1:])
+    if lens.ndim == 1:
+        lens = jnp.broadcast_to(lens[:, None], (b, m))
+    qf = q.astype(jnp.float32).reshape(b, m, hkv, g, d) / math.sqrt(d)
+    s_hist = jnp.einsum("bmhgd,bmshd->bmhgs", qf, kh.astype(jnp.float32))
+    s_self = jnp.einsum("bmhgd,bmhd->bmhg", qf, k_cand.astype(jnp.float32))
+    ok = (jnp.arange(s)[None, None, :] < lens[:, :, None])
+    s_hist = jnp.where(ok[:, :, None, None, :], s_hist, -1e30)
+    logits = jnp.concatenate([s_hist, s_self[..., None]], axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bmhgs,bmshd->bmhgd", p[..., :s], vh.astype(jnp.float32))
+    o = o + p[..., s][..., None] * v_cand.astype(jnp.float32)[:, :, :, None, :]
+    return o.reshape(b, m, h, d).astype(q.dtype)
 
 
 def extend_reference(q, k_prefix, v_prefix, k_suffix, v_suffix, *,

@@ -8,6 +8,8 @@
         --generate topk --gen-steps 8     # generative candidate decode
     PYTHONPATH=src python -m repro.launch.serve --engine flame \
         --generate beam --beam-width 4
+    PYTHONPATH=src python -m repro.launch.serve --engine flame \
+        --generate topk --impl fused --pool-dtype int8   # FKE v2 decode
     PYTHONPATH=src python -m repro.launch.serve --engine implicit
     PYTHONPATH=src python -m repro.launch.serve --engine text --arch gemma3-12b
 
@@ -89,9 +91,6 @@ def serve_rec(args):
             print("[serve] --generate implies --history-cache (beams live "
                   "in the pooled-KV plane); enabling it")
             args.history_cache = True
-        if args.impl == "fused":
-            raise SystemExit("[serve] --generate does not support "
-                             "--impl fused yet (ROADMAP: fused decode)")
 
     kw = dict(n_history=args.history, feature_mode=args.feature_mode,
               max_pending=args.max_pending, impl=args.impl)
@@ -119,6 +118,8 @@ def serve_rec(args):
                   extend_refresh_limit=args.extend_refresh_limit,
                   pack_tails=args.pack_tails,
                   pack_rows=args.pack_rows if args.pack_rows > 0 else None,
+                  pack_align=args.pack_align if args.pack_align > 0
+                  else None,
                   deadline_s=args.deadline_ms * 1e-3)
         # ---- overload discipline / fault tolerance (ISSUE 9) ----
         tier_defaults = None
@@ -174,9 +175,12 @@ def serve_rec(args):
         # per-request token universes (zipf/jittered slate sizes -> ragged
         # decode dispatches), and each request asks for top-k or beam
         # generation instead of scoring
-        gen_cfg = (TopKConfig(k=args.beam_width, steps=args.gen_steps)
+        gen_eos = args.gen_eos if args.gen_eos >= 0 else None
+        gen_cfg = (TopKConfig(k=args.beam_width, steps=args.gen_steps,
+                              eos=gen_eos)
                    if gen_mode == "topk" else
-                   BeamConfig(width=args.beam_width, steps=args.gen_steps))
+                   BeamConfig(width=args.beam_width, steps=args.gen_steps,
+                              eos=gen_eos))
         for r in reqs:
             r["generate"] = gen_cfg
         print(f"[serve] generative decode: {gen_mode} width "
@@ -196,9 +200,12 @@ def serve_rec(args):
           f"p50 {res['p50_latency_ms']:.1f} ms | "
           f"p99 {res['p99_latency_ms']:.1f} ms")
     if chaos:
+        hint = (f" retry_after~{res['retry_after_mean_ms']:.0f}ms "
+                f"(x{res['retry_after_hinted']})"
+                if res.get("retry_after_hinted") else "")
         print(f"[serve] overload/chaos accounting: "
               f"resolved={res['resolved']} rejected={res['rejected']} "
-              f"failed={res['failed']} hung={res['hung']}")
+              f"failed={res['failed']} hung={res['hung']}{hint}")
         if res["hung"]:
             _print_metrics("engine metrics", eng.metrics())
             raise SystemExit(f"[serve] LIVENESS VIOLATION: {res['hung']} "
@@ -279,6 +286,14 @@ def main():
                          "--max-batch still sizes how many distinct users "
                          "one packed dispatch can steer to; 0 = auto "
                          "max_batch/4)")
+    ap.add_argument("--pack-align", type=int, default=0,
+                    help="start every packed candidate segment on a "
+                         "multiple of this (multiple of 8; 1 = plain "
+                         "first-fit): aligned segments are constant per "
+                         "fused q-block, so packed 2-D dispatches keep the "
+                         "kernel formulation instead of rerouting to jnp "
+                         "(0 = auto: 8 under --impl fused --pack-tails, "
+                         "else 1)")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="default per-request deadline budget: pending "
                          "chunks flush earliest-deadline-first and the "
@@ -339,6 +354,11 @@ def main():
     ap.add_argument("--beam-width", type=int, default=4,
                     help="hypotheses kept per step (beam width for "
                          "--generate beam, k for --generate topk)")
+    ap.add_argument("--gen-eos", type=int, default=-1,
+                    help="EOS item id: a hypothesis emitting it finishes "
+                         "early, and once every hypothesis has finished "
+                         "the remaining decode rounds are skipped "
+                         "(gen_early_exits metric; -1 = no EOS)")
     ap.add_argument("--gen-vocab", type=int, default=512,
                     help="fallback token-universe size when a generative "
                          "request carries no candidate restriction")

@@ -62,10 +62,13 @@ class TopKConfig:
     """Generative decode: grow ``k`` sequences greedily for ``steps`` steps
     (each step keeps the top-k single-token continuations of each sequence's
     own greedy path — k independent greedy beams seeded by the top-k first
-    tokens)."""
+    tokens).  ``eos`` (an item id) finishes a sequence early — a finished
+    sequence stops decoding and, once every sequence has finished, the
+    remaining steps are skipped (counted in ``gen_early_exits``)."""
 
     k: int = 4
     steps: int = 8
+    eos: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,7 +176,14 @@ class ResponseFuture:
 class RejectedError(RuntimeError):
     """Base of every admission-side rejection (overload discipline): the
     engine refused to spend compute on the request.  Callers that tolerate
-    shedding catch this one type; the concrete subclasses say why."""
+    shedding catch this one type; the concrete subclasses say why.
+
+    Shedding rejections may carry a ``retry_after_s`` attribute — the
+    engine's queue-delay-EWMA estimate of how long the current backlog
+    takes to drain — so a well-behaved caller backs off for about one
+    drain interval instead of hammering an overloaded engine."""
+
+    retry_after_s: Optional[float] = None
 
 
 class AdmissionQueueFull(RejectedError):

@@ -73,9 +73,10 @@ from repro.serving.api import (SLO_TIERS, TIER_RANK, AdmissionQueueFull,
                                ResponseFuture, ServeMetrics, ServeRequest,
                                ServeResponse, ShedError, WatchdogTimeout,
                                register_engine)
-from repro.kernels.fused_score.ops import packed_reroute_count
+from repro.kernels.fused_score.ops import (packed_reroute_count,
+                                           set_packed_alignment)
 from repro.serving.kv_cache import (HistoryKVPool, KVCacheManager,
-                                    quantize_kv, raw_kv_specs, raw_kv_view)
+                                    quantize_kv_graph, raw_kv_specs)
 
 _STOP = object()
 
@@ -352,12 +353,18 @@ class _PipelinedEngine:
             overloaded = time.perf_counter() + wait > rec.deadline_abs
         if not overloaded:
             return
+        # admission-control feedback: a shed caller should back off for
+        # about one queue-drain interval instead of hammering — the same
+        # queue-delay EWMA that detected the overload prices the hint
+        retry_after_s = self._predicted_wait_s(depth)
         victim = self._admission.shed_victim(rec.key)
         if victim is not None:
-            if _try_fail(victim.fut, ShedError(
-                    f"request {victim.fut.request.request_id} "
-                    f"({victim.tier}) shed: displaced by a higher-priority "
-                    f"arrival under overload")):
+            err = ShedError(
+                f"request {victim.fut.request.request_id} "
+                f"({victim.tier}) shed: displaced by a higher-priority "
+                f"arrival under overload")
+            err.retry_after_s = retry_after_s
+            if _try_fail(victim.fut, err):
                 self._metrics.incr(f"shed_{victim.tier}")
                 self._metrics.incr("shed_total")
             return
@@ -365,9 +372,11 @@ class _PipelinedEngine:
         # lowest-value work — shed it before it burns a queue slot
         self._metrics.incr(f"shed_{rec.tier}")
         self._metrics.incr("shed_total")
-        raise ShedError(
+        err = ShedError(
             f"request {rec.fut.request.request_id} ({rec.tier}) shed at "
             f"admission: queue overloaded and no lower-priority victim")
+        err.retry_after_s = retry_after_s
+        raise err
 
     def submit(self, request: ServeRequest, *,
                timeout: Optional[float] = None) -> ResponseFuture:
@@ -399,9 +408,11 @@ class _PipelinedEngine:
         try:
             self._admission.put(rec, timeout=timeout)
         except queue.Full:
-            raise AdmissionQueueFull(
-                f"admission queue full ({self._admission.maxsize} pending)"
-            ) from None
+            err = AdmissionQueueFull(
+                f"admission queue full ({self._admission.maxsize} pending)")
+            err.retry_after_s = self._predicted_wait_s(
+                self._admission.qsize())
+            raise err from None
         except RuntimeError:
             # queue closed mid-put: shutdown raced us
             _try_fail(fut, RuntimeError("engine shut down during submit"))
@@ -743,6 +754,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                  kv_dedup: Optional[bool] = None,
                  pack_tails: bool = False,
                  pack_rows: Optional[int] = None,
+                 pack_align: Optional[int] = None,
                  deadline_s: float = 0.0,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  generate: int = 0,
@@ -781,6 +793,23 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             # sizes the unique-KV axis (distinct users per dispatch).
             pack_rows = max(1, max_batch // 4)
         self._pack_rows = pack_rows
+        # bq-aligned packed dispatch (FKE v2): when the packer starts every
+        # candidate segment on a multiple of the kernel's q-block size, 2-D
+        # seg indices are constant per block and the packed fused families
+        # keep the kernel formulation instead of silently rerouting to jnp.
+        # Default: align to the Pallas sublane quantum under fused packing,
+        # plain first-fit (align 1, bitwise-identical layouts) elsewhere.
+        if pack_align is None:
+            pack_align = 8 if (self._fused and pack_tails) else 1
+        pack_align = int(pack_align)
+        if pack_align > 1 and pack_align % 8:
+            raise ValueError(
+                f"pack_align must be 1 (unaligned) or a multiple of 8 "
+                f"(Pallas sublane quantum), got {pack_align}")
+        self._pack_align = pack_align
+        # value for the fused-ops module knob at TRACE time: 0 declares
+        # "no alignment contract" (2-D kernel dispatch reroutes to jnp)
+        self._ops_pack_align = pack_align if pack_align > 1 else 0
         self._deadline_s = float(deadline_s)
         if pack_tails and not history_cache:
             raise ValueError(
@@ -848,6 +877,10 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                 if self._fused else kv_specs
             cleaves, self._cached_treedef = jax.tree.flatten(cached_specs)
             self._cached_row_specs = cleaves
+            # compute dtype the stored representation dequantizes back to
+            # (prequantized puts must record it so later dequantizing
+            # lookups round-trip to the executors' compiled input dtype)
+            self._kv_compute_dtype = jax.tree.leaves(kv_specs)[0].dtype
             if kv_dedup is None:
                 # auto: ON for accelerator backends (each deduped row is a
                 # skipped H2D transfer) and, under the fused impl, on EVERY
@@ -877,12 +910,6 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     "generate>0 needs history_cache=True: in-flight beams "
                     "live in the HistoryKVPool as growing entries and the "
                     "decode step reads pooled history KV as its prompt")
-            if self._fused:
-                raise ValueError(
-                    "generate>0 under impl='fused' is not supported yet: "
-                    "the decode executors consume dequantized padded beam "
-                    "caches; the raw-row fused decode epilogue rides "
-                    "ROADMAP item 3 (fused history encode)")
             if mesh is not None:
                 raise ValueError(
                     "generate>0 under a mesh is not supported yet: beam "
@@ -894,9 +921,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     "append_token generative serving surface")
             # decode/append executors speak PADDED beam caches: the cached
             # row specs with ``generate`` extra slots on the sequence axis,
-            # filled one per appended token (valid prefix = lengths)
+            # filled one per appended token (valid prefix = lengths).
+            # Under the fused impl the raw specs interleave per-(layer,
+            # head) scale leaves (trailing singleton) with the value
+            # leaves; a beam keeps its ROOT scales for the whole
+            # generation (appended tokens quantize against them in the
+            # epilogue), so scale leaves don't grow with the beam
             self._decode_row_specs = tuple(
-                jax.ShapeDtypeStruct(
+                s if s.shape[-1] == 1 else jax.ShapeDtypeStruct(
                     s.shape[:2] + (s.shape[2] + self._generate,)
                     + s.shape[3:], s.dtype)
                 for s in self._cached_row_specs)
@@ -930,10 +962,19 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                           jax.ShapeDtypeStruct((batch, bucket), jnp.int32),
                           side_spec(batch))
             elif kind == "encode":
+                # Under the fused impl the executor quantizes IN-EPILOGUE
+                # (FKE v2): its output is the pool's stored representation
+                # — (values, scale) leaves from quantize_kv_graph — so a
+                # miss pools what it just computed via put(prequantized=
+                # True) and scores from the same leaves, with no separate
+                # quantize pass and no raw read-back
                 def fn(history, side):
-                    return bundle.encode_history(
+                    kv = bundle.encode_history(
                         self.params, {"history": history, "side": side},
                         impl=self.impl)
+                    if self._fused:
+                        kv = quantize_kv_graph(kv, self.history_pool.dtype)
+                    return kv
                 shapes = (hist_spec(batch), side_spec(batch))
             elif kind == "extend":
                 # bucket = trusted prefix length: re-encode window positions
@@ -945,9 +986,13 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     *kv_leaves, history, side = args
                     kv = jax.tree.unflatten(self._cached_treedef,
                                             list(kv_leaves))
-                    return bundle.extend_history(
+                    out = bundle.extend_history(
                         self.params, kv, {"history": history, "side": side},
                         prefix_len=bucket, impl=self.impl)
+                    if self._fused:
+                        # in-epilogue re-quantize: same contract as encode
+                        out = quantize_kv_graph(out, self.history_pool.dtype)
+                    return out
                 shapes = cached_row_shapes(batch) + (hist_spec(batch),
                                                      side_spec(batch))
             elif kind == "cached":
@@ -1055,24 +1100,35 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     jax.ShapeDtypeStruct((batch, 1), jnp.int32))
             else:
                 raise ValueError(kind)
-            if self.mesh is not None:
-                # attach the resolved NamedSharding specs to the AOT
-                # signature: the executor consumes its operands in exactly
-                # the layout the dispatcher stacks / the pool stores them,
-                # so the steady-state hot path never reshards.  Tracing
-                # under mesh_rules() binds the model's constrain_ctx
-                # annotations (and the impl="cp" shard_map route) to the
-                # same rule table.
-                shapes = tuple(
-                    jax.ShapeDtypeStruct(s.shape, s.dtype,
-                                         sharding=self._arg_sharding(s.shape))
-                    for s in shapes)
-                out_sh = jax.tree.map(lambda s: self._arg_sharding(s.shape),
-                                      jax.eval_shape(fn, *shapes))
-                with shd.mesh_rules(self.mesh, self._shard_rules):
-                    return jax.jit(fn, out_shardings=out_sh) \
-                        .lower(*shapes).compile()
-            return jax.jit(fn).lower(*shapes).compile()
+            # declare the packer's bq-alignment contract for the duration
+            # of THIS trace: the fused ops module consults it when a 2-D
+            # seg index reaches _fused_attention, and the knob is process-
+            # wide — scoping it to the compile keeps engines with
+            # different pack_align settings from leaking into each other
+            prev_align = set_packed_alignment(self._ops_pack_align)
+            try:
+                if self.mesh is not None:
+                    # attach the resolved NamedSharding specs to the AOT
+                    # signature: the executor consumes its operands in
+                    # exactly the layout the dispatcher stacks / the pool
+                    # stores them, so the steady-state hot path never
+                    # reshards.  Tracing under mesh_rules() binds the
+                    # model's constrain_ctx annotations (and the impl="cp"
+                    # shard_map route) to the same rule table.
+                    shapes = tuple(
+                        jax.ShapeDtypeStruct(
+                            s.shape, s.dtype,
+                            sharding=self._arg_sharding(s.shape))
+                        for s in shapes)
+                    out_sh = jax.tree.map(
+                        lambda s: self._arg_sharding(s.shape),
+                        jax.eval_shape(fn, *shapes))
+                    with shd.mesh_rules(self.mesh, self._shard_rules):
+                        return jax.jit(fn, out_shardings=out_sh) \
+                            .lower(*shapes).compile()
+                return jax.jit(fn).lower(*shapes).compile()
+            finally:
+                set_packed_alignment(prev_align)
 
         # the bucket key gains a hit/miss dimension: candidate-only
         # ("cached") executors serve pool traffic, "encode" repopulates the
@@ -1113,6 +1169,7 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         policy = DSO.CoalescePolicy(enabled=coalesce, max_batch=max_batch,
                                     window_s=window_s,
                                     pack_rows=self._pack_rows,
+                                    pack_align=self._pack_align,
                                     data_ways=self._data_ways,
                                     tier_windows=dict(_TIER_WINDOW_SCALE))
         self.dso = DSO.CoalescingOrchestrator(
@@ -1342,22 +1399,26 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
             kv = tuple(np.array(a) if isinstance(a, np.ndarray) else a
                        for a in jax.tree.leaves(
                            kv_tree))  # flamecheck: host-sync-ok(copies host VIEWS out of the padded stacked parent so pooling them cannot pin it)
-            self.history_pool.put(key, fp, kv, hist_window=hist[0],
-                                  refreshes=refreshes)
+            if self._fused:
+                # in-epilogue quantize (FKE v2): the encode/extend
+                # executors already emitted the pool's stored
+                # representation, so pool it as-is (no second quantize
+                # pass) and score from the very same leaves — hit, wait,
+                # encode and extend paths all share one representation
+                # without the raw read-back the un-fused flow needs
+                self.history_pool.put(
+                    key, fp, jax.tree.unflatten(self._cached_treedef,
+                                                list(kv)),
+                    hist_window=hist[0], refreshes=refreshes,
+                    prequantized=True,
+                    compute_dtype=self._kv_compute_dtype)
+            else:
+                self.history_pool.put(key, fp, kv, hist_window=hist[0],
+                                      refreshes=refreshes)
             self._metrics.set_gauge("pool_bytes_used",
                                     self.history_pool.bytes_used)
             for i, b in enumerate(self.history_pool.shard_bytes()):
                 self._metrics.set_gauge(f"pool_bytes_used_shard{i}", b)
-            if self._fused:
-                # the fused executors speak the pool's raw (quantized)
-                # representation: read the entry back as stored — a racing
-                # eviction falls back to a local quantize of the same rows,
-                # so hit- and miss-path scores share one representation
-                raw = self.history_pool.peek(key, fp, raw=True)
-                if raw is None:
-                    raw = raw_kv_view(quantize_kv(kv,
-                                                  self.history_pool.dtype)[0])
-                kv = self._cached_rows(raw)
             fut.set_result(kv)
         except BaseException as e:
             fut.set_exception(e)
@@ -1446,10 +1507,14 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
     def _pad_beam_leaves(self, kv_leaves) -> tuple:
         """Pad base (s0-row) cache leaves to the decode executors' S_pad =
         s0 + generate slots — once per request root, on the host; every
-        subsequent append is a fixed-shape in-place write."""
+        subsequent append is a fixed-shape in-place write.  Raw (fused)
+        leaf tuples interleave per-(layer, head) scale leaves — trailing
+        singleton — which stay at their root shape: appended tokens
+        quantize against the root scales (see ``_decode_row_specs``)."""
         pad = ((0, 0), (0, 0), (0, self._generate), (0, 0), (0, 0))
         return tuple(
-            np.pad(np.asarray(a), pad) for a in
+            np.asarray(a) if a.shape[-1] == 1 else np.pad(np.asarray(a), pad)
+            for a in
             kv_leaves)  # flamecheck: host-sync-ok(one-time root-cache padding; beam orchestration is host-side by design)
 
     def _copy_kv_rows(self, kv_tree) -> tuple:
@@ -1482,7 +1547,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         every generated token; ``gen_replays`` counts these)."""
         if beam.leaves is not None:
             return beam.leaves
-        kv, status, _ = self.history_pool.lookup(beam.pool_key, beam.pool_fp)
+        kv, status, _ = self.history_pool.lookup(beam.pool_key, beam.pool_fp,
+                                                 raw=self._fused)
         if status == "hit":
             return tuple(jax.tree.leaves(kv))
         self._metrics.incr("gen_replays")
@@ -1507,7 +1573,17 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         governs the beam like any user entry; on reject it stays local."""
         key = ("g", req.request_id, slot)
         fp = (hist_fp,) + beam.tokens
-        if self.history_pool.put(key, fp, leaves):
+        if self._fused:
+            # the appended cache is already the stored representation
+            # (climber's append epilogue quantizes the new token against
+            # the root scales in-graph) — park it without re-quantizing
+            accepted = self.history_pool.put(
+                key, fp, jax.tree.unflatten(self._cached_treedef,
+                                            list(leaves)),
+                prequantized=True, compute_dtype=self._kv_compute_dtype)
+        else:
+            accepted = self.history_pool.put(key, fp, leaves)
+        if accepted:
             beam.pool_key, beam.pool_fp, beam.leaves = key, fp, None
         else:
             beam.leaves = leaves
@@ -1517,8 +1593,8 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
         from repro.serving.api import BeamConfig, TopKConfig
         gen = req.generate
         if isinstance(gen, TopKConfig):
-            width, steps, eos, beam_mode = int(gen.k), int(gen.steps), None, \
-                False
+            width, steps, eos, beam_mode = int(gen.k), int(gen.steps), \
+                gen.eos, False
         elif isinstance(gen, BeamConfig):
             width, steps, eos, beam_mode = int(gen.width), int(gen.steps), \
                 gen.eos, True
@@ -1647,9 +1723,22 @@ class FlameEngine(_SideFeatureMixin, _PipelinedEngine):
                     self._park_beam(req, i, beams[i], leaves, memo[1])
             if step == steps:
                 break
+            if self._faults is not None:
+                # mid-generation eviction pressure: a storm HERE lands in
+                # the window between a beam's park and its next-round
+                # lookup — the only place an eviction can force a replay
+                # (request-start storms almost never catch it)
+                dropped = self._faults.pool_storm(self.history_pool)
+                if dropped:
+                    self._metrics.incr("fault_pool_evictions", dropped)
             # ---- decode round over the live hypotheses ----
             live = [i for i, b in enumerate(beams) if not b.finished]
             if not live:
+                # EOS early exit: every hypothesis terminated with decode
+                # budget left — the remaining rounds' decode/append
+                # dispatches are skipped entirely (step < steps holds
+                # here: the final round breaks before this check)
+                self._metrics.incr("gen_early_exits")
                 break
             leaves_of = {}
             dfuts = []

@@ -173,6 +173,37 @@ def quantize_kv(kv, dtype: str):
     return payload, payload_bytes(payload)
 
 
+def quantize_kv_graph(kv, dtype: str):
+    """In-graph pool quantization for fused encode/append epilogues
+    (FKE v2): emits the :func:`raw_kv_view` structure directly —
+    ``(int8 values, f32 scale)`` tuples, ``(bf16 values, None)`` casts,
+    or plain native leaves — so a jitted executor's OUTPUT already *is*
+    the pool's stored representation and ``put(prequantized=True)`` can
+    admit it without a separate quantize pass (and without ever
+    materializing the fp KV on the host).  Op-for-op the same jnp
+    computation as :func:`quantize_leaf`, so the emitted codes/scales are
+    bitwise identical to a post-hoc :func:`quantize_kv` of the same
+    values (asserted in tests/test_decode_serving.py)."""
+    if dtype == "native":
+        return kv
+
+    def one(a):
+        a = jnp.asarray(a)
+        if dtype == "bf16":
+            return (a.astype(jnp.bfloat16), None)
+        if dtype == "int8":
+            af = a.astype(jnp.float32)
+            scale = jnp.maximum(
+                jnp.max(jnp.abs(af), axis=_scale_axes(a.ndim),
+                        keepdims=True), 1e-8)
+            q = jnp.clip(jnp.round(af / scale * 127.0),
+                         -127, 127).astype(jnp.int8)
+            return (q, scale)
+        raise ValueError(
+            f"pool dtype must be one of {POOL_DTYPES}, got {dtype!r}")
+    return jax.tree.map(one, kv)
+
+
 def _shard_elems(shape, shard_spec) -> int:
     """Element count ONE shard holds of an array with this global shape.
     ``shard_spec`` maps a shape to a NamedSharding (or None = replicated);
@@ -591,26 +622,52 @@ class HistoryKVPool:
 
     def put(self, key: Hashable, fingerprint: Hashable, kv,
             hist_window: Optional[np.ndarray] = None,
-            refreshes: int = 0) -> bool:
+            refreshes: int = 0, *, prequantized: bool = False,
+            compute_dtype=None) -> bool:
         """Quantize + admit; returns False when the entry was rejected for
         exceeding ``budget_bytes`` on its own.  ``refreshes`` records how
         many incremental extensions are layered on this entry since its
         last full encode (the engine's extension-drift cap reads it back
-        through :class:`StaleBasis`)."""
-        # size precheck BEFORE quantizing/placing: a rejected entry must
-        # not pay the (multi-MB at paper scale) quantize + transfer cost.
-        # The per-shard share is prechecked too — an entry whose replicated
-        # leaves alone exceed one shard's budget slice can never be held
-        nbytes = quantized_nbytes(kv, self.dtype)
-        shard_nbytes = nbytes if self._shard_spec is None else \
-            quantized_nbytes(kv, self.dtype, shard_spec=self._shard_spec)
+        through :class:`StaleBasis`).
+
+        ``prequantized=True`` (FKE v2 in-epilogue quantization): ``kv``
+        already IS the stored representation — the :func:`raw_kv_view`
+        structure a fused encode/append epilogue emits
+        (:func:`quantize_kv_graph`), with ``(values, scale)`` tuples as
+        quantized leaves — and is wrapped into pool entries with no
+        quantize pass.  ``compute_dtype`` (default f32) is what
+        dequantizing lookups hand back."""
+        payload = None
+        if prequantized:
+            cdt = jnp.dtype(compute_dtype or jnp.float32)
+            payload = jax.tree.map(
+                lambda x: _QuantLeaf(x[0], x[1], cdt)
+                if isinstance(x, tuple) else x,
+                kv, is_leaf=lambda x: isinstance(x, tuple))
+            nbytes = payload_bytes(payload)
+            shard_nbytes = nbytes if self._shard_spec is None else sum(
+                _shard_elems(a.shape, self._shard_spec)
+                * jnp.dtype(a.dtype).itemsize
+                for a in _stored_arrays(payload))
+        else:
+            # size precheck BEFORE quantizing/placing: a rejected entry
+            # must not pay the (multi-MB at paper scale) quantize +
+            # transfer cost.  The per-shard share is prechecked too — an
+            # entry whose replicated leaves alone exceed one shard's
+            # budget slice can never be held.  (Prequantized payloads
+            # above skip the quantize pass entirely, so their precheck is
+            # plain shape arithmetic over the stored arrays.)
+            nbytes = quantized_nbytes(kv, self.dtype)
+            shard_nbytes = nbytes if self._shard_spec is None else \
+                quantized_nbytes(kv, self.dtype, shard_spec=self._shard_spec)
         if (self.budget_bytes is not None and nbytes > self.budget_bytes) \
                 or (self._shard_budget is not None
                     and shard_nbytes > self._shard_budget):
             with self._lock:
                 self.rejects += 1
             return False
-        payload, nbytes = quantize_kv(kv, self.dtype)
+        if payload is None:
+            payload, nbytes = quantize_kv(kv, self.dtype)
         payload = self._place_stored(payload, self.placement)
         if hist_window is not None:
             hist_window = np.array(

@@ -135,12 +135,15 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
     raised (``rejected`` / ``failed`` in the result; latency metrics cover
     the ``resolved`` survivors), and any future still unresolved after
     ``result_timeout_s`` counts as ``hung`` — the liveness number the
-    chaos gate asserts is zero.  The default (False) keeps the strict v1
+    chaos gate asserts is zero.  Rejections carrying a ``retry_after_s``
+    backoff hint aggregate into ``retry_after_hinted`` /
+    ``retry_after_mean_ms``.  The default (False) keeps the strict v1
     contract: any rejection or failure raises."""
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     futs = []
     rejected = 0
+    retry_hints = []       # retry_after_s backoff hints on rejections
     for r in requests:
         if arrival_gap_s > 0:
             time.sleep(float(rng.uniform(0, arrival_gap_s)))
@@ -150,10 +153,12 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
                 user_id=r.get("user_id"), deadline_s=r.get("deadline_s"),
                 generate=r.get("generate"),
                 slo_tier=r.get("slo_tier", "standard"))))
-        except RejectedError:
+        except RejectedError as e:
             if not tolerate_errors:
                 raise
             rejected += 1
+            if getattr(e, "retry_after_s", None) is not None:
+                retry_hints.append(float(e.retry_after_s))
             futs.append(None)
     resps, out_reqs, failed, hung = [], [], 0, 0
     for i, f in enumerate(futs):
@@ -167,6 +172,14 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
             if not tolerate_errors:
                 raise
             hung += 1
+        except RejectedError as e:
+            # a queued victim displaced under overload: the ShedError is
+            # delivered through its future and prices the same backoff
+            if not tolerate_errors:
+                raise
+            failed += 1
+            if getattr(e, "retry_after_s", None) is not None:
+                retry_hints.append(float(e.retry_after_s))
         except BaseException:
             if not tolerate_errors:
                 raise
@@ -185,6 +198,9 @@ def run_workload_async(engine: "ServingEngine", requests: List[Dict], *,
         "rejected": rejected,
         "failed": failed,
         "hung": hung,
+        "retry_after_hinted": len(retry_hints),
+        "retry_after_mean_ms": float(np.mean(retry_hints) * 1e3)
+        if retry_hints else 0.0,
         "total_s": total,
         "throughput_items_per_s": items / total,
         "mean_latency_ms": float(la.mean() * 1e3),

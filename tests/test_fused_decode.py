@@ -1,0 +1,517 @@
+"""FKE v2 (ISSUE 10): fused generative decode test suite.
+
+Layers of coverage:
+
+  1. op level — ``fused_decode_attention`` (jnp fast path + Pallas kernel
+     in interpret mode) against the fp32 ``fused_score/ref.py::
+     decode_reference`` oracle: int8/native stored operands, dedup
+     row-index, ragged per-row lengths including zero-length rows, and
+     universes smaller than one q block;
+  2. root identity — decode at zero generated tokens (``lengths == S``)
+     is BITWISE the fused cached scoring it generalizes, at the op level
+     and through ``decode_logits`` on raw int8 pool views (padded beam
+     caches included: masked slots get exact-zero weight);
+  3. in-epilogue quantize — a jitted ``quantize_kv_graph`` emits codes
+     and scales bitwise identical to the post-hoc ``quantize_kv`` of the
+     same values, for int8 and bf16 pools;
+  4. packed dispatch alignment — ``SegmentPacker(align=8)`` starts every
+     segment on an 8-multiple (fuzzed: no align-sized block ever mixes
+     two segments), ``align=1`` reproduces the legacy first-fit layouts
+     exactly, ``set_packed_alignment`` validates its contract, and a 2-D
+     seg index dispatched under a declared alignment takes the auto path
+     with ZERO ``packed_kernel_reroutes``;
+  5. engine level — fused generative decode (mixed top-k/beam) reproduces
+     the chunked engine token for token on a native pool; the packed
+     fused engine reproduces the unpacked fused engine on an int8 pool
+     with zero kernel reroutes; EOS finishes sequences early against a
+     truncation oracle (``gen_early_exits``); beam width wider than the
+     universe; all-zero histories exercise the int8 scale-underflow floor.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import climber as C
+from repro.core.dso import SegmentPacker
+from repro.core.pda import RemoteFeatureStore
+from repro.kernels.fused_score import ops as fs_ops
+from repro.kernels.fused_score import ref as fs_ref
+from repro.models import build_model
+from repro.serving import FlameEngine
+from repro.serving.api import BeamConfig, TopKConfig
+from repro.serving.kv_cache import (quantize_kv, quantize_kv_graph,
+                                    quantize_leaf, raw_kv_view)
+from repro.serving.scheduler import run_workload_async
+from repro.types import ClimberConfig
+
+TOL = 2e-5
+QTOL = 2e-2
+N_HIST = 16
+VOCAB = 64
+
+
+def _mk(seed, b, m, h, hkv, d, s, u=None):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    u = b if u is None else u
+    return dict(
+        q=jax.random.normal(ks[0], (b, m, h, d)),
+        k_hist=jax.random.normal(ks[1], (u, s, hkv, d)),
+        v_hist=jax.random.normal(ks[2], (u, s, hkv, d)),
+        k_cand=jax.random.normal(ks[3], (b, m, hkv, d)),
+        v_cand=jax.random.normal(ks[4], (b, m, hkv, d)),
+    )
+
+
+def _quant(t, dtype):
+    if dtype == "native":
+        return dict(t, k_scale=None, v_scale=None), TOL
+    qk = quantize_leaf(t["k_hist"], dtype)
+    qv = quantize_leaf(t["v_hist"], dtype)
+    return dict(t, k_hist=qk.q, v_hist=qv.q, k_scale=qk.scale,
+                v_scale=qv.scale), (QTOL if dtype == "int8" else TOL)
+
+
+# ---------------------------------------------------------------------------
+# 1. op-level parity vs the fp32 decode oracle
+# ---------------------------------------------------------------------------
+
+DEC_CASES = [
+    # b, m, h, hkv, d, s, u, idx?, dtype
+    (2, 8, 2, 2, 16, 24, None, False, "native"),
+    (3, 12, 4, 2, 16, 37, 2, True, "int8"),      # ragged + dedup idx
+    (2, 5, 4, 2, 16, 9, None, False, "int8"),    # gqa, tiny history
+    (1, 1, 2, 2, 32, 8, None, False, "native"),  # universe < one q block
+]
+_IDS = [f"{c[8]}-s{c[5]}-m{c[1]}" + ("-idx" if c[7] else "")
+        for c in DEC_CASES]
+
+
+@pytest.mark.parametrize("case", DEC_CASES, ids=_IDS)
+@pytest.mark.parametrize("path", ["jnp", "kernel"])
+def test_decode_op_parity(case, path):
+    """Ragged per-row lengths (a zero-length row included) over stored
+    operands, both formulations, vs the dequantize-everything oracle."""
+    b, m, h, hkv, d, s, u, use_idx, dtype = case
+    t = _mk(b * 77 + s, b, m, h, hkv, d, s, u)
+    t, tol = _quant(t, dtype)
+    rng = np.random.default_rng(b + s)
+    lengths = rng.integers(0, s + 1, u or b).astype(np.int32)
+    lengths[0] = 0                                  # an empty-history row
+    idx = jnp.asarray(rng.integers(0, u or b, b), jnp.int32) \
+        if use_idx else None
+    ref = fs_ref.decode_reference(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"], lengths,
+        k_scale=t["k_scale"], v_scale=t["v_scale"], row_index=idx,
+        kv_dtype=jnp.float32)
+    got = fs_ops.fused_decode_attention(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"], lengths,
+        k_scale=t["k_scale"], v_scale=t["v_scale"], row_index=idx,
+        path=path)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("path", ["jnp", "kernel"])
+def test_decode_zero_lengths_is_self_only(path):
+    """All-zero lengths mask the whole history: softmax collapses onto the
+    candidate's self logit, so the output IS v_cand (cast to q dtype)."""
+    t = _mk(11, b=2, m=6, h=2, hkv=2, d=16, s=16)
+    lengths = np.zeros(2, np.int32)
+    got = fs_ops.fused_decode_attention(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"], lengths,
+        path=path)
+    b, m, hkv, d = t["v_cand"].shape
+    g = t["q"].shape[2] // hkv
+    want = jnp.broadcast_to(t["v_cand"][:, :, :, None, :],
+                            (b, m, hkv, g, d)).reshape(b, m, hkv * g, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("path", ["jnp", "kernel"])
+def test_decode_root_identity_bitwise(path):
+    """Decode at zero generated tokens (lengths == S) is the fused cached
+    scoring it generalizes on the same stored int8 operands — BITWISE on
+    the kernel path (an everywhere-true mask is arithmetic identity inside
+    one kernel body); the jnp twin traces a different graph for the masked
+    form and XLA's CPU fusion reassociates the dot at 1 ulp, so it gates
+    at float-ulp tolerance instead."""
+    t = _mk(21, b=2, m=10, h=2, hkv=2, d=16, s=24, u=3)
+    t, _ = _quant(t, "int8")
+    idx = jnp.asarray([2, 0], jnp.int32)
+    lengths = np.full(3, 24, np.int32)
+    score = fs_ops.fused_cached_attention(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"],
+        k_scale=t["k_scale"], v_scale=t["v_scale"], row_index=idx, path=path)
+    dec = fs_ops.fused_decode_attention(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"], lengths,
+        k_scale=t["k_scale"], v_scale=t["v_scale"], row_index=idx, path=path)
+    if path == "kernel":
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(score))
+    else:
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(score),
+                                   atol=2e-6, rtol=0)
+
+
+@pytest.mark.parametrize("path", ["jnp", "kernel"])
+@pytest.mark.parametrize("fill", [0.0, 2.5])
+def test_decode_int8_scale_underflow_all_equal_rows(path, fill):
+    """All-equal (and all-zero) history rows: the absmax scale hits its
+    1e-8 floor (or a constant), quantization must not divide by zero and
+    the masked softmax must stay finite and match the oracle."""
+    b, m, h, hkv, d, s = 2, 4, 2, 2, 16, 16
+    t = _mk(31, b, m, h, hkv, d, s)
+    t["k_hist"] = jnp.full((b, s, hkv, d), fill)
+    t["v_hist"] = jnp.full((b, s, hkv, d), fill)
+    t, _ = _quant(t, "int8")
+    lengths = np.asarray([s, 3], np.int32)
+    ref = fs_ref.decode_reference(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"], lengths,
+        k_scale=t["k_scale"], v_scale=t["v_scale"], kv_dtype=jnp.float32)
+    got = fs_ops.fused_decode_attention(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"], lengths,
+        k_scale=t["k_scale"], v_scale=t["v_scale"], path=path)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=QTOL, rtol=QTOL)
+
+
+# ---------------------------------------------------------------------------
+# 2. model-level root identity on raw pool views
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def climber_setup():
+    cfg = dataclasses.replace(
+        get_config("climber"), vocab_size=VOCAB, d_model=64, d_ff=128,
+        n_heads=2, n_kv_heads=2, head_dim=32,
+        climber=ClimberConfig(num_blocks=2, layers_per_block=2))
+    bundle = build_model(cfg)
+    params, _ = bundle.init(jax.random.key(0))
+    ks = jax.random.split(jax.random.key(1), 3)
+    batch = {"history": jax.random.randint(ks[0], (1, N_HIST), 0, VOCAB),
+             "side": jax.random.normal(ks[2], (1, 12))}
+    return cfg, bundle, params, batch
+
+
+def _s0(cfg):
+    return N_HIST // cfg.climber.num_blocks + 1
+
+
+def _pad_raw(kv, extra: int):
+    """Pad raw-view value leaves (NOT trailing-singleton scale leaves) by
+    ``extra`` sequence slots with junk, as the engine's beam caches do."""
+    return jax.tree.map(
+        lambda a: a if a.shape[-1] == 1 else jnp.pad(
+            a, [(0, 0), (0, 0), (0, extra), (0, 0), (0, 0)],
+            constant_values=3), kv)
+
+
+def test_decode_logits_root_bitwise_vs_score(climber_setup):
+    """Through the model surface on raw int8 views: decode at the root
+    length equals fused score_candidates bitwise, and the PADDED beam
+    cache (junk in the masked slots) decodes bitwise like the tight one."""
+    cfg, bundle, params, batch = climber_setup
+    kv = C.encode_history(params, batch, cfg, impl="reference")
+    raw = raw_kv_view(quantize_kv(kv, "int8")[0])
+    cand = jax.random.randint(jax.random.key(7), (1, 8), 0, VOCAB)
+    lengths = np.asarray([_s0(cfg)], np.int32)
+    want = np.asarray(bundle.score_candidates(params, raw, cand,
+                                              impl="fused"))
+    got = np.asarray(bundle.decode_logits(params, raw, cand, lengths,
+                                          impl="fused"))
+    np.testing.assert_array_equal(got, want)
+    padded = np.asarray(bundle.decode_logits(params, _pad_raw(raw, 5), cand,
+                                             lengths, impl="fused"))
+    np.testing.assert_array_equal(padded, want)
+
+
+def test_append_token_raw_keeps_root_scales(climber_setup):
+    """append_token on a raw int8 beam cache scatters the new token's
+    QUANTIZED K/V into the padded value leaves while the root scale leaves
+    pass through untouched (object-level: same shape, same values)."""
+    cfg, bundle, params, batch = climber_setup
+    kv = C.encode_history(params, batch, cfg, impl="reference")
+    raw = _pad_raw(raw_kv_view(quantize_kv(kv, "int8")[0]), 3)
+    lengths = np.asarray([_s0(cfg)], np.int32)
+    grown = bundle.append_token(params, raw, np.asarray([[5]], np.int32),
+                                lengths, impl="fused")
+    assert jax.tree.structure(grown) == jax.tree.structure(raw)
+    for a, b in zip(jax.tree.leaves(raw), jax.tree.leaves(grown)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        if a.shape[-1] == 1:                       # scale leaf: frozen
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:                                      # values: int8 stays int8
+            assert b.dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# 3. in-epilogue quantize == post-hoc quantize_kv, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["int8", "bf16", "native"])
+def test_quantize_kv_graph_bitwise(dtype):
+    """The jitted in-graph quantizer (the fused encode/extend epilogue)
+    emits exactly the raw view of quantize_kv: same tree structure, every
+    code and every scale bitwise identical."""
+    ks = jax.random.split(jax.random.key(3), 4)
+    kv = {"b0": {"k": jax.random.normal(ks[0], (2, 2, 9, 2, 16)) * 3.0,
+                 "v": jax.random.normal(ks[1], (2, 2, 9, 2, 16))},
+          "b1": {"k": jax.random.normal(ks[2], (2, 2, 9, 2, 16)) * 1e-6,
+                 "v": jnp.zeros((2, 2, 9, 2, 16))}}   # underflow floor arm
+    want = raw_kv_view(quantize_kv(kv, dtype)[0])
+    got = jax.jit(lambda t: quantize_kv_graph(t, dtype))(kv)
+    assert jax.tree.structure(got) == jax.tree.structure(want)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# 4. packer alignment + dispatch-path contract
+# ---------------------------------------------------------------------------
+
+def test_segment_packer_alignment_fuzz():
+    """align=8: every accepted offset is an 8-multiple and no 8-slot block
+    ever holds candidates of two different segments (the fused kernel's
+    per-q-block index-sampling contract, with bq == align)."""
+    rng = np.random.default_rng(0)
+    for trial in range(50):
+        bucket = int(rng.choice([16, 24, 32]))
+        p = SegmentPacker(bucket, max_rows=4, max_kv=6, align=8)
+        rows = {}                                  # row -> slot -> seg id
+        for seg in range(20):
+            valid = int(rng.integers(1, bucket + 1))
+            place = p.try_add(valid, ident=("u", seg % 5))
+            if place is None:
+                continue
+            row, off, _ = place
+            assert off % 8 == 0, (trial, seg, place)
+            assert off + valid <= bucket
+            for c in range(off, off + valid):
+                assert c not in rows.setdefault(row, {}), "overlap"
+                rows[row][c] = seg
+        for row, cols in rows.items():
+            for blk in range(0, bucket, 8):
+                segs = {cols[c] for c in range(blk, min(blk + 8, bucket))
+                        if c in cols}
+                assert len(segs) <= 1, (trial, row, blk, segs)
+
+
+def test_segment_packer_align1_is_legacy_first_fit():
+    """align=1 must reproduce the pre-FKE-v2 layouts exactly: first-fit
+    with no rounding (the non-fused packed families stay bitwise)."""
+    rng = np.random.default_rng(1)
+    p = SegmentPacker(16, max_rows=3, max_kv=32, align=1)
+    fills = []
+    for seg in range(40):
+        valid = int(rng.integers(1, 17))
+        got = p.try_add(valid, ident=seg)
+        row = next((i for i, f in enumerate(fills) if f + valid <= 16), None)
+        if row is None and len(fills) < 3:
+            row = len(fills)
+            fills.append(0)
+        if row is None:
+            assert got is None
+            continue
+        assert got is not None and got[0] == row and got[1] == fills[row]
+        fills[row] += valid
+    assert p.is_full() == all(f >= 16 for f in fills) and len(fills) == 3
+
+
+def test_set_packed_alignment_contract():
+    prev = fs_ops.set_packed_alignment(0)
+    try:
+        assert fs_ops.packed_alignment() == 0
+        assert fs_ops.set_packed_alignment(8) == 0
+        assert fs_ops.packed_alignment() == 8
+        assert fs_ops.set_packed_alignment(16) == 8
+        for bad in (4, -8, 7, 1):
+            with pytest.raises(ValueError):
+                fs_ops.set_packed_alignment(bad)
+        assert fs_ops.packed_alignment() == 16
+    finally:
+        fs_ops.set_packed_alignment(prev)
+
+
+def test_packed_2d_auto_path_no_reroute():
+    """With the alignment contract declared, a 2-D seg index on path="auto"
+    dispatches without counting a kernel->jnp reroute; without it, the
+    legacy reroute (and its counter) is preserved."""
+    t = _mk(41, b=2, m=16, h=2, hkv=2, d=16, s=24, u=3)
+    idx2 = jnp.asarray([[2] * 8 + [0] * 8, [1] * 8 + [2] * 8], jnp.int32)
+    # cached_reference has no 2-D gather; the jnp formulation (validated
+    # against it on 1-D indices above and in test_fke) is the oracle here
+    ref = fs_ops.fused_cached_attention(
+        t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"],
+        row_index=idx2, path="jnp")
+    prev = fs_ops.set_packed_alignment(8)
+    try:
+        before = fs_ops.packed_reroute_count()
+        got = fs_ops.fused_cached_attention(
+            t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"],
+            row_index=idx2, path="auto")
+        assert fs_ops.packed_reroute_count() == before, \
+            "aligned 2-D dispatch must not count a reroute"
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=TOL, rtol=TOL)
+        # the declared alignment also sizes bq for the explicit kernel path
+        gk = fs_ops.fused_cached_attention(
+            t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"],
+            row_index=idx2, path="kernel")
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(ref),
+                                   atol=TOL, rtol=TOL)
+        fs_ops.set_packed_alignment(0)
+        before = fs_ops.packed_reroute_count()
+        fs_ops.fused_cached_attention(
+            t["q"], t["k_hist"], t["v_hist"], t["k_cand"], t["v_cand"],
+            row_index=idx2, path="auto")
+        assert fs_ops.packed_reroute_count() == before + 1
+    finally:
+        fs_ops.set_packed_alignment(prev)
+
+
+# ---------------------------------------------------------------------------
+# 5. engine level
+# ---------------------------------------------------------------------------
+
+def _engine(bundle, params, **kw):
+    base = dict(n_history=N_HIST, buckets=(8, 4), n_streams=2,
+                feature_mode="off",
+                store=RemoteFeatureStore(latency_s=0.0, feature_dim=12),
+                window_s=0.01, max_batch=4, n_workers=4,
+                history_cache=True, pool_slots=32,
+                generate=6, gen_vocab=16)
+    base.update(kw)
+    return FlameEngine(bundle, params, **base)
+
+
+@pytest.fixture(scope="module")
+def engines(climber_setup):
+    cfg, bundle, params, _ = climber_setup
+    chunked = _engine(bundle, params, impl="chunked")
+    fused = _engine(bundle, params, impl="fused")
+    fused8 = _engine(bundle, params, impl="fused", pool_dtype="int8")
+    fused8p = _engine(bundle, params, impl="fused", pool_dtype="int8",
+                      pack_tails=True)
+    yield chunked, fused, fused8, fused8p
+    for e in (chunked, fused, fused8, fused8p):
+        e.shutdown()
+
+
+def _requests(n, seed=0, steps=4):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        m = int(rng.integers(3, 12))
+        reqs.append({
+            "history": rng.integers(0, VOCAB, N_HIST).astype(np.int32),
+            "candidates": rng.integers(0, VOCAB, m).astype(np.int32),
+            "user_id": int(i),
+            "generate": (TopKConfig(k=2, steps=steps) if i % 2 else
+                         BeamConfig(width=3, steps=steps)),
+        })
+    return reqs
+
+
+def test_fused_generate_matches_chunked_token_for_token(engines):
+    """Native pool: both engines run exact f32 math over the same stored
+    values, so fused top-k and beam sequences must reproduce the chunked
+    engine's token for token (the ISSUE's end-to-end sequence oracle)."""
+    chunked, fused, _, _ = engines
+    for r in _requests(6, seed=2):
+        want = chunked.serve(r["history"], candidates=r["candidates"],
+                             user_id=r["user_id"], generate=r["generate"])
+        got = fused.serve(r["history"], candidates=r["candidates"],
+                          user_id=r["user_id"], generate=r["generate"])
+        np.testing.assert_array_equal(got, want)
+    m = fused.metrics()
+    assert m["decode_steps"] > 0 and m["gen_tokens"] > 0
+
+
+def test_packed_fused_decode_equals_unpacked_zero_reroutes(engines):
+    """int8 pool: concurrent segment-packed fused decode emits bitwise the
+    unpacked fused engine's sequences, packs real segments, and never
+    reroutes a packed kernel dispatch to the jnp formulation (the bq
+    alignment contract holds end to end)."""
+    _, _, fused8, fused8p = engines
+    assert fused8p._pack_align == 8
+    reqs = _requests(6, seed=3)
+    want = [fused8.serve(r["history"], candidates=r["candidates"],
+                         user_id=r["user_id"], generate=r["generate"])
+            for r in reqs]
+    res = run_workload_async(fused8p, reqs)
+    for got, exp in zip(res["outputs"], want):
+        np.testing.assert_array_equal(got, exp)
+    m = fused8p.metrics()
+    assert m["dso_packed_segments"] > 0
+    assert m.get("packed_kernel_reroutes", 0) == 0
+    # plain candidate scoring through the same packed fused engine too:
+    # the packed layout traces a different graph shape for tail chunks, so
+    # XLA refuses bitwise here (2.4e-4, pre-existing, an order under the
+    # int8 envelope) — the token sequences above ARE bitwise
+    r0 = reqs[0]
+    a = fused8.serve(r0["history"], candidates=r0["candidates"], user_id=0)
+    b = fused8p.serve(r0["history"], candidates=r0["candidates"], user_id=0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-3, rtol=0)
+    assert fused8p.metrics().get("packed_kernel_reroutes", 0) == 0
+
+
+def test_eos_early_exit_truncation_oracle(engines):
+    """eos on TopKConfig: the greedy path is unchanged up to the first EOS
+    (the no-eos run is the oracle), the row is -1-padded after it, and the
+    skipped decode rounds are counted by gen_early_exits."""
+    _, fused, _, _ = engines
+    rng = np.random.default_rng(11)   # greedy seq [32,32,9,9,55]: EOS=9
+    hist = rng.integers(0, VOCAB, N_HIST).astype(np.int32)
+    uni = rng.integers(0, VOCAB, 9).astype(np.int32)
+    free = fused.serve(hist, candidates=uni, user_id=500,
+                       generate=TopKConfig(k=1, steps=5))
+    assert (free[0] >= 0).all()
+    # EOS must be a token whose FIRST occurrence is mid-sequence, else the
+    # run legitimately finishes at that earlier step
+    p = next(i for i in range(1, 4)
+             if int(free[0][i]) not in [int(x) for x in free[0][:i]])
+    eos = int(free[0][p])
+    before = fused.metrics().get("gen_early_exits", 0)
+    out = fused.serve(hist, candidates=uni, user_id=500,
+                      generate=TopKConfig(k=1, steps=5, eos=eos))
+    np.testing.assert_array_equal(out[0][:p + 1], free[0][:p + 1])
+    assert (out[0][p + 1:] == -1).all(), out
+    assert fused.metrics()["gen_early_exits"] == before + 1
+    # beam mode through the same eos plumbing still resolves
+    bout = fused.serve(hist, candidates=uni, user_id=501,
+                       generate=BeamConfig(width=2, steps=4, eos=eos))
+    assert bout.shape == (2, 4)
+
+
+def test_beam_wider_than_universe(engines):
+    """Beam search may run wider than the universe (hypotheses multiply
+    V-fold per step); fused and chunked agree on a native pool."""
+    chunked, fused, _, _ = engines
+    rng = np.random.default_rng(13)
+    hist = rng.integers(0, VOCAB, N_HIST).astype(np.int32)
+    uni = np.asarray([4, 9, 31], np.int32)           # |universe| = 3
+    gen = BeamConfig(width=6, steps=3)
+    want = chunked.serve(hist, candidates=uni, user_id=600, generate=gen)
+    got = fused.serve(hist, candidates=uni, user_id=600, generate=gen)
+    assert got.shape == (6, 3)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_all_zero_history_generates_finite(engines):
+    """An all-equal history drives every int8 scale toward one constant
+    (and side features toward degenerate rows): generation must still
+    resolve with valid tokens on the int8 fused engine."""
+    _, _, fused8, _ = engines
+    hist = np.zeros(N_HIST, np.int32)
+    uni = np.asarray([1, 2, 3, 5, 8], np.int32)
+    out = fused8.serve(hist, candidates=uni, user_id=700,
+                       generate=TopKConfig(k=2, steps=3))
+    assert out.shape == (2, 3)
+    assert np.isin(out, uni).all()

@@ -170,6 +170,63 @@ def test_tiered_shed_rejects_incoming_when_it_is_lowest():
         eng.shutdown()
 
 
+def test_retry_after_hint_on_shed_and_queue_full():
+    """Rejections price their own backoff: both shed flavours (displaced
+    victim + at-admission) and a plain full queue carry ``retry_after_s``
+    derived from the queue-delay EWMA, positive once the engine has
+    observed one service time."""
+    eng = _SleepEngine(service_s=0.05, n_workers=1, name="t", max_pending=2,
+                       shed_policy="tiered",
+                       slo_tier_defaults={"interactive": 5.0, "bulk": 50.0})
+    try:
+        eng.submit(_req(tier="bulk")).result(timeout=30)   # warm the EWMA
+        futs = [eng.submit(_req(tier="bulk")) for _ in range(3)]
+        with pytest.raises(ShedError) as ei:
+            eng.submit(_req(tier="bulk"))                  # incoming is shed
+        assert ei.value.retry_after_s and ei.value.retry_after_s > 0
+        int_fut = eng.submit(_req(tier="interactive"))     # displaces a bulk
+        for f in futs:
+            try:
+                f.result(timeout=30)                       # serviced, or...
+            except ShedError as err:                       # ...displaced
+                assert err.retry_after_s and err.retry_after_s > 0
+        int_fut.result(timeout=30)
+    finally:
+        eng.shutdown()
+    # shed_policy="none": the raw queue.Full path prices the same hint
+    eng = _SleepEngine(service_s=0.05, n_workers=1, name="t", max_pending=1)
+    try:
+        eng.submit(_req()).result(timeout=30)
+        with pytest.raises(RejectedError) as ei:
+            for _ in range(16):                            # race the worker
+                eng.submit(_req(), timeout=0)
+        assert ei.value.retry_after_s is not None
+        assert ei.value.retry_after_s > 0
+    finally:
+        eng.shutdown()
+
+
+def test_run_workload_async_surfaces_retry_hints():
+    """The workload driver aggregates backoff hints: an overloaded engine
+    driven with ``tolerate_errors=True`` reports how many rejections were
+    priced and their mean, instead of raising."""
+    eng = _SleepEngine(service_s=0.05, n_workers=1, name="t", max_pending=2,
+                       shed_policy="tiered",
+                       slo_tier_defaults={"standard": 30.0})
+    try:
+        eng.submit(_req()).result(timeout=30)              # warm the EWMA
+        reqs = [{"history": np.arange(8, dtype=np.int32),
+                 "candidates": np.arange(4, dtype=np.int32)}
+                for _ in range(12)]
+        res = run_workload_async(eng, reqs, tolerate_errors=True)
+        total_rej = res["rejected"] + res["failed"]
+        assert total_rej > 0 and res["hung"] == 0
+        assert res["retry_after_hinted"] > 0
+        assert res["retry_after_mean_ms"] > 0
+    finally:
+        eng.shutdown()
+
+
 def test_edf_beats_fifo_on_interactive_goodput():
     """The tentpole ordering claim at unit scale: a burst of bulk work ahead
     of a few interactive requests.  FIFO strands the interactive tail past
